@@ -1,0 +1,135 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): boots the full
+//! serving stack — router, worker engine, TCP JSON-lines server — then
+//! drives batched requests over a real socket and reports latency,
+//! throughput, accuracy and KV memory, for Full Cache vs best-baseline vs
+//! +SqueezeAttention.
+//!
+//!     make artifacts && cargo run --release --example e2e_serving
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use squeezeattention::config::{PolicyKind, ServeConfig};
+use squeezeattention::coordinator::{server, RoutePolicy, Router};
+use squeezeattention::metrics::Histogram;
+use squeezeattention::util::bench::Table;
+use squeezeattention::util::Json;
+use squeezeattention::workload::{answer_accuracy, TraceSpec};
+
+struct ArmResult {
+    name: &'static str,
+    throughput: f64,
+    accuracy: f64,
+    p50: f64,
+    p95: f64,
+    wall: f64,
+}
+
+fn run_arm(name: &'static str, cfg: ServeConfig, n: usize) -> anyhow::Result<ArmResult> {
+    // Boot the full network stack for this arm.
+    let router = Arc::new(Router::spawn(cfg, 1, RoutePolicy::LeastLoaded)?);
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        let _ = server::serve(listener, router);
+    });
+
+    let items = TraceSpec::closed(n, 144, 32, 11).generate();
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    let t0 = std::time::Instant::now();
+    // Pipeline all requests on one connection (the worker micro-batches).
+    for (i, it) in items.iter().enumerate() {
+        let prompt: Vec<String> = it.sample.prompt.iter().map(|t| t.to_string()).collect();
+        writeln!(
+            writer,
+            "{{\"id\": {i}, \"prompt\": [{}], \"max_new_tokens\": {}}}",
+            prompt.join(","),
+            it.max_new_tokens
+        )?;
+    }
+    let mut lat = Histogram::new();
+    let mut acc_sum = 0.0;
+    let mut acc_n = 0;
+    let mut gen_tokens = 0usize;
+    for _ in 0..n {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let j = Json::parse(&line)?;
+        let id = j.req("id")?.as_usize().unwrap();
+        let generated: Vec<i32> = j
+            .req("generated")?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|v| v.as_i64().map(|x| x as i32))
+            .collect();
+        gen_tokens += generated.len();
+        lat.record(j.req("total_s")?.as_f64().unwrap());
+        let a = answer_accuracy(&items[id].sample, &generated);
+        if a.is_finite() {
+            acc_sum += a;
+            acc_n += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(ArmResult {
+        name,
+        throughput: gen_tokens as f64 / wall,
+        accuracy: acc_sum / acc_n.max(1) as f64,
+        p50: lat.p50(),
+        p95: lat.p95(),
+        wall,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let n: usize = std::env::var("SA_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    println!("e2e serving driver: {n} mixed-task requests over TCP per arm\n");
+
+    let arms: Vec<(&'static str, ServeConfig)> = vec![
+        ("full-cache", ServeConfig::new("artifacts/tiny").with_policy(PolicyKind::Full)),
+        (
+            "sliding@30% (baseline)",
+            ServeConfig::new("artifacts/tiny")
+                .with_policy(PolicyKind::SlidingWindow)
+                .with_budget_frac(0.3)
+                .with_squeeze(false),
+        ),
+        (
+            "sliding@20% +squeeze",
+            ServeConfig::new("artifacts/tiny")
+                .with_policy(PolicyKind::SlidingWindow)
+                .with_budget_frac(0.2)
+                .with_squeeze(true),
+        ),
+    ];
+
+    let mut table = Table::new(&["arm", "tok/s", "accuracy", "p50 lat", "p95 lat", "wall s"]);
+    for (name, cfg) in arms {
+        let r = run_arm(name, cfg, n)?;
+        println!(
+            "{:24} {:6.1} tok/s  acc {:.3}  p50 {:.2}s  p95 {:.2}s",
+            r.name, r.throughput, r.accuracy, r.p50, r.p95
+        );
+        table.row(vec![
+            r.name.into(),
+            format!("{:.1}", r.throughput),
+            format!("{:.3}", r.accuracy),
+            format!("{:.2}s", r.p50),
+            format!("{:.2}s", r.p95),
+            format!("{:.1}", r.wall),
+        ]);
+    }
+    println!("\nE2E summary (full stack: TCP -> router -> engine -> PJRT):");
+    table.print();
+    table.write_csv("reports/e2e_serving.csv")?;
+    Ok(())
+}

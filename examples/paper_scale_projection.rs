@@ -1,0 +1,84 @@
+//! Paper-scale what-if explorer: run the A100 cost model over the whole
+//! model zoo (the 7 models the paper evaluates) and print memory/throughput/
+//! OOM projections for Full Cache vs SqueezeAttention. No artifacts needed.
+//!
+//!     cargo run --release --example paper_scale_projection
+
+use squeezeattention::simulator::{
+    per_token_kv_bytes, simulate_decode, KvPolicy, A100_40GB_X8, ZOO,
+};
+use squeezeattention::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cluster = A100_40GB_X8;
+    let (prompt, gen) = (512usize, 1024usize);
+    let seq = prompt + gen;
+
+    println!("== per-token KV bytes across the zoo (seq {seq}) ==");
+    let mut mem = Table::new(&["model", "layers", "kv B/token (full)", "squeeze@20%", "saving"]);
+    for model in ZOO {
+        let full = per_token_kv_bytes(model, &KvPolicy::Full, seq);
+        let sq_policy =
+            KvPolicy::squeeze(model.n_layer, model.n_layer / 2, (seq as f64 * 0.2) as usize, 0.35);
+        let sq = per_token_kv_bytes(model, &sq_policy, seq);
+        mem.row(vec![
+            model.name.into(),
+            model.n_layer.to_string(),
+            format!("{full:.0}"),
+            format!("{sq:.0}"),
+            format!("-{:.0}%", (1.0 - sq / full) * 100.0),
+        ]);
+    }
+    mem.print();
+
+    println!("\n== max batch before OOM on {} ==", cluster.name);
+    let mut oom = Table::new(&["model", "full-cache max batch", "squeeze max batch", "gain"]);
+    for model in ZOO {
+        let sq_policy =
+            KvPolicy::squeeze(model.n_layer, model.n_layer / 2, (seq as f64 * 0.2) as usize, 0.35);
+        let max_batch = |policy: &KvPolicy| {
+            let mut best = 0usize;
+            for b in (1..=4096).step_by(1) {
+                if simulate_decode(model, &cluster, policy, b, prompt, gen).tokens_per_s.is_some() {
+                    best = b;
+                } else {
+                    break;
+                }
+            }
+            best
+        };
+        let f = max_batch(&KvPolicy::Full);
+        let s = max_batch(&sq_policy);
+        oom.row(vec![
+            model.name.into(),
+            f.to_string(),
+            s.to_string(),
+            if f == 0 { "weights do not fit".into() } else { format!("{:.1}x", s as f64 / f as f64) },
+        ]);
+    }
+    oom.print();
+
+    println!("\n== throughput at the paper's Table-3 operating points ==");
+    let mut tp = Table::new(&["model", "batch", "full tok/s", "squeeze tok/s", "speedup"]);
+    for (model, batch) in [(&ZOO[0], 128usize), (&ZOO[0], 224), (&ZOO[2], 32), (&ZOO[2], 64)] {
+        let sq_policy =
+            KvPolicy::squeeze(model.n_layer, model.n_layer / 2, (seq as f64 * 0.2) as usize, 0.35);
+        let full = simulate_decode(model, &cluster, &KvPolicy::Full, batch, prompt, gen);
+        let sq = simulate_decode(model, &cluster, &sq_policy, batch, prompt, gen);
+        let fmt = |t: Option<f64>| t.map(|x| format!("{x:.0}")).unwrap_or_else(|| "OOM".into());
+        let speedup = match (full.tokens_per_s, sq.tokens_per_s) {
+            (Some(f), Some(s)) => format!("{:.2}x", s / f),
+            (None, Some(_)) => "∞ (full OOM)".into(),
+            _ => "-".into(),
+        };
+        tp.row(vec![
+            model.name.into(),
+            batch.to_string(),
+            fmt(full.tokens_per_s),
+            fmt(sq.tokens_per_s),
+            speedup,
+        ]);
+    }
+    tp.print();
+    Ok(())
+}

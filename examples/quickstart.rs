@@ -1,0 +1,43 @@
+//! Quickstart: load the compiled tiny model, serve one request with
+//! SqueezeAttention enabled, and inspect the layer-budget plan it produced.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use squeezeattention::config::{PolicyKind, ServeConfig};
+use squeezeattention::coordinator::{Engine, Request};
+use squeezeattention::model::tokenizer;
+use squeezeattention::workload::{answer_accuracy, trim_at_eos, Task, TaskGen};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Engine over the AOT artifacts (PJRT CPU client + HLO-text load).
+    let cfg = ServeConfig::new("artifacts/tiny")
+        .with_policy(PolicyKind::SlidingWindow) // sequence-wise C_seq
+        .with_budget_frac(0.25); // b_init = 25% of the prompt
+    let mut engine = Engine::new(cfg)?;
+
+    // 2. A lookup task: "k1=v1; k2=v2; ... <q> k3 <a>" — answer the query.
+    let mut gen = TaskGen::new(42);
+    let sample = gen.sample(Task::Lookup, 120);
+    println!("prompt  : {}", tokenizer::render(&sample.prompt));
+    println!("expected: {}", tokenizer::render(&sample.answer));
+
+    // 3. Generate.
+    let outs = engine.generate_batch(vec![Request::new(0, sample.prompt.clone(), 8)]);
+    let out = &outs[0];
+    println!("got     : {}", tokenizer::render(trim_at_eos(&out.generated)));
+    println!("accuracy: {:.2}", answer_accuracy(&sample, &out.generated));
+    println!("finish  : {:?} in {:.2}s (prefill {:.3}s, squeeze ops {:.6}s)",
+             out.finish, out.timing.total_s, out.timing.prefill_s, out.timing.squeeze_s);
+
+    // 4. The 2-D part: per-layer budgets Algorithm 1 allocated for THIS prompt.
+    println!("\nlayer-budget plan (b_init = {} tokens):", out.plan.total() / out.plan.budgets.len());
+    for (l, (&b, &g)) in out.plan.budgets.iter().zip(&out.plan.groups).enumerate() {
+        println!(
+            "  layer {l}: budget {b:4}  group G{}  mean-cosine {:.4}",
+            g + 1,
+            out.plan.layer_means[l]
+        );
+    }
+    println!("reallocated: {}  | total conserved: {} tokens", out.plan.reallocated, out.plan.total());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! LongBench-style evaluation: every task × every eviction policy, with and
+//! without SqueezeAttention, at one budget — the cross-product view that
+//! Fig. 3 summarizes per-task.
+//!
+//!     make artifacts && cargo run --release --example serve_longbench
+
+use squeezeattention::config::{PolicyKind, ServeConfig};
+use squeezeattention::coordinator::Engine;
+use squeezeattention::util::bench::Table;
+use squeezeattention::workload::{evaluate, EvalSpec, ALL_TASKS};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let budget_frac: f64 =
+        std::env::var("SA_BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(0.25);
+    let n: usize = std::env::var("SA_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
+
+    let mut eng = Engine::new(ServeConfig::new("artifacts/tiny"))?;
+    let policies =
+        [PolicyKind::SlidingWindow, PolicyKind::StreamingLlm, PolicyKind::H2o];
+
+    let mut table = Table::new(&["task", "policy", "baseline acc", "+squeeze acc", "delta"]);
+    for task in ALL_TASKS {
+        let spec = EvalSpec::new(task, n, 160, 32, 123);
+        for policy in policies {
+            let base = evaluate(
+                &mut eng,
+                ServeConfig::new("artifacts/tiny")
+                    .with_policy(policy)
+                    .with_budget_frac(budget_frac)
+                    .with_squeeze(false),
+                &spec,
+            )?;
+            let sq = evaluate(
+                &mut eng,
+                ServeConfig::new("artifacts/tiny")
+                    .with_policy(policy)
+                    .with_budget_frac(budget_frac)
+                    .with_squeeze(true),
+                &spec,
+            )?;
+            println!(
+                "{:9} x {:13}  baseline {:.3}  +squeeze {:.3}",
+                task.name(),
+                policy.name(),
+                base.accuracy,
+                sq.accuracy
+            );
+            table.row(vec![
+                task.name().into(),
+                policy.name().into(),
+                format!("{:.3}", base.accuracy),
+                format!("{:.3}", sq.accuracy),
+                format!("{:+.3}", sq.accuracy - base.accuracy),
+            ]);
+        }
+    }
+    println!("\nLongBench-style grid @ {:.0}% budget:", budget_frac * 100.0);
+    table.print();
+    table.write_csv("reports/longbench_grid.csv")?;
+    Ok(())
+}

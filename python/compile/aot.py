@@ -1,0 +1,207 @@
+"""AOT pipeline: lower prefill/decode graphs to HLO *text* artifacts.
+
+Interchange is HLO text, NOT `.serialize()` — the image's xla_extension 0.5.1
+rejects jax>=0.5's 64-bit-instruction-id protos; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Weights are *runtime inputs*, not baked constants: baking ~1.8M f32 constants
+into HLO text makes multi-MB artifacts and slow parses. The rust runtime
+uploads the weight set once as device buffers at load time and passes them to
+every execute_b call, so there is no per-step weight traffic either. Weight
+layout ships as artifacts/<cfg>/weights.bin (raw f32 LE, concatenated in
+manifest order) + the index inside manifest.json.
+
+Artifact set per model config:
+  prefill_<kernel>_l<L>.hlo.txt      L in PREFILL_BUCKETS, b=1
+  decode_<kernel>_b<B>_m<M>.hlo.txt  (B, M) in DECODE_TIERS
+  manifest.json                      model cfg, token map, weight index, list
+  weights.bin
+
+The capacity tiers are how the paper's memory saving becomes a throughput
+saving on a static-shape runtime: a squeezed run binds a small-M executable
+and moves less KV per step (DESIGN.md §2).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tasks
+from . import train as T
+
+PREFILL_BUCKETS = [64, 128, 256, 512]
+# (B, M) decode tiers. M=640 fits prompt<=512 + gen<=120 with full cache;
+# smaller M tiers serve compressed-budget runs.
+DECODE_TIERS = [(1, 640), (2, 640), (4, 640), (8, 640),
+                (8, 320), (8, 192), (8, 128), (8, 96), (8, 64),
+                (4, 320), (4, 192), (4, 128), (4, 64),
+                (16, 192), (16, 128)]
+# Kernel-ablation artifacts (jnp oracle path) — small set, used by the
+# ablation bench to compare pallas-lowered HLO vs plain-jnp HLO.
+JNP_ABLATION_PREFILL = [256]
+JNP_ABLATION_DECODE = [(8, 192)]
+
+WEIGHT_KEYS = ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"]
+
+
+def weight_order(cfg):
+    names = ["embed", "ln_f"]
+    for i in range(cfg.n_layer):
+        names += [f"layers.{i}.{k}" for k in WEIGHT_KEYS]
+    return names
+
+
+def params_to_list(cfg, params):
+    flat = T.flatten_params(params)
+    return [flat[n] for n in weight_order(cfg)]
+
+
+def list_to_params(cfg, lst):
+    names = weight_order(cfg)
+    flat = dict(zip(names, lst))
+    return T.unflatten_params(cfg, flat)
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg, L, kernel):
+    def fn(*args):
+        weights = args[:-2]
+        tokens, valid_len = args[-2], args[-1]
+        params = list_to_params(cfg, weights)
+        return M.prefill_fn(params, cfg, tokens, valid_len, kernel=kernel)
+
+    wspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in weight_shapes(cfg)]
+    specs = wspecs + [jax.ShapeDtypeStruct((L,), jnp.int32),
+                      jax.ShapeDtypeStruct((), jnp.int32)]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_decode(cfg, B, Mcap, kernel):
+    H, D = cfg.n_head, cfg.head_dim
+
+    def fn(*args):
+        weights = args[:-5]
+        tokens, positions, k_cache, v_cache, cache_lens = args[-5:]
+        params = list_to_params(cfg, weights)
+        return M.decode_fn(params, cfg, tokens, positions, k_cache, v_cache,
+                           cache_lens, kernel=kernel)
+
+    wspecs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in weight_shapes(cfg)]
+    specs = wspecs + [
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.n_layer, B, Mcap, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_layer, B, Mcap, H, D), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_layer, B), jnp.int32),
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def weight_shapes(cfg):
+    d, f, v = cfg.d_model, cfg.ffn_mult * cfg.d_model, cfg.vocab
+    shapes = [(v, d), (d,)]
+    per_layer = {"ln1": (d,), "wq": (d, d), "wk": (d, d), "wv": (d, d),
+                 "wo": (d, d), "ln2": (d,), "w1": (d, f), "w2": (f, d)}
+    for _ in range(cfg.n_layer):
+        shapes += [per_layer[k] for k in WEIGHT_KEYS]
+    return shapes
+
+
+def load_or_init_params(cfg, weights_path, seed=0):
+    if weights_path and os.path.exists(weights_path):
+        flat = dict(np.load(weights_path))
+        print(f"loaded trained weights from {weights_path}")
+        return T.unflatten_params(cfg, flat), True
+    print("WARNING: no trained weights found; using deterministic random init")
+    return M.init_params(cfg, jax.random.PRNGKey(seed)), False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny", choices=list(M.CONFIGS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--weights", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="only the artifacts needed by tests/quickstart")
+    args = ap.parse_args()
+
+    cfg = M.CONFIGS[args.config]
+    out = os.path.join(args.out_dir, cfg.name)
+    os.makedirs(out, exist_ok=True)
+    weights_path = args.weights or os.path.join(args.out_dir,
+                                                f"weights_{cfg.name}.npz")
+    params, trained = load_or_init_params(cfg, weights_path)
+
+    # --- weights.bin ---------------------------------------------------
+    order = weight_order(cfg)
+    arrays = params_to_list(cfg, params)
+    windex, off = [], 0
+    with open(os.path.join(out, "weights.bin"), "wb") as f:
+        for name, arr in zip(order, arrays):
+            a = np.asarray(arr, np.float32)
+            f.write(a.tobytes())
+            windex.append({"name": name, "shape": list(a.shape),
+                           "offset": off, "len": int(a.size)})
+            off += a.size
+
+    # --- HLO artifacts --------------------------------------------------
+    prefill_buckets = PREFILL_BUCKETS if not args.fast else [64, 128]
+    decode_tiers = DECODE_TIERS if not args.fast else [(1, 640), (4, 192)]
+    entries = []
+
+    def emit(name, lowered, meta):
+        t0 = time.time()
+        text = to_hlo_text(lowered)
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({"file": name, **meta})
+        print(f"  {name}: {len(text)} chars ({time.time() - t0:.1f}s)",
+              flush=True)
+
+    for L in prefill_buckets:
+        emit(f"prefill_pallas_l{L}.hlo.txt", lower_prefill(cfg, L, "pallas"),
+             {"kind": "prefill", "kernel": "pallas", "len": L})
+    for (B, Mcap) in decode_tiers:
+        emit(f"decode_pallas_b{B}_m{Mcap}.hlo.txt",
+             lower_decode(cfg, B, Mcap, "pallas"),
+             {"kind": "decode", "kernel": "pallas", "batch": B, "cap": Mcap})
+    if not args.fast:
+        for L in JNP_ABLATION_PREFILL:
+            emit(f"prefill_jnp_l{L}.hlo.txt", lower_prefill(cfg, L, "jnp"),
+                 {"kind": "prefill", "kernel": "jnp", "len": L})
+        for (B, Mcap) in JNP_ABLATION_DECODE:
+            emit(f"decode_jnp_b{B}_m{Mcap}.hlo.txt",
+                 lower_decode(cfg, B, Mcap, "jnp"),
+                 {"kind": "decode", "kernel": "jnp", "batch": B, "cap": Mcap})
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "trained": trained,
+        "tokens": {"pad": tasks.PAD, "bos": tasks.BOS, "sep": tasks.SEP,
+                   "query": tasks.QUERY, "answer": tasks.ANSWER,
+                   "eos": tasks.EOS, "mark": tasks.MARK,
+                   "equals": tasks.EQUALS, "comma": tasks.COMMA},
+        "weights": {"file": "weights.bin", "dtype": "f32", "index": windex},
+        "artifacts": entries,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels + pure-jnp oracles.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is pinned to kernels.ref by the pytest suite.
+"""
+
+from .cosine_tracker import cosine_rows
+from .decode_attention import decode_attention
+from .flash_prefill import flash_prefill
+
+__all__ = ["cosine_rows", "decode_attention", "flash_prefill"]

@@ -1,0 +1,45 @@
+"""Pallas row-wise cosine-similarity tracker (Layer 1).
+
+The SqueezeAttention layer-importance probe: for every token position, the
+cosine similarity between the residual stream entering a self-attention block
+and the stream leaving it (Eq. 5 of the paper). The prefill graph calls this
+once per layer; the rust coordinator averages over valid prompt tokens and
+feeds the per-layer means to 1-D k-means.
+
+Blocked over rows so the tile (2 × block_rows × D) stays VMEM-resident; the
+reduction over D happens entirely in-tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cosine_kernel(a_ref, b_ref, o_ref, *, eps):
+    a = a_ref[...]  # [block_rows, D]
+    b = b_ref[...]
+    dot = (a * b).sum(axis=-1)
+    na = jnp.sqrt((a * a).sum(axis=-1))
+    nb = jnp.sqrt((b * b).sum(axis=-1))
+    o_ref[...] = dot / (na * nb + eps)
+
+
+def cosine_rows(a, b, *, block_rows=64, eps=1e-8, interpret=True):
+    """Row-wise cosine similarity between [L, D] matrices -> [L]."""
+    L, D = a.shape
+    if L % block_rows:
+        raise ValueError(f"L={L} must be a multiple of block_rows={block_rows}")
+    kernel = functools.partial(_cosine_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(L // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,80 @@
+"""Pallas budget-masked decode attention (Layer 1).
+
+One grid step per sequence slot: the new token's query attends to that
+sequence's padded KV-cache prefix (`cache_len` valid slots out of capacity M),
+and — in the same pass — emits the per-slot attention probability mass summed
+over heads. That second output is the accumulation signal the rust coordinator
+feeds the H2O (Heavy-Hitter) eviction policy, so H2O costs nothing extra on the
+request path.
+
+Unlike the prefill kernel this one is deliberately single-shot (no online
+softmax): M is the *compressed* per-layer budget, small by construction of the
+paper's technique, so one sequence's full [M, H, D] stripe fits comfortably in
+VMEM (640×4×32 f32 ≈ 320 KiB for the largest shipped tier).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, s_ref, *, scale):
+    cache_len = len_ref[0, 0]
+    q = q_ref[0] * scale                    # [H, D]
+    k = k_ref[0]                            # [M, H, D]
+    v = v_ref[0]
+    M = k.shape[0]
+
+    logits = jnp.einsum("hd,mhd->hm", q, k)  # [H, M]
+    slot = jax.lax.iota(jnp.int32, M)
+    valid = slot < cache_len                 # [M]
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / e.sum(axis=-1, keepdims=True)
+    active = cache_len > 0
+    probs = jnp.where(active, probs, 0.0)    # kill garbage from empty slots
+    o_ref[0] = jnp.einsum("hm,mhd->hd", probs, v)
+    s_ref[0] = probs.sum(axis=0)             # [M] — H2O mass per cache slot
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, scale=None,
+                     interpret=True):
+    """Batched single-token attention over padded per-sequence caches.
+
+    Args:
+      q: [B, H, D] f32.
+      k_cache, v_cache: [B, M, H, D] f32, valid-prefix padded.
+      cache_len: [B] int32 — valid slots per sequence (0 = inactive slot).
+    Returns:
+      out: [B, H, D] f32 (zeros for inactive slots).
+      scores: [B, M] f32 — per-slot attention mass summed over heads.
+    """
+    B, M, H, D = k_cache.shape
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    lens = cache_len.astype(jnp.int32).reshape((B, 1))
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, H, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, M, H, D), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, M, H, D), lambda b: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, M), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)

@@ -1,0 +1,98 @@
+"""Pallas flash-style causal prefill attention (Layer 1).
+
+TPU mapping of the hot spot (see DESIGN.md §Hardware-Adaptation): the grid is
+(heads, query-blocks); BlockSpec streams one query tile plus this head's full
+K/V stripe through VMEM, and an online-softmax fori_loop walks the KV stripe in
+`block_k` tiles so the L×L score matrix is never materialized in HBM. On a real
+TPU the (block_q × block_k) partial matmuls are MXU-shaped; here the kernel is
+executed with interpret=True (the CPU PJRT plugin cannot run Mosaic
+custom-calls) and validated against kernels.ref.causal_attention.
+
+VMEM footprint per grid step (f32):
+  q tile        block_q × D
+  K,V stripe    2 × L × D
+  accumulators  block_q × (D + 2)
+For the shipped configs (L ≤ 640, D = 32, block_q = 64) that is ~180 KiB —
+far under the ~16 MiB VMEM budget, leaving room for double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(vlen_ref, q_ref, k_ref, v_ref, o_ref, *, block_q, block_k,
+                  kv_len, scale):
+    qi = pl.program_id(1)
+    vlen = vlen_ref[0]
+
+    q = q_ref[:, 0, :] * scale  # [block_q, D]
+    d = q.shape[-1]
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # global q rows
+
+    num_kv_blocks = kv_len // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(j * block_k, block_k), 0, :]  # [block_k, D]
+        v = v_ref[pl.dslice(j * block_k, block_k), 0, :]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.dot(q, k.T)  # [block_q, block_k]
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < vlen)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kv_blocks, body, (m0, l0, acc0))
+    # Padded query rows (q_pos >= vlen) still have l > 0 because the causal
+    # diagonal element survives the mask only when k_pos < vlen; fully masked
+    # rows end with l == 0 — guard the division.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[:, 0, :] = acc / l[:, None]
+
+
+def flash_prefill(q, k, v, valid_len, *, block_q=64, block_k=64, scale=None,
+                  interpret=True):
+    """Tiled causal attention over a (possibly padded) prompt.
+
+    Args:
+      q, k, v: [L, H, D] f32. L must be a multiple of block_q and block_k.
+      valid_len: scalar int32 — key positions >= valid_len are padding.
+    Returns:
+      out: [L, H, D] f32 (rows >= valid_len are unspecified padding).
+    """
+    L, H, D = q.shape
+    if L % block_q or L % block_k:
+        raise ValueError(f"L={L} must be a multiple of block_q/block_k")
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    vlen = jnp.asarray(valid_len, jnp.int32).reshape((1,))
+    kernel = functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                               kv_len=L, scale=scale)
+    grid = (H, L // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+            pl.BlockSpec((block_q, 1, D), lambda h, i: (i, h, 0)),
+            pl.BlockSpec((L, 1, D), lambda h, i: (0, h, 0)),
+            pl.BlockSpec((L, 1, D), lambda h, i: (0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1, D), lambda h, i: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, H, D), jnp.float32),
+        interpret=interpret,
+    )(vlen, q, k, v)

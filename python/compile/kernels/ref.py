@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package is
+checked against the corresponding function here (pytest + hypothesis sweeps in
+python/tests/). They are deliberately written in the most direct way possible —
+no tiling, no online softmax — so a mismatch always indicts the kernel.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_attention(q, k, v, valid_len=None, scale=None):
+    """Naive causal multi-head attention.
+
+    Args:
+      q, k, v: [L, H, D]
+      valid_len: optional scalar int — key positions >= valid_len are masked
+        out (padding of a bucketed prefill).
+      scale: optional softmax scale; defaults to 1/sqrt(D).
+    Returns:
+      out: [L, H, D]
+    """
+    L, H, D = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(D, q.dtype))
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale  # [H, Lq, Lk]
+    pos = jnp.arange(L)
+    causal = pos[None, :] <= pos[:, None]  # [Lq, Lk]
+    mask = causal[None, :, :]
+    if valid_len is not None:
+        kv_ok = pos[None, None, :] < valid_len
+        mask = jnp.logical_and(mask, kv_ok)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", probs, v)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, scale=None):
+    """Single-token decode attention against a padded KV cache.
+
+    Args:
+      q: [B, H, D] — the new token's query per sequence.
+      k_cache, v_cache: [B, M, H, D] — padded cache (valid prefix).
+      cache_len: [B] int — number of valid slots per sequence (0 => inactive
+        slot; output and scores are zeros).
+      scale: optional; defaults to 1/sqrt(D).
+    Returns:
+      out: [B, H, D]
+      scores: [B, M] — attention probability mass per cache slot, summed over
+        heads (the H2O accumulation signal).
+    """
+    B, M, H, D = k_cache.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(D, q.dtype))
+    logits = jnp.einsum("bhd,bmhd->bhm", q, k_cache) * scale
+    slot = jnp.arange(M)
+    valid = slot[None, :] < cache_len[:, None]  # [B, M]
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / e.sum(axis=-1, keepdims=True)
+    # Inactive sequences (cache_len == 0): all-masked softmax is garbage; zero it.
+    active = (cache_len > 0)[:, None, None]
+    probs = jnp.where(active, probs, 0.0)
+    out = jnp.einsum("bhm,bmhd->bhd", probs, v_cache)
+    scores = probs.sum(axis=1)  # [B, M]
+    return out, scores
+
+
+def cosine_rows(a, b, eps=1e-8):
+    """Row-wise cosine similarity between two [L, D] matrices -> [L]."""
+    dot = (a * b).sum(axis=-1)
+    na = jnp.sqrt((a * a).sum(axis=-1))
+    nb = jnp.sqrt((b * b).sum(axis=-1))
+    return dot / (na * nb + eps)

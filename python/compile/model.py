@@ -1,0 +1,236 @@
+"""Layer 2 — the JAX transformer whose prefill/decode graphs become artifacts.
+
+GPT-style decoder: RMSNorm pre-norm, rotary embeddings, multi-head attention
+(optionally grouped-query), GELU MLP, tied embedding/unembedding. Two entry
+points are AOT-lowered (aot.py) with the weights baked in as constants:
+
+  prefill_fn  one sequence, bucketed length L; returns next-token logits, the
+              full K/V cache, and the per-layer per-token cosine similarity of
+              the residual stream across the attention block — the
+              SqueezeAttention layer-importance probe (paper Eq. 5).
+  decode_fn   B sequence slots, one token each, attending to rust-owned padded
+              KV caches with per-layer valid lengths; returns logits, the new
+              K/V rows to append, and per-slot attention mass (H2O signal).
+
+`kernel="pallas"` routes attention + cosine through the Layer-1 Pallas kernels
+(interpret=True; the shipped artifacts), `kernel="jnp"` through the pure-jnp
+oracles (training fast-path and the kernel-ablation artifacts).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import tasks
+from .kernels import cosine_rows as _pl_cosine_rows
+from .kernels import decode_attention as _pl_decode_attention
+from .kernels import flash_prefill as _pl_flash_prefill
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    n_layer: int = 8
+    d_model: int = 128
+    n_head: int = 4
+    vocab: int = tasks.VOCAB
+    ffn_mult: int = 4
+    max_seq: int = 640
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_head
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+CONFIGS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(name="small", n_layer=12, d_model=256, n_head=8),
+}
+
+
+def init_params(cfg, key):
+    """Deterministic init; scaled like GPT-2 (residual projections damped)."""
+    keys = jax.random.split(key, 2 + cfg.n_layer)
+    s = cfg.d_model ** -0.5
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "layers": [],
+    }
+    resid = (2 * cfg.n_layer) ** -0.5
+    for i in range(cfg.n_layer):
+        k = jax.random.split(keys[2 + i], 6)
+        d, f = cfg.d_model, cfg.ffn_mult * cfg.d_model
+        params["layers"].append({
+            "ln1": jnp.ones((d,)),
+            "wq": jax.random.normal(k[0], (d, d)) * s,
+            "wk": jax.random.normal(k[1], (d, d)) * s,
+            "wv": jax.random.normal(k[2], (d, d)) * s,
+            "wo": jax.random.normal(k[3], (d, d)) * s * resid,
+            "ln2": jnp.ones((d,)),
+            "w1": jax.random.normal(k[4], (d, f)) * s,
+            "w2": jax.random.normal(k[5], (f, d)) * (f ** -0.5) * resid,
+        })
+    return params
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [..., H, D]; positions broadcastable to x[..., :-2]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(layer, x, cfg):
+    H, D = cfg.n_head, cfg.head_dim
+    q = (x @ layer["wq"]).reshape(*x.shape[:-1], H, D)
+    k = (x @ layer["wk"]).reshape(*x.shape[:-1], H, D)
+    v = (x @ layer["wv"]).reshape(*x.shape[:-1], H, D)
+    return q, k, v
+
+
+def _mlp(layer, x):
+    return jax.nn.gelu(x @ layer["w1"]) @ layer["w2"]
+
+
+def prefill_fn(params, cfg, tokens, valid_len, kernel="pallas"):
+    """Prefill one sequence of bucketed length L.
+
+    Args:
+      tokens: [L] int32 (PAD beyond valid_len).
+      valid_len: scalar int32.
+    Returns:
+      logits:   [vocab]           next-token logits at position valid_len - 1
+      k_cache:  [n_layer, L, H, D]  (RoPE already applied to K)
+      v_cache:  [n_layer, L, H, D]
+      cos_sims: [n_layer, L]      residual cosine across each attention block
+    """
+    L = tokens.shape[0]
+    positions = jnp.arange(L, dtype=jnp.int32)
+    x = params["embed"][tokens]  # [L, d]
+    ks, vs, sims = [], [], []
+    for layer in params["layers"]:
+        h = rmsnorm(x, layer["ln1"])
+        q, k, v = _qkv(layer, h, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if kernel == "pallas":
+            attn = _pl_flash_prefill(q, k, v, valid_len)
+        else:
+            attn = ref.causal_attention(q, k, v, valid_len)
+        attn = attn.reshape(L, cfg.d_model) @ layer["wo"]
+        x_new = x + attn
+        if kernel == "pallas":
+            sims.append(_pl_cosine_rows(x, x_new))
+        else:
+            sims.append(ref.cosine_rows(x, x_new))
+        x = x_new
+        x = x + _mlp(layer, rmsnorm(x, layer["ln2"]))
+        ks.append(k)
+        vs.append(v)
+    x = rmsnorm(x, params["ln_f"])
+    last = x[valid_len - 1]  # [d]
+    logits = last @ params["embed"].T
+    return (logits, jnp.stack(ks), jnp.stack(vs), jnp.stack(sims))
+
+
+def decode_fn(params, cfg, tokens, positions, k_cache, v_cache, cache_lens,
+              kernel="pallas"):
+    """One decode step for B sequence slots.
+
+    Args:
+      tokens:     [B] int32 (garbage for inactive slots).
+      positions:  [B] int32 absolute positions of the new tokens.
+      k_cache, v_cache: [n_layer, B, M, H, D] valid-prefix padded.
+      cache_lens: [n_layer, B] int32 valid slots (0 = inactive).
+    Returns:
+      logits: [B, vocab]
+      new_k, new_v: [n_layer, B, H, D] rows to append (K rotated).
+      scores: [n_layer, B, M] per-slot attention mass (H2O signal).
+    """
+    B = tokens.shape[0]
+    x = params["embed"][tokens]  # [B, d]
+    new_ks, new_vs, score_list = [], [], []
+    for i, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["ln1"])
+        q, k, v = _qkv(layer, h, cfg)  # [B, H, D]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # The new token attends to the cache PLUS itself: fold itself in by
+        # placing (k, v) at slot cache_len. Rust owns the real append; inside
+        # the step we attend to cache ++ self via a scatter into the padded
+        # buffer (cache_len < M always holds — rust evicts *before* the step
+        # whenever a layer is at budget).
+        lens = cache_lens[i]  # [B]
+        bidx = jnp.arange(B)
+        kc = k_cache[i].at[bidx, lens].set(k)
+        vc = v_cache[i].at[bidx, lens].set(v)
+        attend_lens = jnp.where(lens > 0, lens + 1, 0)  # inactive stays 0
+        if kernel == "pallas":
+            attn, scores = _pl_decode_attention(q, kc, vc, attend_lens)
+        else:
+            attn, scores = ref.decode_attention(q, kc, vc, attend_lens)
+        attn = attn.reshape(B, cfg.d_model) @ layer["wo"]
+        x = x + attn
+        x = x + _mlp(layer, rmsnorm(x, layer["ln2"]))
+        new_ks.append(k)
+        new_vs.append(v)
+        score_list.append(scores)
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    return (logits, jnp.stack(new_ks), jnp.stack(new_vs), jnp.stack(score_list))
+
+
+def lm_loss(params, cfg, tokens, mask):
+    """Training loss: next-token CE, weighted by mask. tokens: [B, T]."""
+    B, T = tokens.shape
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x = params["embed"][tokens]
+    for layer in params["layers"]:
+        h = rmsnorm(x, layer["ln1"])
+        q, k, v = jax.vmap(lambda hh: _qkv(layer, hh, cfg))(h)
+        q = jax.vmap(lambda qq: rope(qq, positions, cfg.rope_theta))(q)
+        k = jax.vmap(lambda kk: rope(kk, positions, cfg.rope_theta))(k)
+        attn = jax.vmap(ref.causal_attention)(q, k, v)
+        x = x + attn.reshape(B, T, cfg.d_model) @ layer["wo"]
+        x = x + _mlp(layer, rmsnorm(x, layer["ln2"]))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T  # [B, T, V]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    w = mask[:, 1:] * (targets != tasks.PAD)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def make_prefill(params, cfg, L, kernel="pallas"):
+    """Close over params/cfg -> jittable (tokens[L], valid_len) fn."""
+    def fn(tokens, valid_len):
+        return prefill_fn(params, cfg, tokens, valid_len, kernel=kernel)
+    return fn
+
+
+def make_decode(params, cfg, B, M, kernel="pallas"):
+    def fn(tokens, positions, k_cache, v_cache, cache_lens):
+        return decode_fn(params, cfg, tokens, positions, k_cache, v_cache,
+                         cache_lens, kernel=kernel)
+    return fn

@@ -1,0 +1,154 @@
+"""Synthetic task suite — the stand-in for the paper's five datasets.
+
+The paper evaluates on CNN/DailyMail, XSUM, SAMSUM, TriviaQA, NarrativeQA.
+We have no HF/network access, so we substitute five token-level tasks with
+*exactly measurable* answers, chosen so that each stresses a different
+token-importance pattern — the property on which the sequence-wise baselines
+(Sliding Window / StreamingLLM / H2O) genuinely differ (see DESIGN.md §4):
+
+  copy       repeat the full payload after SEP           (recency + induction)
+  lookup     key=value store, answer a queried key       (random access ≈ QA)
+  selective  repeat only tokens that follow MARK         (heavy hitters)
+  first      repeat the first FIRST_K payload tokens     (sink tokens)
+  lm         deterministic 2nd-order recurrence + noise  (local structure)
+
+The rust workload generator (rust/src/workload/tasks.rs) implements the SAME
+token-level formats (same special-token ids, same layout); the two sides only
+need to agree on the distribution, not on RNG streams.
+
+Token map (shared with rust/src/model/tokenizer.rs):
+  0            PAD
+  1..=223      content tokens (tasks draw from documented sub-ranges)
+  256 BOS, 257 SEP, 258 QUERY, 259 ANSWER, 260 EOS, 261 MARK, 262 EQUALS,
+  263 COMMA
+  vocab size   272 (rounded up; 264..271 reserved)
+"""
+
+import numpy as np
+
+PAD = 0
+BOS = 256
+SEP = 257
+QUERY = 258
+ANSWER = 259
+EOS = 260
+MARK = 261
+EQUALS = 262
+COMMA = 263
+VOCAB = 272
+
+KEY_LO, KEY_HI = 1, 48        # lookup keys
+VAL_LO, VAL_HI = 49, 96       # lookup values
+WORD_LO, WORD_HI = 1, 96      # copy/selective/first payload
+LM_MOD = 96                   # lm recurrence modulus (tokens 1..=96)
+
+FIRST_K = 8                   # `first` task answer length
+
+TASKS = ["copy", "lookup", "selective", "first", "lm"]
+
+
+def lm_next(a, b):
+    """Deterministic component of the lm task: x_t from (x_{t-1}, x_{t-2}).
+
+    Mirrored exactly by rust (workload/tasks.rs::lm_next).
+    """
+    return ((a * 31 + b * 17 + 7) % LM_MOD) + 1
+
+
+def gen_copy(rng, payload_len):
+    words = rng.integers(WORD_LO, WORD_HI + 1, size=payload_len).tolist()
+    prompt = [BOS] + words + [SEP]
+    answer = words + [EOS]
+    return prompt, answer
+
+
+def gen_lookup(rng, n_pairs):
+    keys = rng.choice(np.arange(KEY_LO, KEY_HI + 1), size=n_pairs,
+                      replace=False).tolist()
+    vals = rng.integers(VAL_LO, VAL_HI + 1, size=n_pairs).tolist()
+    body = []
+    for k, v in zip(keys, vals):
+        body += [k, EQUALS, v, COMMA]
+    qi = int(rng.integers(0, n_pairs))
+    prompt = [BOS] + body + [QUERY, keys[qi], ANSWER]
+    answer = [vals[qi], EOS]
+    return prompt, answer
+
+
+def gen_selective(rng, payload_len, n_marks):
+    words = rng.integers(WORD_LO, WORD_HI + 1, size=payload_len).tolist()
+    mark_pos = sorted(rng.choice(payload_len, size=n_marks, replace=False).tolist())
+    body = []
+    marked = []
+    for i, w in enumerate(words):
+        if i in set(mark_pos):
+            body.append(MARK)
+            marked.append(w)
+        body.append(w)
+    prompt = [BOS] + body + [SEP]
+    answer = marked + [EOS]
+    return prompt, answer
+
+
+def gen_first(rng, payload_len):
+    words = rng.integers(WORD_LO, WORD_HI + 1, size=payload_len).tolist()
+    prompt = [BOS] + words + [QUERY]
+    answer = words[:FIRST_K] + [EOS]
+    return prompt, answer
+
+
+def gen_lm(rng, length, noise=0.1):
+    seq = [int(rng.integers(1, LM_MOD + 1)), int(rng.integers(1, LM_MOD + 1))]
+    for _ in range(length - 2):
+        if rng.random() < noise:
+            seq.append(int(rng.integers(1, LM_MOD + 1)))
+        else:
+            seq.append(lm_next(seq[-1], seq[-2]))
+    return [BOS] + seq, []  # trained as plain next-token LM; no answer region
+
+
+def sample(rng, task, approx_prompt_len):
+    """Sample one (prompt, answer) sized to roughly approx_prompt_len tokens."""
+    n = max(4, approx_prompt_len)
+    if task == "copy":
+        return gen_copy(rng, max(4, min(n - 2, (n - 2))))
+    if task == "lookup":
+        return gen_lookup(rng, max(2, min((n - 4) // 4, KEY_HI - KEY_LO)))
+    if task == "selective":
+        pl = max(8, int((n - 2) / 1.25))
+        return gen_selective(rng, pl, max(2, pl // 8))
+    if task == "first":
+        return gen_first(rng, n - 2)
+    if task == "lm":
+        return gen_lm(rng, n - 1)
+    raise ValueError(f"unknown task {task}")
+
+
+def training_example(rng, seq_len, tasks=TASKS):
+    """One fixed-length training row: prompt + answer, PAD/crop to seq_len.
+
+    Returns (tokens[seq_len], loss_mask[seq_len]) — the mask puts full weight
+    on answer tokens and light weight on prompt tokens (the model must still
+    learn the prompt LM to have meaningful hidden states).
+    """
+    task = tasks[int(rng.integers(0, len(tasks)))]
+    # Size the prompt so prompt+answer fits (copy/selective roughly double).
+    budget = {"copy": seq_len // 2 - 2, "selective": int(seq_len / 2.2),
+              "lookup": seq_len - 8, "first": seq_len - FIRST_K - 4,
+              "lm": seq_len}[task]
+    approx = int(rng.integers(max(8, budget // 3), max(9, budget)))
+    prompt, answer = sample(rng, task, approx)
+    toks = (prompt + answer)[:seq_len]
+    mask = ([0.05] * len(prompt) + [1.0] * len(answer))[:seq_len]
+    if task == "lm":
+        mask = [1.0] * len(toks)
+    pad = seq_len - len(toks)
+    toks = toks + [PAD] * pad
+    mask = mask + [0.0] * pad
+    # never train to predict PAD or from the final position
+    return np.array(toks, np.int32), np.array(mask, np.float32)
+
+
+def make_batch(rng, batch, seq_len, tasks=TASKS):
+    xs, ms = zip(*(training_example(rng, seq_len, tasks) for _ in range(batch)))
+    return np.stack(xs), np.stack(ms)

@@ -1,0 +1,161 @@
+"""Build-time training of the tiny model on the synthetic task mixture.
+
+This is the substitution for the paper's pretrained checkpoints (DESIGN.md §4):
+a model that has actually *learned* the tasks is required for the accuracy-vs-
+budget experiments (Fig. 3, Tables 2/6) to have non-trivial shape — KV eviction
+must be able to hurt, and layer importance must be heterogeneous.
+
+Runs once at `make weights`; parameters land in artifacts/weights_<cfg>.npz and
+are baked into the HLO artifacts by aot.py. Hand-rolled Adam (no optax
+dependency). Deterministic given --seed.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import tasks
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-9, clip=1.0):
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+    vhat = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+    params = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                          params, mhat, vhat)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def flatten_params(params, prefix=""):
+    """Stable name -> array mapping for npz round-trip."""
+    out = {}
+    out["embed"] = params["embed"]
+    out["ln_f"] = params["ln_f"]
+    for i, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            out[f"layers.{i}.{k}"] = v
+    return out
+
+
+def unflatten_params(cfg, flat):
+    params = {"embed": jnp.asarray(flat["embed"]),
+              "ln_f": jnp.asarray(flat["ln_f"]), "layers": []}
+    for i in range(cfg.n_layer):
+        params["layers"].append(
+            {k: jnp.asarray(flat[f"layers.{i}.{k}"])
+             for k in ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"]})
+    return params
+
+
+def train(cfg, steps, batch, seq_len, lr, seed, log_every=25, init_from=None):
+    rng = np.random.default_rng(seed)
+    if init_from:
+        params = unflatten_params(cfg, dict(np.load(init_from)))
+        print(f"resumed from {init_from}")
+    else:
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, toks, mask, lr_t):
+        loss, grads = jax.value_and_grad(M.lm_loss)(params, cfg, toks, mask)
+        params, state = adam_update(params, grads, state, lr_t)
+        return params, state, loss
+
+    warmup = max(1, steps // 20)
+    t0 = time.time()
+    for it in range(steps):
+        toks, mask = tasks.make_batch(rng, batch, seq_len)
+        # linear warmup + cosine decay to 10%
+        frac = it / max(steps - 1, 1)
+        lr_t = lr * min(1.0, (it + 1) / warmup) \
+            * (0.55 + 0.45 * float(np.cos(np.pi * frac)))
+        params, state, loss = step(params, state, jnp.asarray(toks),
+                                   jnp.asarray(mask), lr_t)
+        if it % log_every == 0 or it == steps - 1:
+            print(f"step {it:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params
+
+
+def eval_answer_accuracy(params, cfg, rng, n=40, seq_len=192):
+    """Teacher-forced answer-token accuracy per task (training sanity only)."""
+    accs = {}
+    for task in tasks.TASKS:
+        if task == "lm":
+            continue
+        hit = tot = 0
+        for _ in range(n):
+            prompt, answer = tasks.sample(rng, task, seq_len // 2)
+            toks = prompt + answer
+            if len(toks) > seq_len:
+                continue
+            arr = jnp.asarray([toks + [tasks.PAD] * (seq_len - len(toks))],
+                              jnp.int32)
+            mask = jnp.zeros_like(arr, jnp.float32)
+            # reuse lm_loss forward by direct call of internals: compute logits
+            logits = _forward_logits(params, cfg, arr)[0]
+            for j in range(len(prompt) - 1, len(toks) - 1):
+                pred = int(jnp.argmax(logits[j]))
+                hit += pred == toks[j + 1]
+                tot += 1
+        accs[task] = hit / max(tot, 1)
+    return accs
+
+
+def _forward_logits(params, cfg, toks):
+    B, T = toks.shape
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x = params["embed"][toks]
+    from .kernels import ref
+    for layer in params["layers"]:
+        h = M.rmsnorm(x, layer["ln1"])
+        q, k, v = M._qkv(layer, h, cfg)
+        q = jax.vmap(lambda qq: M.rope(qq, positions, cfg.rope_theta))(q)
+        k = jax.vmap(lambda kk: M.rope(kk, positions, cfg.rope_theta))(k)
+        attn = jax.vmap(ref.causal_attention)(q, k, v)
+        x = x + attn.reshape(B, T, cfg.d_model) @ layer["wo"]
+        x = x + M._mlp(layer, M.rmsnorm(x, layer["ln2"]))
+    x = M.rmsnorm(x, params["ln_f"])
+    return x @ params["embed"].T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny", choices=list(M.CONFIGS))
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--batch", type=int, default=24)
+    ap.add_argument("--seq-len", type=int, default=160)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--init-from", default=None,
+                    help="resume from an existing weights npz")
+    args = ap.parse_args()
+
+    cfg = M.CONFIGS[args.config]
+    params = train(cfg, args.steps, args.batch, args.seq_len, args.lr,
+                   args.seed, init_from=args.init_from)
+    accs = eval_answer_accuracy(params, cfg, np.random.default_rng(args.seed + 1))
+    print("teacher-forced answer accuracy:", accs)
+    out = args.out or f"../artifacts/weights_{cfg.name}.npz"
+    np.savez(out, **{k: np.asarray(v) for k, v in flatten_params(params).items()})
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

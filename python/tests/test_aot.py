@@ -1,0 +1,74 @@
+"""AOT pipeline unit tests (weight layout + manifest schema; the heavy
+HLO-lowering path is exercised by `make artifacts` + the rust runtime)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import train as T
+
+
+CFG = M.ModelConfig(name="test", n_layer=2, d_model=32, n_head=2, vocab=64,
+                    ffn_mult=2, max_seq=128)
+
+
+def test_weight_order_stable():
+    names = aot.weight_order(CFG)
+    assert names[0] == "embed"
+    assert names[1] == "ln_f"
+    assert names[2] == "layers.0.ln1"
+    assert len(names) == 2 + 2 * 8
+
+
+def test_params_list_roundtrip():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    lst = aot.params_to_list(CFG, params)
+    back = aot.list_to_params(CFG, lst)
+    np.testing.assert_array_equal(params["embed"], back["embed"])
+    np.testing.assert_array_equal(params["layers"][1]["w2"], back["layers"][1]["w2"])
+
+
+def test_weight_shapes_match_params():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    lst = aot.params_to_list(CFG, params)
+    shapes = aot.weight_shapes(CFG)
+    assert len(lst) == len(shapes)
+    for arr, shape in zip(lst, shapes):
+        assert tuple(arr.shape) == tuple(shape)
+
+
+def test_flatten_unflatten_roundtrip():
+    params = M.init_params(CFG, jax.random.PRNGKey(1))
+    flat = T.flatten_params(params)
+    back = T.unflatten_params(CFG, flat)
+    np.testing.assert_array_equal(params["layers"][0]["wq"], back["layers"][0]["wq"])
+
+
+def test_manifest_written_by_make_artifacts():
+    """If the repo's artifacts exist, validate their schema end-to-end."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/tiny/manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        m = json.load(f)
+    assert m["model"]["n_layer"] >= 1
+    assert m["model"]["head_dim"] * m["model"]["n_head"] == m["model"]["d_model"]
+    kinds = {a["kind"] for a in m["artifacts"]}
+    assert kinds == {"prefill", "decode"}
+    for a in m["artifacts"]:
+        assert os.path.exists(os.path.join(os.path.dirname(path), a["file"]))
+    # weight index covers the whole bin file contiguously
+    idx = m["weights"]["index"]
+    total = sum(e["len"] for e in idx)
+    bin_path = os.path.join(os.path.dirname(path), m["weights"]["file"])
+    assert os.path.getsize(bin_path) == total * 4
+    off = 0
+    for e in idx:
+        assert e["offset"] == off
+        assert int(np.prod(e["shape"])) == e["len"]
+        off += e["len"]

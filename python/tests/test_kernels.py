@@ -1,0 +1,133 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and length masks; assert_allclose against ref.py is
+the core correctness signal for everything the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cosine_rows, decode_attention, flash_prefill
+from compile.kernels import ref
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- flash ----
+@settings(max_examples=12, deadline=None)
+@given(
+    lq=st.sampled_from([64, 128, 256]),
+    heads=st.sampled_from([1, 2, 4]),
+    dim=st.sampled_from([16, 32]),
+    vfrac=st.floats(0.2, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_prefill_matches_ref(lq, heads, dim, vfrac, seed):
+    q = rand(seed, (lq, heads, dim))
+    k = rand(seed + 1, (lq, heads, dim))
+    v = rand(seed + 2, (lq, heads, dim))
+    vlen = max(2, int(lq * vfrac))
+    out = flash_prefill(q, k, v, vlen)
+    want = ref.causal_attention(q, k, v, vlen)
+    np.testing.assert_allclose(out[:vlen], want[:vlen], rtol=RTOL, atol=ATOL)
+
+
+def test_flash_prefill_full_length():
+    q, k, v = (rand(i, (128, 4, 32)) for i in range(3))
+    out = flash_prefill(q, k, v, 128)
+    want = ref.causal_attention(q, k, v, 128)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_flash_prefill_rejects_ragged():
+    q = rand(0, (100, 2, 16))  # not a multiple of block_q
+    with pytest.raises(ValueError):
+        flash_prefill(q, q, q, 50)
+
+
+def test_flash_prefill_first_token_only():
+    # vlen=1: every valid query row attends only to position 0.
+    q, k, v = (rand(i + 9, (64, 2, 16)) for i in range(3))
+    out = flash_prefill(q, k, v, 1)
+    want = ref.causal_attention(q, k, v, 1)
+    np.testing.assert_allclose(out[:1], want[:1], rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------- decode ----
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    m=st.sampled_from([16, 64, 192]),
+    heads=st.sampled_from([1, 4]),
+    dim=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_matches_ref(b, m, heads, dim, seed):
+    q = rand(seed, (b, heads, dim))
+    kc = rand(seed + 1, (b, m, heads, dim))
+    vc = rand(seed + 2, (b, m, heads, dim))
+    rng = np.random.default_rng(seed)
+    lens = jnp.asarray(rng.integers(0, m + 1, size=b), jnp.int32)
+    out, scores = decode_attention(q, kc, vc, lens)
+    want_o, want_s = ref.decode_attention(q, kc, vc, lens)
+    np.testing.assert_allclose(out, want_o, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(scores, want_s, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_inactive_slots_zero():
+    q = rand(0, (3, 2, 16))
+    kc = rand(1, (3, 8, 2, 16))
+    vc = rand(2, (3, 8, 2, 16))
+    lens = jnp.asarray([0, 4, 0], jnp.int32)
+    out, scores = decode_attention(q, kc, vc, lens)
+    assert np.allclose(out[0], 0.0) and np.allclose(out[2], 0.0)
+    assert np.allclose(scores[0], 0.0) and np.allclose(scores[2], 0.0)
+    assert not np.allclose(out[1], 0.0)
+
+
+def test_decode_scores_sum_to_heads():
+    # probability mass per sequence sums to n_heads (softmax over M per head).
+    heads = 4
+    q = rand(3, (2, heads, 16))
+    kc = rand(4, (2, 32, heads, 16))
+    vc = rand(5, (2, 32, heads, 16))
+    lens = jnp.asarray([32, 7], jnp.int32)
+    _, scores = decode_attention(q, kc, vc, lens)
+    np.testing.assert_allclose(scores.sum(axis=1), [heads, heads], rtol=1e-4)
+    # masked slots get zero mass
+    assert np.allclose(scores[1, 7:], 0.0)
+
+
+# --------------------------------------------------------------- cosine ----
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([64, 128, 256]),
+    dim=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_cosine_matches_ref(rows, dim, seed):
+    a = rand(seed, (rows, dim))
+    b = rand(seed + 1, (rows, dim))
+    out = cosine_rows(a, b)
+    want = ref.cosine_rows(a, b)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_cosine_identical_rows_one():
+    a = rand(7, (64, 32))
+    out = cosine_rows(a, a)
+    np.testing.assert_allclose(out, np.ones(64), rtol=1e-4)
+
+
+def test_cosine_opposite_rows_minus_one():
+    a = rand(8, (64, 32))
+    out = cosine_rows(a, -a)
+    np.testing.assert_allclose(out, -np.ones(64), rtol=1e-4)

@@ -1,0 +1,80 @@
+"""Task-suite invariants (mirrored by rust/src/workload/tasks.rs tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def test_copy_answer_is_payload():
+    prompt, answer = tasks.gen_copy(rng(), 10)
+    assert prompt[0] == tasks.BOS and prompt[-1] == tasks.SEP
+    assert answer[:-1] == prompt[1:-1]
+    assert answer[-1] == tasks.EOS
+
+
+def test_lookup_answer_correct():
+    for seed in range(10):
+        prompt, answer = tasks.gen_lookup(rng(seed), 8)
+        q = prompt[-2]
+        body = prompt[1:prompt.index(tasks.QUERY)]
+        pairs = {body[i]: body[i + 2] for i in range(0, len(body), 4)}
+        assert answer[0] == pairs[q]
+        assert answer[1] == tasks.EOS
+
+
+def test_lookup_keys_distinct():
+    prompt, _ = tasks.gen_lookup(rng(3), 40)
+    body = prompt[1:prompt.index(tasks.QUERY)]
+    keys = [body[i] for i in range(0, len(body), 4)]
+    assert len(set(keys)) == len(keys)
+
+
+def test_selective_marks():
+    prompt, answer = tasks.gen_selective(rng(1), 20, 4)
+    marked = [prompt[i + 1] for i, t in enumerate(prompt) if t == tasks.MARK]
+    assert answer[:-1] == marked
+    assert len(marked) == 4
+
+
+def test_first_prefix():
+    prompt, answer = tasks.gen_first(rng(2), 30)
+    assert answer[:tasks.FIRST_K] == prompt[1:1 + tasks.FIRST_K]
+
+
+def test_lm_next_matches_rust_formula():
+    # Mirrors rust workload::tasks::lm_next test values.
+    assert tasks.lm_next(1, 1) == ((31 + 17 + 7) % tasks.LM_MOD) + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(task=st.sampled_from([t for t in tasks.TASKS]),
+       n=st.integers(16, 300), seed=st.integers(0, 1000))
+def test_sample_token_ranges(task, n, seed):
+    prompt, answer = tasks.sample(rng(seed), task, n)
+    for t in prompt + answer:
+        assert 0 <= t < tasks.VOCAB
+    assert prompt[0] == tasks.BOS
+
+
+@settings(max_examples=10, deadline=None)
+@given(seq_len=st.sampled_from([48, 96, 160]), seed=st.integers(0, 500))
+def test_training_example_shapes(seq_len, seed):
+    toks, mask = tasks.training_example(rng(seed), seq_len)
+    assert toks.shape == (seq_len,)
+    assert mask.shape == (seq_len,)
+    assert toks.dtype == np.int32
+    # padding is masked out
+    pad_positions = toks == tasks.PAD
+    assert np.all(mask[pad_positions] == 0.0)
+
+
+def test_make_batch():
+    toks, mask = tasks.make_batch(rng(5), 4, 64)
+    assert toks.shape == (4, 64)
+    assert mask.shape == (4, 64)

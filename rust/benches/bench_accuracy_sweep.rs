@@ -1,0 +1,111 @@
+//! Figure 3 + Table 2 reproduction: model accuracy vs KV budget (10–100% of
+//! prompt length), best sequence-wise baseline with and without
+//! SqueezeAttention, plus the Full Cache reference.
+//!
+//! Output: reports/fig3_<task>.csv, one row per budget point, and the
+//! Table-2 summary (min budget reaching within 5% of Full Cache accuracy).
+//! Expected shape: the +Squeeze curve dominates the uniform-baseline curve at
+//! equal budget, so its Table-2 budget is lower. SA_QUICK=1 shrinks the sweep.
+
+use squeezeattention::config::{PolicyKind, ServeConfig};
+use squeezeattention::coordinator::Engine;
+use squeezeattention::util::bench::Table;
+use squeezeattention::workload::{best_baseline_for, evaluate, EvalSpec, ALL_TASKS};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("SKIP bench_accuracy_sweep: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("SA_QUICK").is_ok();
+    let budgets: Vec<f64> =
+        if quick { vec![0.2, 0.5] } else { vec![0.1, 0.2, 0.3, 0.5, 0.75, 1.0] };
+    let n_req = if quick { 3 } else { 5 };
+    let prompt_len = 160;
+    let max_new = 40;
+
+    let mut eng = Engine::new(ServeConfig::new("artifacts/tiny"))?;
+    let mut table2 = Table::new(&[
+        "task", "best_baseline", "full_acc", "squeeze_acc@best", "squeeze_budget",
+        "baseline_acc@best", "baseline_budget",
+    ]);
+
+    for task in ALL_TASKS {
+        let spec = EvalSpec::new(task, n_req, prompt_len, max_new, 77);
+        let policy = best_baseline_for(task);
+
+        let full = evaluate(
+            &mut eng,
+            ServeConfig::new("artifacts/tiny").with_policy(PolicyKind::Full),
+            &spec,
+        )?;
+        println!(
+            "\n== task {} (best baseline: {}) full-cache acc={:.3} ==",
+            task.name(),
+            policy.name(),
+            full.accuracy
+        );
+
+        let mut csv = Table::new(&[
+            "budget_frac", "baseline_acc", "squeeze_acc", "full_acc",
+            "baseline_kv_tokens", "squeeze_kv_tokens",
+        ]);
+        let mut curves: Vec<(f64, f64, f64)> = Vec::new();
+        for &frac in &budgets {
+            let base_cfg = ServeConfig::new("artifacts/tiny")
+                .with_policy(policy)
+                .with_budget_frac(frac)
+                .with_squeeze(false);
+            let sq_cfg = base_cfg.clone().with_squeeze(true);
+            let base = evaluate(&mut eng, base_cfg, &spec)?;
+            let sq = evaluate(&mut eng, sq_cfg, &spec)?;
+            println!(
+                "  budget {:>4.0}%  baseline {:.3}  +squeeze {:.3}   (kv tokens {:.0} vs {:.0})",
+                frac * 100.0,
+                base.accuracy,
+                sq.accuracy,
+                base.mean_kv_tokens,
+                sq.mean_kv_tokens
+            );
+            csv.row(vec![
+                format!("{frac}"),
+                format!("{:.4}", base.accuracy),
+                format!("{:.4}", sq.accuracy),
+                format!("{:.4}", full.accuracy),
+                format!("{:.0}", base.mean_kv_tokens),
+                format!("{:.0}", sq.mean_kv_tokens),
+            ]);
+            curves.push((frac, base.accuracy, sq.accuracy));
+        }
+        csv.write_csv(&format!("reports/fig3_{}.csv", task.name()))?;
+
+        // Table 2: min budget whose accuracy >= full - 5% (absolute).
+        let target = full.accuracy - 0.05;
+        let min_budget = |select: &dyn Fn(&(f64, f64, f64)) -> f64| {
+            curves
+                .iter()
+                .filter(|c| select(c) >= target)
+                .map(|c| c.0)
+                .fold(f64::NAN, |acc, x| if acc.is_nan() { x } else { acc.min(x) })
+        };
+        let bb = min_budget(&|c: &(f64, f64, f64)| c.1);
+        let sb = min_budget(&|c: &(f64, f64, f64)| c.2);
+        let acc_at = |frac: f64, select: &dyn Fn(&(f64, f64, f64)) -> f64| {
+            curves.iter().find(|c| c.0 == frac).map(select).unwrap_or(f64::NAN)
+        };
+        table2.row(vec![
+            task.name().into(),
+            policy.name().into(),
+            format!("{:.3}", full.accuracy),
+            if sb.is_nan() { "n/a".into() } else { format!("{:.3}", acc_at(sb, &|c| c.2)) },
+            if sb.is_nan() { "n/a".into() } else { format!("{:.0}%", sb * 100.0) },
+            if bb.is_nan() { "n/a".into() } else { format!("{:.3}", acc_at(bb, &|c| c.1)) },
+            if bb.is_nan() { "n/a".into() } else { format!("{:.0}%", bb * 100.0) },
+        ]);
+    }
+
+    println!("\nTable 2 — budget required to (approximately) match Full Cache:");
+    table2.print();
+    table2.write_csv("reports/table2.csv")?;
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Figure 2 reproduction: cosine-similarity heatmap (layer × position),
+//! averaged over prompts, plus the layer-mean profile and the k-means
+//! grouping Algorithm 1 would produce.
+//!
+//! Output: reports/fig2_heatmap.csv (+ an ASCII rendering on stdout).
+//! Expected shape (paper): early layers darker (low cosine = important),
+//! second half lighter; first/last layers often special.
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{Engine, Request};
+use squeezeattention::squeeze::kmeans_1d;
+use squeezeattention::util::bench::Table;
+use squeezeattention::workload::{TaskGen, ALL_TASKS};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("SKIP bench_heatmap: run `make artifacts` first");
+        return Ok(());
+    }
+    let n_prompts: usize =
+        std::env::var("SA_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+
+    let mut eng = Engine::new(ServeConfig::new("artifacts/tiny"))?;
+    eng.enable_cosine_collection();
+    let mut gen = TaskGen::new(2024);
+    for i in 0..n_prompts {
+        let task = ALL_TASKS[i % ALL_TASKS.len()];
+        let s = gen.sample(task, 180);
+        eng.generate_batch(vec![Request::new(i as u64, s.prompt, 2)]);
+    }
+
+    let stats = eng.cosine_stats().unwrap().clone();
+    let n_layer = stats.n_layer();
+    let means = stats.layer_means();
+
+    // CSV: layer, then cosine per position.
+    let max_pos = (0..n_layer).map(|l| stats.heatmap_row(l).len()).max().unwrap_or(0);
+    let mut headers = vec!["layer".to_string()];
+    headers.extend((0..max_pos).map(|p| format!("pos{p}")));
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for l in 0..n_layer {
+        let row = stats.heatmap_row(l);
+        let mut cells = vec![l.to_string()];
+        cells.extend(
+            (0..max_pos).map(|p| row.get(p).map(|v| format!("{v:.4}")).unwrap_or_default()),
+        );
+        table.row(cells);
+    }
+    table.write_csv("reports/fig2_heatmap.csv")?;
+    println!(
+        "wrote reports/fig2_heatmap.csv ({n_layer} layers x {max_pos} positions, {n_prompts} prompts)"
+    );
+
+    // ASCII heatmap: 1 char per 8 positions, darker = lower cosine.
+    println!("\nFig.2 ASCII heatmap (rows=layers, dark=important):");
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    for l in 0..n_layer {
+        let row = stats.heatmap_row(l);
+        let mut line = String::new();
+        for chunk in row.chunks(8) {
+            let vals: Vec<f64> = chunk.iter().copied().filter(|v| v.is_finite()).collect();
+            if vals.is_empty() {
+                line.push(' ');
+                continue;
+            }
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            // dark for LOW cosine (important layer)
+            let idx = (((1.0 - m).clamp(0.0, 1.0)) * (shades.len() - 1) as f64).round() as usize;
+            line.push(shades[idx]);
+        }
+        println!("  layer {l:2}  |{line}|  mean={:.4}", means[l]);
+    }
+
+    // k-means grouping (Algorithm 1 line 5).
+    let clustering = kmeans_1d(&means, 3, 100);
+    println!("\nlayer groups (G1=most important):");
+    for g in 0..3 {
+        let members = clustering.members(g);
+        println!("  G{} ({} layers): {:?}", g + 1, members.len(), members);
+    }
+    let mut t2 = Table::new(&["layer", "mean_cosine", "group"]);
+    for l in 0..n_layer {
+        t2.row(vec![
+            l.to_string(),
+            format!("{:.5}", means[l]),
+            (clustering.assignment[l] + 1).to_string(),
+        ]);
+    }
+    t2.write_csv("reports/fig2_layer_means.csv")?;
+    println!("wrote reports/fig2_layer_means.csv");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Tables 7/8 reproduction: how many layers land in the important vs
+//! unimportant groups across different tasks — is layer importance an
+//! intrinsic property of the model or task-dependent?
+//!
+//! Expected shape: a stable core with task-specific fluctuation (the paper
+//! sees 17–21 important layers for Llama2-70B across Xsum/Samsum/LCC).
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{Engine, Request};
+use squeezeattention::squeeze::kmeans_1d;
+use squeezeattention::util::bench::Table;
+use squeezeattention::workload::{TaskGen, ALL_TASKS};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("SKIP bench_layer_groups: run `make artifacts` first");
+        return Ok(());
+    }
+    let n_prompts = std::env::var("SA_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(6usize);
+    let mut eng = Engine::new(ServeConfig::new("artifacts/tiny"))?;
+    let mut table = Table::new(&["task", "important (G1+G2)", "unimportant (G3)", "G3 layers"]);
+    let mut per_task_groups: Vec<(String, Vec<usize>)> = Vec::new();
+
+    for task in ALL_TASKS {
+        eng.reconfigure(ServeConfig::new("artifacts/tiny"))?;
+        eng.enable_cosine_collection();
+        let mut gen = TaskGen::new(4242);
+        for i in 0..n_prompts {
+            let s = gen.sample(task, 180);
+            eng.generate_batch(vec![Request::new(i as u64, s.prompt, 2)]);
+        }
+        let means = eng.cosine_stats().unwrap().layer_means();
+        let clustering = kmeans_1d(&means, 3, 100);
+        let g3 = clustering.members(2);
+        let important = means.len() - g3.len();
+        println!(
+            "task {:9}: {} important / {} unimportant  G3={:?}",
+            task.name(),
+            important,
+            g3.len(),
+            g3
+        );
+        table.row(vec![
+            task.name().into(),
+            important.to_string(),
+            g3.len().to_string(),
+            format!("{g3:?}"),
+        ]);
+        per_task_groups.push((task.name().into(), g3));
+    }
+
+    println!("\nTables 7/8 — layer-group sizes across tasks ({n_prompts} prompts each):");
+    table.print();
+    table.write_csv("reports/table7_8_layer_groups.csv")?;
+
+    // Stability analysis: layers that are unimportant for every task vs some.
+    let n_layer = 8;
+    let mut always = Vec::new();
+    let mut sometimes = Vec::new();
+    for l in 0..n_layer {
+        let count = per_task_groups.iter().filter(|(_, g)| g.contains(&l)).count();
+        if count == per_task_groups.len() {
+            always.push(l);
+        } else if count > 0 {
+            sometimes.push(l);
+        }
+    }
+    println!("\nalways-unimportant layers: {always:?}");
+    println!("task-sensitive layers:     {sometimes:?}");
+    Ok(())
+}

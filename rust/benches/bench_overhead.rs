@@ -1,0 +1,92 @@
+//! Table 4 + Table 5 reproduction: the one-time cost of SqueezeAttention.
+//!
+//! Table 4: prefill wall time with vs without the squeeze bookkeeping
+//! (cosine-stat reduction + k-means + reallocation happen at admission).
+//! Table 5: micro-breakdown of the two host-side operations.
+//! Expected shape: overhead is a few percent of prefill, and the host ops
+//! are microseconds — a one-time price per request.
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{Engine, Request};
+use squeezeattention::squeeze::{allocate, kmeans_1d, cosine, CosineStats};
+use squeezeattention::util::bench::{bench, fmt_duration, Table};
+use squeezeattention::util::Rng;
+use squeezeattention::workload::{Task, TaskGen};
+
+fn main() -> anyhow::Result<()> {
+    // ---------------- Table 5: host-op micro-benches ----------------------
+    println!("Table 5 — host-side op costs:");
+    let mut rng = Rng::seed_from_u64(0);
+    // cosine over two 4096-dim vectors x 32 layers (paper's Mistral shape)
+    let a: Vec<f32> = (0..4096).map(|_| rng.f64() as f32).collect();
+    let b: Vec<f32> = (0..4096).map(|_| rng.f64() as f32).collect();
+    let s_cos = bench("cosine 4096-dim x32 layers", 3, 30, || {
+        for _ in 0..32 {
+            std::hint::black_box(cosine(&a, &b));
+        }
+    });
+    // kmeans of 32 layer means into 3 groups
+    let means: Vec<f64> = (0..32).map(|_| rng.f64()).collect();
+    let s_km = bench("kmeans 32 values k=3", 3, 200, || {
+        std::hint::black_box(kmeans_1d(&means, 3, 100));
+    });
+    // full Algorithm-1 allocation
+    let cfg = squeezeattention::config::SqueezeConfig::default();
+    let s_alloc = bench("allocate (Algorithm 1)", 3, 200, || {
+        std::hint::black_box(allocate(&means, 1000, &cfg));
+    });
+    // CosineStats reduction of a [32, 512] probe tensor
+    let probe = squeezeattention::runtime::Tensor::from_vec(
+        &[32, 512],
+        (0..32 * 512).map(|i| (i % 97) as f32 / 97.0).collect(),
+    )?;
+    let s_stats = bench("CosineStats.observe 32x512", 3, 100, || {
+        let mut st = CosineStats::new(32);
+        st.observe(&probe, 512);
+        std::hint::black_box(st.layer_means());
+    });
+    let mut t5 = Table::new(&["op", "mean"]);
+    for s in [&s_cos, &s_km, &s_alloc, &s_stats] {
+        t5.row(vec![s.name.clone(), fmt_duration(s.mean_s)]);
+    }
+    t5.print();
+    t5.write_csv("reports/table5.csv")?;
+
+    // ---------------- Table 4: prefill ± squeeze --------------------------
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("SKIP Table 4 half: run `make artifacts` first");
+        return Ok(());
+    }
+    let n = std::env::var("SA_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(8usize);
+    let mut eng = Engine::new(ServeConfig::new("artifacts/tiny"))?;
+    let measure = |eng: &mut Engine, squeeze: bool| -> anyhow::Result<(f64, f64)> {
+        eng.reconfigure(ServeConfig::new("artifacts/tiny").with_squeeze(squeeze))?;
+        let mut gen = TaskGen::new(5);
+        let mut prefill = 0.0;
+        let mut sq = 0.0;
+        for i in 0..n {
+            let s = gen.sample(Task::Lookup, 200);
+            let outs = eng.generate_batch(vec![Request::new(i as u64, s.prompt, 1)]);
+            prefill += outs[0].timing.prefill_s;
+            sq += outs[0].timing.squeeze_s;
+        }
+        Ok((prefill / n as f64, sq / n as f64))
+    };
+    // warm the executables so compile time doesn't pollute the measurement
+    let _ = measure(&mut eng, true)?;
+    let (p_without, _) = measure(&mut eng, false)?;
+    let (p_with, sq_part) = measure(&mut eng, true)?;
+    let overhead = (p_with + sq_part) / p_without - 1.0;
+    let mut t4 = Table::new(&["arm", "prefill (mean)", "squeeze ops", "overhead"]);
+    t4.row(vec!["w/o squeeze".into(), fmt_duration(p_without), "-".into(), "-".into()]);
+    t4.row(vec![
+        "w/ squeeze".into(),
+        fmt_duration(p_with),
+        fmt_duration(sq_part),
+        format!("{:.1}%", overhead * 100.0),
+    ]);
+    println!("\nTable 4 — prefill overhead of SqueezeAttention ({n} prompts of ~200 tokens):");
+    t4.print();
+    t4.write_csv("reports/table4.csv")?;
+    Ok(())
+}

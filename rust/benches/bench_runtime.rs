@@ -1,0 +1,125 @@
+//! Runtime micro-benchmarks — the §Perf instrumentation for Layer 3.
+//!
+//! Measures each stage of the decode hot path in isolation so the perf pass
+//! can attribute wall time: prefill per bucket, decode step per tier, host
+//! batch assembly (write_into_batch), eviction + compaction, and the H2O
+//! score fold. Also reports the Runtime's cumulative h2d/d2h split.
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::kvcache::{H2o, EvictionPolicy, SequenceCache};
+use squeezeattention::runtime::{Runtime, Tensor, TensorI32};
+use squeezeattention::util::bench::{bench, fmt_duration, Table};
+use squeezeattention::util::Rng;
+use squeezeattention::workload::{Task, TaskGen};
+
+fn main() -> anyhow::Result<()> {
+    // -------- host-side pieces (no artifacts needed) -----------------------
+    println!("host-side hot-path pieces:");
+    let row = 128usize; // tiny model: 4 heads x 32
+    let n_layer = 8;
+    let mut rng = Rng::seed_from_u64(1);
+    let mut cache = SequenceCache::new(n_layer, row);
+    let krow: Vec<f32> = (0..row).map(|_| rng.f64() as f32).collect();
+    for l in 0..n_layer {
+        for p in 0..160 {
+            cache.append(l, &krow, &krow, p as u32)?;
+        }
+    }
+    let (b, m) = (8usize, 192usize);
+    let mut k_buf = Tensor::zeros(&[n_layer, b, m, 4, 32]);
+    let mut v_buf = Tensor::zeros(&[n_layer, b, m, 4, 32]);
+    let mut lens = vec![0i32; n_layer * b];
+    bench("write_into_batch 8L x160tok", 5, 200, || {
+        cache.write_into_batch(&mut k_buf, &mut v_buf, &mut lens, 3).unwrap();
+    });
+
+    let policy = H2o::new(0.5);
+    bench("h2o keep-set 160->64", 5, 500, || {
+        std::hint::black_box(policy.keep(&cache.layers[0].meta, 64));
+    });
+    let keep: Vec<usize> = (96..160).collect();
+    bench("retain/compact 160->64 x8 layers", 5, 100, || {
+        let mut c = cache.clone();
+        for l in 0..n_layer {
+            c.retain(l, &keep).unwrap();
+        }
+    });
+    let scores: Vec<f32> = (0..160).map(|_| rng.f64() as f32).collect();
+    bench("add_scores 160 slots x8 layers", 5, 500, || {
+        let mut c = cache.clone();
+        for l in 0..n_layer {
+            c.add_scores(l, &scores);
+        }
+    });
+
+    // -------- XLA execution per shape tier ---------------------------------
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        eprintln!("SKIP runtime half: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::load("artifacts/tiny", "pallas")?;
+    let mut gen = TaskGen::new(3);
+    let mut table = Table::new(&["stage", "mean", "min"]);
+
+    for bucket in rt.manifest.prefill_buckets("pallas") {
+        let s = gen.sample(Task::Lm, bucket - 8);
+        let prompt = s.prompt.clone();
+        let st = bench(&format!("prefill bucket {bucket}"), 1, 5, || {
+            std::hint::black_box(rt.prefill(&prompt).unwrap());
+        });
+        table.row(vec![st.name.clone(), fmt_duration(st.mean_s), fmt_duration(st.min_s)]);
+    }
+
+    let n_layer = rt.manifest.model.n_layer;
+    let (h, d) = (rt.manifest.model.n_head, rt.manifest.model.head_dim);
+    for tier in rt.manifest.decode_tiers("pallas") {
+        let (tb, tm) = tier;
+        if tb > 8 {
+            continue; // keep default run short; b16 covered by SA_ALL_TIERS
+        }
+        let tokens = TensorI32::from_vec(&[tb], vec![7; tb])?;
+        let positions = TensorI32::from_vec(&[tb], vec![100; tb])?;
+        let k_cache = Tensor::zeros(&[n_layer, tb, tm, h, d]);
+        let v_cache = Tensor::zeros(&[n_layer, tb, tm, h, d]);
+        let lens = TensorI32::from_vec(&[n_layer, tb], vec![100; n_layer * tb])?;
+        let st = bench(&format!("decode tier b{tb} m{tm}"), 1, 5, || {
+            std::hint::black_box(
+                rt.decode(tier, &tokens, &positions, &k_cache, &v_cache, &lens).unwrap(),
+            );
+        });
+        table.row(vec![st.name.clone(), fmt_duration(st.mean_s), fmt_duration(st.min_s)]);
+    }
+
+    let stats = rt.stats();
+    println!(
+        "\ncumulative runtime split: compile {:.2}s | h2d {:.2}s | d2h {:.2}s | prefill {:.2}s | decode {:.2}s",
+        stats.compile_secs, stats.h2d_secs, stats.d2h_secs, stats.prefill_secs, stats.decode_secs
+    );
+
+    // -------- kernel ablation: pallas-lowered HLO vs plain-jnp HLO ---------
+    // (same math — engine_integration asserts identical generations; here we
+    // compare the CPU execution cost of the two lowerings.)
+    if !rt.manifest.decode_tiers("jnp").is_empty() {
+        println!("\nkernel ablation (same shapes, pallas- vs jnp-lowered HLO):");
+        let rt2 = Runtime::load("artifacts/tiny", "jnp")?;
+        for (label, r) in [("pallas", &rt), ("jnp", &rt2)] {
+            let tier = (8usize, 192usize);
+            if r.manifest.find_decode(label, tier.0, tier.1).is_err() {
+                continue;
+            }
+            let tokens = TensorI32::from_vec(&[8], vec![7; 8])?;
+            let positions = TensorI32::from_vec(&[8], vec![100; 8])?;
+            let k_cache = Tensor::zeros(&[n_layer, 8, 192, h, d]);
+            let v_cache = Tensor::zeros(&[n_layer, 8, 192, h, d]);
+            let lens = TensorI32::from_vec(&[n_layer, 8], vec![100; n_layer * 8])?;
+            let st = bench(&format!("decode b8 m192 [{label}]"), 1, 5, || {
+                std::hint::black_box(
+                    r.decode(tier, &tokens, &positions, &k_cache, &v_cache, &lens).unwrap(),
+                );
+            });
+            table.row(vec![st.name.clone(), fmt_duration(st.mean_s), fmt_duration(st.min_s)]);
+        }
+    }
+    table.write_csv("reports/runtime_micro.csv")?;
+    Ok(())
+}

@@ -1,0 +1,305 @@
+//! The artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Everything the coordinator needs to know about the compiled
+//! model — shapes, special tokens, the weight-blob index, and the available
+//! prefill buckets / decode tiers — is read from `manifest.json` so the two
+//! sides can never drift silently. Parsed with the in-repo JSON substrate
+//! (`util::json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// Model hyperparameters (mirror of python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub vocab: usize,
+    pub ffn_mult: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub head_dim: usize,
+}
+
+impl ModelCfg {
+    fn from_json(j: &Json) -> Result<Self> {
+        let us = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow!("model.{k} not a usize"))
+        };
+        Ok(Self {
+            name: j.req("name")?.as_str().unwrap_or("?").to_string(),
+            n_layer: us("n_layer")?,
+            d_model: us("d_model")?,
+            n_head: us("n_head")?,
+            vocab: us("vocab")?,
+            ffn_mult: us("ffn_mult")?,
+            max_seq: us("max_seq")?,
+            rope_theta: j.req("rope_theta")?.as_f64().unwrap_or(10000.0),
+            head_dim: us("head_dim")?,
+        })
+    }
+
+    /// Bytes of KV-cache per cached token per layer (f32 K + V).
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
+        2 * self.n_head * self.head_dim * 4
+    }
+
+    /// Bytes of KV-cache per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.kv_bytes_per_token_layer() * self.n_layer
+    }
+}
+
+/// Special-token ids shared with the python task generators.
+#[derive(Debug, Clone, Copy)]
+pub struct TokenMap {
+    pub pad: i32,
+    pub bos: i32,
+    pub sep: i32,
+    pub query: i32,
+    pub answer: i32,
+    pub eos: i32,
+    pub mark: i32,
+    pub equals: i32,
+    pub comma: i32,
+}
+
+impl TokenMap {
+    fn from_json(j: &Json) -> Result<Self> {
+        let t = |k: &str| -> Result<i32> {
+            Ok(j.req(k)?.as_i64().ok_or_else(|| anyhow!("tokens.{k} not an int"))? as i32)
+        };
+        Ok(Self {
+            pad: t("pad")?,
+            bos: t("bos")?,
+            sep: t("sep")?,
+            query: t("query")?,
+            answer: t("answer")?,
+            eos: t("eos")?,
+            mark: t("mark")?,
+            equals: t("equals")?,
+            comma: t("comma")?,
+        })
+    }
+}
+
+/// One weight array inside `weights.bin` (f32 LE, element offsets).
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsIndex {
+    pub file: String,
+    pub dtype: String,
+    pub index: Vec<WeightEntry>,
+}
+
+/// One HLO artifact. `kind` is "prefill" (has `len`) or "decode" (has
+/// `batch` + `cap`).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub kind: String,
+    pub kernel: String,
+    pub len: Option<usize>,
+    pub batch: Option<usize>,
+    pub cap: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelCfg,
+    pub trained: bool,
+    pub tokens: TokenMap,
+    pub weights: WeightsIndex,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` (e.g. `artifacts/tiny`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut m = Self::parse(&text).context("parsing manifest.json")?;
+        m.dir = dir.to_path_buf();
+        Ok(m)
+    }
+
+    /// Parse manifest JSON text (dir left empty).
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let model = ModelCfg::from_json(j.req("model")?)?;
+        let tokens = TokenMap::from_json(j.req("tokens")?)?;
+        let w = j.req("weights")?;
+        let mut index = Vec::new();
+        for e in w.req("index")?.as_arr().unwrap_or(&[]) {
+            index.push(WeightEntry {
+                name: e.req("name")?.as_str().unwrap_or("").to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                offset: e.req("offset")?.as_usize().ok_or_else(|| anyhow!("bad offset"))?,
+                len: e.req("len")?.as_usize().ok_or_else(|| anyhow!("bad len"))?,
+            });
+        }
+        let weights = WeightsIndex {
+            file: w.req("file")?.as_str().unwrap_or("weights.bin").to_string(),
+            dtype: w.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+            index,
+        };
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            artifacts.push(ArtifactEntry {
+                file: a.req("file")?.as_str().unwrap_or("").to_string(),
+                kind: a.req("kind")?.as_str().unwrap_or("").to_string(),
+                kernel: a.req("kernel")?.as_str().unwrap_or("").to_string(),
+                len: a.get("len").and_then(|v| v.as_usize()),
+                batch: a.get("batch").and_then(|v| v.as_usize()),
+                cap: a.get("cap").and_then(|v| v.as_usize()),
+            });
+        }
+        Ok(Manifest {
+            model,
+            trained: j.req("trained")?.as_bool().unwrap_or(false),
+            tokens,
+            weights,
+            artifacts,
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Sorted prefill bucket lengths for `kernel`.
+    pub fn prefill_buckets(&self, kernel: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "prefill" && a.kernel == kernel)
+            .filter_map(|a| a.len)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Available decode tiers (batch, capacity) for `kernel`.
+    pub fn decode_tiers(&self, kernel: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "decode" && a.kernel == kernel)
+            .filter_map(|a| Some((a.batch?, a.cap?)))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn find_prefill(&self, kernel: &str, len: usize) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "prefill" && a.kernel == kernel && a.len == Some(len))
+            .ok_or_else(|| anyhow!("no prefill artifact kernel={kernel} len={len}"))
+    }
+
+    pub fn find_decode(&self, kernel: &str, batch: usize, cap: usize) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.kind == "decode"
+                    && a.kernel == kernel
+                    && a.batch == Some(batch)
+                    && a.cap == Some(cap)
+            })
+            .ok_or_else(|| anyhow!("no decode artifact kernel={kernel} b={batch} m={cap}"))
+    }
+
+    /// Read `weights.bin` into per-array f32 vectors, manifest order.
+    pub fn load_weights(&self) -> Result<Vec<(WeightEntry, Vec<f32>)>> {
+        let path = self.dir.join(&self.weights.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut out = Vec::with_capacity(self.weights.index.len());
+        for e in &self.weights.index {
+            let start = e.offset * 4;
+            let end = start + e.len * 4;
+            if end > bytes.len() {
+                return Err(anyhow!("weight {} out of range in weights.bin", e.name));
+            }
+            let mut v = vec![0f32; e.len];
+            for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            out.push((e.clone(), v));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> &'static str {
+        r#"{
+          "model": {"name":"tiny","n_layer":8,"d_model":128,"n_head":4,
+                    "vocab":272,"ffn_mult":4,"max_seq":640,
+                    "rope_theta":10000.0,"head_dim":32},
+          "trained": false,
+          "tokens": {"pad":0,"bos":256,"sep":257,"query":258,"answer":259,
+                     "eos":260,"mark":261,"equals":262,"comma":263},
+          "weights": {"file":"weights.bin","dtype":"f32","index":[
+            {"name":"embed","shape":[272,128],"offset":0,"len":34816}
+          ]},
+          "artifacts": [
+            {"file":"prefill_pallas_l64.hlo.txt","kind":"prefill","kernel":"pallas","len":64},
+            {"file":"prefill_pallas_l128.hlo.txt","kind":"prefill","kernel":"pallas","len":128},
+            {"file":"decode_pallas_b4_m192.hlo.txt","kind":"decode","kernel":"pallas","batch":4,"cap":192}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parse_and_query() {
+        let m = Manifest::parse(sample_manifest_json()).unwrap();
+        assert_eq!(m.model.n_layer, 8);
+        assert_eq!(m.prefill_buckets("pallas"), vec![64, 128]);
+        assert_eq!(m.decode_tiers("pallas"), vec![(4, 192)]);
+        assert!(m.find_prefill("pallas", 128).is_ok());
+        assert!(m.find_prefill("pallas", 999).is_err());
+        assert!(m.find_decode("pallas", 4, 192).is_ok());
+        assert!(m.find_decode("jnp", 4, 192).is_err());
+        assert_eq!(m.weights.index[0].len, 34816);
+        assert_eq!(m.tokens.eos, 260);
+    }
+
+    #[test]
+    fn kv_byte_math() {
+        let m = Manifest::parse(sample_manifest_json()).unwrap();
+        // 2 (K+V) * 4 heads * 32 dim * 4 bytes = 1024 B per token-layer
+        assert_eq!(m.model.kv_bytes_per_token_layer(), 1024);
+        assert_eq!(m.model.kv_bytes_per_token(), 8192);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

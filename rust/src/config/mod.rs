@@ -1,0 +1,9 @@
+//! Configuration: the AOT artifact manifest (written by `python -m
+//! compile.aot`) and the serving-side configuration (TOML / CLI).
+
+mod manifest;
+mod serve;
+
+pub use manifest::{ArtifactEntry, Manifest, ModelCfg, TokenMap, WeightEntry,
+                   WeightsIndex};
+pub use serve::{PolicyKind, ServeConfig, SqueezeConfig};

@@ -1,0 +1,282 @@
+//! Serving configuration: which eviction policy, what budget, whether
+//! SqueezeAttention reallocation is on, engine limits. Loadable from a JSON
+//! file (see `configs/*.json`) and overridable from the CLI.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Json;
+
+/// Sequence-wise KV eviction policy (the paper's baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Cache everything (the paper's "Full Cache" line).
+    Full,
+    /// Keep only the most recent tokens (Longformer / Mistral style).
+    SlidingWindow,
+    /// Keep `sinks` initial tokens + most recent (Xiao et al. 2023).
+    StreamingLlm,
+    /// Heavy-Hitter Oracle: keep top accumulated-attention tokens + recent.
+    H2o,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Full => "full",
+            PolicyKind::SlidingWindow => "sliding_window",
+            PolicyKind::StreamingLlm => "streaming_llm",
+            PolicyKind::H2o => "h2o",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" => Some(Self::Full),
+            "sliding_window" | "sliding" | "window" => Some(Self::SlidingWindow),
+            "streaming_llm" | "streaming" => Some(Self::StreamingLlm),
+            "h2o" | "heavy_hitter" => Some(Self::H2o),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [PolicyKind; 4] =
+        [PolicyKind::Full, PolicyKind::SlidingWindow, PolicyKind::StreamingLlm, PolicyKind::H2o];
+}
+
+/// SqueezeAttention (layer-dimension) settings — Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct SqueezeConfig {
+    /// Master switch: off = every layer gets `budget` (the baselines).
+    pub enabled: bool,
+    /// Hyperparameter `p` in (0, 1]: fraction of the initial budget the
+    /// unimportant group (G3) keeps. Paper recommends 0.3–0.4.
+    pub p: f64,
+    /// Number of k-means groups (paper: 3).
+    pub groups: usize,
+    /// Floor for any layer's budget after reallocation (tokens); protects
+    /// degenerate clusterings on very small budgets.
+    pub min_budget: usize,
+}
+
+impl Default for SqueezeConfig {
+    fn default() -> Self {
+        Self { enabled: true, p: 0.35, groups: 3, min_budget: 8 }
+    }
+}
+
+/// Engine-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Artifact directory (contains manifest.json).
+    pub artifacts: String,
+    /// Kernel variant to bind ("pallas" or "jnp" ablation).
+    pub kernel: String,
+    /// Sequence-wise policy.
+    pub policy: PolicyKind,
+    /// Per-layer token budget b_init (absolute tokens).
+    pub budget: usize,
+    /// When set, b_init = budget_frac × prompt_len (overrides `budget`);
+    /// this is the paper's "% of sequence length" axis in Fig. 3.
+    pub budget_frac: Option<f64>,
+    /// StreamingLLM sink count (paper: 4).
+    pub sinks: usize,
+    /// H2O: fraction of the budget reserved for the recency window.
+    pub h2o_recent_frac: f64,
+    pub squeeze: SqueezeConfig,
+    /// Max concurrent decode slots (bound to the largest artifact tier <= this).
+    pub max_batch: usize,
+    /// Default max new tokens per request.
+    pub max_new_tokens: usize,
+    /// Global KV pool capacity in bytes (0 = unlimited). OOM experiments set
+    /// this to emulate a fixed HBM budget.
+    pub kv_pool_bytes: usize,
+    /// Admission queue depth before backpressure rejects.
+    pub queue_depth: usize,
+}
+
+impl ServeConfig {
+    pub fn new(artifacts: impl Into<String>) -> Self {
+        Self {
+            artifacts: artifacts.into(),
+            kernel: "pallas".into(),
+            policy: PolicyKind::SlidingWindow,
+            budget: 128,
+            budget_frac: None,
+            sinks: 4,
+            h2o_recent_frac: 0.5,
+            squeeze: SqueezeConfig::default(),
+            max_batch: 8,
+            max_new_tokens: 64,
+            kv_pool_bytes: 0,
+            queue_depth: 256,
+        }
+    }
+
+    /// Load from a JSON config file; missing fields keep defaults.
+    pub fn from_json_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = Self::new(
+            j.req("artifacts")?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifacts must be a string"))?,
+        );
+        if let Some(k) = j.get("kernel").and_then(|v| v.as_str()) {
+            cfg.kernel = k.to_string();
+        }
+        if let Some(p) = j.get("policy").and_then(|v| v.as_str()) {
+            cfg.policy = PolicyKind::parse(p).ok_or_else(|| anyhow!("unknown policy {p}"))?;
+        }
+        if let Some(b) = j.get("budget").and_then(|v| v.as_usize()) {
+            cfg.budget = b;
+        }
+        if let Some(f) = j.get("budget_frac").and_then(|v| v.as_f64()) {
+            cfg.budget_frac = Some(f);
+        }
+        if let Some(s) = j.get("sinks").and_then(|v| v.as_usize()) {
+            cfg.sinks = s;
+        }
+        if let Some(f) = j.get("h2o_recent_frac").and_then(|v| v.as_f64()) {
+            cfg.h2o_recent_frac = f;
+        }
+        if let Some(sq) = j.get("squeeze") {
+            if let Some(e) = sq.get("enabled").and_then(|v| v.as_bool()) {
+                cfg.squeeze.enabled = e;
+            }
+            if let Some(p) = sq.get("p").and_then(|v| v.as_f64()) {
+                cfg.squeeze.p = p;
+            }
+            if let Some(g) = sq.get("groups").and_then(|v| v.as_usize()) {
+                cfg.squeeze.groups = g;
+            }
+            if let Some(m) = sq.get("min_budget").and_then(|v| v.as_usize()) {
+                cfg.squeeze.min_budget = m;
+            }
+        }
+        if let Some(b) = j.get("max_batch").and_then(|v| v.as_usize()) {
+            cfg.max_batch = b;
+        }
+        if let Some(m) = j.get("max_new_tokens").and_then(|v| v.as_usize()) {
+            cfg.max_new_tokens = m;
+        }
+        if let Some(k) = j.get("kv_pool_bytes").and_then(|v| v.as_usize()) {
+            cfg.kv_pool_bytes = k;
+        }
+        if let Some(q) = j.get("queue_depth").and_then(|v| v.as_usize()) {
+            cfg.queue_depth = q;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to JSON (for experiment logs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifacts", Json::str(&self.artifacts)),
+            ("kernel", Json::str(&self.kernel)),
+            ("policy", Json::str(self.policy.name())),
+            ("budget", Json::num(self.budget as f64)),
+            (
+                "budget_frac",
+                self.budget_frac.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("sinks", Json::num(self.sinks as f64)),
+            ("h2o_recent_frac", Json::num(self.h2o_recent_frac)),
+            (
+                "squeeze",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.squeeze.enabled)),
+                    ("p", Json::num(self.squeeze.p)),
+                    ("groups", Json::num(self.squeeze.groups as f64)),
+                    ("min_budget", Json::num(self.squeeze.min_budget as f64)),
+                ]),
+            ),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+            ("kv_pool_bytes", Json::num(self.kv_pool_bytes as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+        ])
+    }
+
+    pub fn with_policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_budget(mut self, budget: usize) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_budget_frac(mut self, frac: f64) -> Self {
+        self.budget_frac = Some(frac);
+        self
+    }
+
+    pub fn with_squeeze(mut self, enabled: bool) -> Self {
+        self.squeeze.enabled = enabled;
+        self
+    }
+
+    pub fn with_p(mut self, p: f64) -> Self {
+        self.squeeze.p = p;
+        self
+    }
+
+    pub fn with_kernel(mut self, kernel: &str) -> Self {
+        self.kernel = kernel.to_string();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ServeConfig::new("artifacts/tiny")
+            .with_policy(PolicyKind::H2o)
+            .with_budget(96)
+            .with_p(0.25);
+        let j = cfg.to_json();
+        let back = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(back.policy, PolicyKind::H2o);
+        assert_eq!(back.budget, 96);
+        assert!((back.squeeze.p - 0.25).abs() < 1e-12);
+        assert!(back.squeeze.enabled);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"artifacts": "a", "policy": "streaming_llm"}"#).unwrap();
+        let cfg = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.policy, PolicyKind::StreamingLlm);
+        assert_eq!(cfg.budget, 128);
+        assert_eq!(cfg.sinks, 4);
+    }
+
+    #[test]
+    fn builder_chain() {
+        let cfg = ServeConfig::new("x").with_squeeze(false).with_budget(7).with_budget_frac(0.2);
+        assert!(!cfg.squeeze.enabled);
+        assert_eq!(cfg.budget, 7);
+        assert_eq!(cfg.budget_frac, Some(0.2));
+    }
+
+    #[test]
+    fn bad_policy_errors() {
+        let j = Json::parse(r#"{"artifacts": "a", "policy": "zap"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+}

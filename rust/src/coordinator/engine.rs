@@ -1,0 +1,504 @@
+//! The serving engine: continuous batching over the AOT decode tiers, with
+//! SqueezeAttention layer-budget allocation and per-layer eviction.
+//!
+//! Lifecycle of a request (Algorithm 1 mapped onto the runtime):
+//!   1. **Prefill** — run the bucketed prefill artifact; collect the
+//!      per-layer cosine-similarity probe.
+//!   2. **Squeeze** — reduce cosine stats to per-layer means, k-means into
+//!      3 groups, reallocate `b_init` (allocator::allocate). With squeeze
+//!      disabled this is the uniform baseline plan.
+//!   3. **Compress prompt cache** — apply the sequence-wise policy per layer
+//!      with that layer's own budget.
+//!   4. **Decode loop** — batched steps on the smallest capacity tier that
+//!      fits the largest per-layer cache; after each step append the new KV
+//!      row, fold the attention-mass signal into H2O scores, and re-compress
+//!      any layer over budget.
+//!
+//! The engine is synchronous; the async server (`server.rs`) drives it from
+//! a dedicated thread.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{PolicyKind, ServeConfig};
+use crate::kvcache::{make_policy, EvictionPolicy, KvPool, Reservation, SequenceCache};
+use crate::metrics::ThroughputMeter;
+use crate::model::tokenizer::{self, check_token_map};
+use crate::model::sample;
+use crate::runtime::{Runtime, Tensor, TensorI32};
+use crate::squeeze::{allocate, BudgetPlan, CosineStats};
+use crate::util::Rng;
+
+use super::request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
+
+/// One sequence occupying a decode slot.
+struct Active {
+    req: Request,
+    cache: SequenceCache,
+    plan: BudgetPlan,
+    reservation: Reservation,
+    generated: Vec<i32>,
+    /// Absolute position of the *next* token to decode.
+    next_pos: usize,
+    last_token: i32,
+    effective_max_new: usize,
+    /// Set when the pool rejected growth mid-decode (paper's OOM cells).
+    oom: bool,
+    t_admit: Instant,
+    timing: RequestTiming,
+    peak_bytes: usize,
+}
+
+/// Engine-level aggregate statistics for one `generate_batch` run.
+#[derive(Debug, Clone, Default)]
+pub struct EngineRunStats {
+    pub decode_steps: u64,
+    pub generated_tokens: u64,
+    pub evictions: u64,
+    pub peak_pool_bytes: usize,
+    pub wall_s: f64,
+    /// Sum over steps of the capacity tier bound (proxy for KV traffic).
+    pub kv_slots_touched: u64,
+}
+
+pub struct Engine {
+    runtime: Runtime,
+    cfg: ServeConfig,
+    policy: Box<dyn EvictionPolicy>,
+    pool: KvPool,
+    batch: usize,
+    n_layer: usize,
+    row_elems: usize,
+    max_seq: usize,
+    /// Scratch decode buffers per (batch, capacity) tier (reused across
+    /// steps; padding is never zeroed — the kernel masks by cache_len).
+    scratch: std::collections::HashMap<(usize, usize), (Tensor, Tensor)>,
+    /// Optional cross-request cosine accumulation (Fig. 2 heatmaps).
+    collect_cosine: Option<CosineStats>,
+    /// Sampling RNG (deterministic; greedy sampling never consumes it).
+    rng: Rng,
+    pub last_run: EngineRunStats,
+}
+
+impl Engine {
+    pub fn new(cfg: ServeConfig) -> Result<Self> {
+        let runtime = Runtime::load(&cfg.artifacts, &cfg.kernel)?;
+        check_token_map(&runtime.manifest.tokens)?;
+        let n_layer = runtime.manifest.model.n_layer;
+        let row_elems = runtime.manifest.model.n_head * runtime.manifest.model.head_dim;
+        let max_seq = runtime.manifest.model.max_seq;
+        let batch = runtime
+            .decode_batches()
+            .into_iter()
+            .filter(|&b| b <= cfg.max_batch)
+            .max()
+            .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
+        let pool = KvPool::new(cfg.kv_pool_bytes);
+        let policy = make_policy(&cfg);
+        Ok(Self {
+            runtime,
+            policy,
+            pool,
+            batch,
+            n_layer,
+            row_elems,
+            max_seq,
+            scratch: Default::default(),
+            collect_cosine: None,
+            rng: Rng::seed_from_u64(0x5A5A_5A5A),
+            last_run: Default::default(),
+            cfg,
+        })
+    }
+
+    /// Swap the serving policy/budget configuration without reloading the
+    /// runtime (artifacts + kernel must match the loaded ones). Used for
+    /// policy sweeps — PJRT clients are expensive and, on some platforms,
+    /// unsafe to re-create within a process.
+    pub fn reconfigure(&mut self, cfg: ServeConfig) -> Result<()> {
+        if cfg.artifacts != self.cfg.artifacts || cfg.kernel != self.cfg.kernel {
+            return Err(anyhow!(
+                "reconfigure cannot change artifacts/kernel ({} vs {})",
+                cfg.artifacts,
+                self.cfg.artifacts
+            ));
+        }
+        self.batch = self
+            .runtime
+            .decode_batches()
+            .into_iter()
+            .filter(|&b| b <= cfg.max_batch)
+            .max()
+            .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
+        self.policy = make_policy(&cfg);
+        self.pool = KvPool::new(cfg.kv_pool_bytes);
+        self.cfg = cfg;
+        Ok(())
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Decode slot count actually bound (largest artifact batch <= max_batch).
+    pub fn slot_count(&self) -> usize {
+        self.batch
+    }
+
+    /// Start accumulating cosine heatmap stats across requests (Fig. 2).
+    pub fn enable_cosine_collection(&mut self) {
+        self.collect_cosine = Some(CosineStats::new(self.n_layer));
+    }
+
+    pub fn cosine_stats(&self) -> Option<&CosineStats> {
+        self.collect_cosine.as_ref()
+    }
+
+    fn budget_spec(&self) -> BudgetSpec {
+        if self.cfg.policy == PolicyKind::Full {
+            BudgetSpec::Unlimited
+        } else if let Some(f) = self.cfg.budget_frac {
+            BudgetSpec::Fraction(f)
+        } else {
+            BudgetSpec::Tokens(self.cfg.budget)
+        }
+    }
+
+    /// Serve a closed batch of requests to completion (continuous batching:
+    /// new requests are admitted into slots as earlier ones finish).
+    pub fn generate_batch(&mut self, requests: Vec<Request>) -> Vec<RequestOutput> {
+        let t0 = Instant::now();
+        let mut meter = ThroughputMeter::new();
+        let mut run = EngineRunStats::default();
+        let mut queue: VecDeque<Request> = requests.into();
+        let mut slots: Vec<Option<Active>> = (0..self.batch).map(|_| None).collect();
+        let mut outputs = Vec::new();
+
+        loop {
+            // Admission: fill free slots from the queue.
+            for s in 0..self.batch {
+                if slots[s].is_none() {
+                    if let Some(req) = queue.pop_front() {
+                        match self.admit(req, t0) {
+                            Ok(active) => slots[s] = Some(active),
+                            Err(out) => outputs.push(out),
+                        }
+                    }
+                }
+            }
+            if slots.iter().all(|s| s.is_none()) {
+                break;
+            }
+
+            // One batched decode step over all occupied slots.
+            if let Err(e) = self.step(&mut slots, &mut run, &mut meter) {
+                // Runtime failure: fail all in-flight requests loudly.
+                eprintln!("decode step failed: {e:#}");
+                for slot in slots.iter_mut() {
+                    if let Some(a) = slot.take() {
+                        outputs.push(Self::finish(a, FinishReason::Oom, t0));
+                    }
+                }
+                break;
+            }
+
+            // Collect finished sequences.
+            for slot in slots.iter_mut() {
+                let done = match slot {
+                    Some(a) => {
+                        a.oom
+                            || a.last_token == tokenizer::EOS
+                            || a.generated.len() >= a.effective_max_new
+                    }
+                    None => false,
+                };
+                if done {
+                    let a = slot.take().unwrap();
+                    let reason = if a.oom {
+                        FinishReason::Oom
+                    } else if a.last_token == tokenizer::EOS {
+                        FinishReason::Eos
+                    } else {
+                        FinishReason::Length
+                    };
+                    meter.add_request();
+                    outputs.push(Self::finish(a, reason, t0));
+                }
+            }
+        }
+
+        run.wall_s = t0.elapsed().as_secs_f64();
+        run.peak_pool_bytes = self.pool.peak();
+        run.generated_tokens = meter.tokens();
+        self.last_run = run;
+        outputs.sort_by_key(|o| o.id);
+        outputs
+    }
+
+    /// Prefill + squeeze + prompt compression. Returns the slot state, or a
+    /// terminal output (reject / OOM).
+    fn admit(&mut self, req: Request, t0: Instant) -> std::result::Result<Active, RequestOutput> {
+        let t_admit = Instant::now();
+        let mut timing = RequestTiming { queue_s: t_admit.duration_since(t0).as_secs_f64(), ..Default::default() };
+        let prompt_len = req.prompt.len();
+
+        let largest = self
+            .runtime
+            .manifest
+            .prefill_buckets(self.runtime.kernel())
+            .last()
+            .copied()
+            .unwrap_or(0);
+        if prompt_len == 0 || prompt_len > largest {
+            return Err(RequestOutput {
+                id: req.id,
+                generated: vec![],
+                finish: FinishReason::Rejected,
+                timing,
+                plan: BudgetPlan::uniform(self.n_layer, 0),
+                peak_kv_bytes: 0,
+                final_kv_tokens: 0,
+            });
+        }
+
+        let tp = Instant::now();
+        let pre = match self.runtime.prefill(&req.prompt) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("prefill failed: {e:#}");
+                return Err(RequestOutput {
+                    id: req.id,
+                    generated: vec![],
+                    finish: FinishReason::Rejected,
+                    timing,
+                    plan: BudgetPlan::uniform(self.n_layer, 0),
+                    peak_kv_bytes: 0,
+                    final_kv_tokens: 0,
+                });
+            }
+        };
+        timing.prefill_s = tp.elapsed().as_secs_f64();
+
+        // --- SqueezeAttention: importance -> groups -> budgets -------------
+        let ts = Instant::now();
+        let b_init = self.budget_spec().resolve(prompt_len, self.max_seq);
+        let plan = if self.cfg.squeeze.enabled && self.cfg.policy != PolicyKind::Full {
+            let mut stats = CosineStats::new(self.n_layer);
+            stats.observe(&pre.cos_sims, prompt_len);
+            allocate(&stats.layer_means(), b_init, &self.cfg.squeeze)
+        } else {
+            BudgetPlan::uniform(self.n_layer, b_init)
+        };
+        timing.squeeze_s = ts.elapsed().as_secs_f64();
+        if let Some(collect) = &mut self.collect_cosine {
+            collect.observe(&pre.cos_sims, prompt_len);
+        }
+
+        let mut cache = match SequenceCache::from_prefill(&pre.k, &pre.v, prompt_len) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("cache build failed: {e:#}");
+                return Err(RequestOutput {
+                    id: req.id,
+                    generated: vec![],
+                    finish: FinishReason::Rejected,
+                    timing,
+                    plan,
+                    peak_kv_bytes: 0,
+                    final_kv_tokens: 0,
+                });
+            }
+        };
+
+        // --- compress the prompt cache per layer with its own budget -------
+        for layer in 0..self.n_layer {
+            let budget = plan.budgets[layer];
+            if cache.layer_len(layer) > budget {
+                let keep = self.policy.keep(&cache.layers[layer].meta, budget);
+                cache.retain(layer, &keep).expect("policy produced valid keep-set");
+            }
+        }
+
+        let reservation = match Reservation::new(&self.pool, cache.bytes()) {
+            Ok(r) => r,
+            Err(_) => {
+                return Err(RequestOutput {
+                    id: req.id,
+                    generated: vec![],
+                    finish: FinishReason::Oom,
+                    timing,
+                    plan,
+                    peak_kv_bytes: 0,
+                    final_kv_tokens: cache.total_tokens(),
+                });
+            }
+        };
+
+        // First decoded token comes from the prefill logits.
+        let first = sample(&pre.logits.data, req.sampling, &mut self.rng);
+        timing.first_token_s = t_admit.elapsed().as_secs_f64() + timing.queue_s;
+
+        let effective_max_new = req
+            .max_new_tokens
+            .min(self.max_seq.saturating_sub(prompt_len + 8))
+            .max(1);
+        let peak = cache.bytes();
+        Ok(Active {
+            generated: vec![first],
+            next_pos: prompt_len,
+            last_token: first,
+            effective_max_new,
+            oom: false,
+            t_admit,
+            timing,
+            peak_bytes: peak,
+            req,
+            cache,
+            plan,
+            reservation,
+        })
+    }
+
+    fn finish(a: Active, reason: FinishReason, _t0: Instant) -> RequestOutput {
+        let mut timing = a.timing;
+        timing.total_s = a.t_admit.elapsed().as_secs_f64() + timing.queue_s;
+        let mut generated = a.generated;
+        // Trim a trailing EOS for downstream exact-match scoring? No: keep
+        // the raw stream; scorers decide.
+        if reason == FinishReason::Oom {
+            generated.clear();
+        }
+        RequestOutput {
+            id: a.req.id,
+            generated,
+            finish: reason,
+            timing,
+            plan: a.plan,
+            peak_kv_bytes: a.peak_bytes,
+            final_kv_tokens: a.cache.total_tokens(),
+        }
+    }
+
+    /// One batched decode step over occupied slots.
+    fn step(
+        &mut self,
+        slots: &mut [Option<Active>],
+        run: &mut EngineRunStats,
+        meter: &mut ThroughputMeter,
+    ) -> Result<()> {
+        let b = self.batch;
+        // Tier: smallest capacity covering every layer cache + the new token.
+        let needed = slots
+            .iter()
+            .flatten()
+            .map(|a| a.cache.max_layer_len())
+            .max()
+            .unwrap_or(0)
+            + 1;
+        let tier = self.runtime.decode_tier_for(b, needed)?;
+        let (_, m) = tier;
+        let (h, d) = (
+            self.runtime.manifest.model.n_head,
+            self.runtime.manifest.model.head_dim,
+        );
+
+        // Take the scratch pair out of the map so the runtime call below can
+        // borrow `self` — padding is never zeroed, the kernel masks by len.
+        let (mut k_buf, mut v_buf) = self.scratch.remove(&tier).unwrap_or_else(|| {
+            (
+                Tensor::zeros(&[self.n_layer, b, m, h, d]),
+                Tensor::zeros(&[self.n_layer, b, m, h, d]),
+            )
+        });
+
+        let mut tokens = vec![tokenizer::PAD; b];
+        let mut positions = vec![0i32; b];
+        let mut lens = vec![0i32; self.n_layer * b];
+        for (i, slot) in slots.iter().enumerate() {
+            if let Some(a) = slot {
+                tokens[i] = a.last_token;
+                positions[i] = a.next_pos as i32;
+                a.cache.write_into_batch(&mut k_buf, &mut v_buf, &mut lens, i)?;
+            }
+        }
+
+        let out = self.runtime.decode(
+            tier,
+            &TensorI32::from_vec(&[b], tokens)?,
+            &TensorI32::from_vec(&[b], positions)?,
+            &k_buf,
+            &v_buf,
+            &TensorI32::from_vec(&[self.n_layer, b], lens.clone())?,
+        );
+        self.scratch.insert(tier, (k_buf, v_buf));
+        let out = out?;
+        run.decode_steps += 1;
+        run.kv_slots_touched += (self.n_layer * b * m) as u64;
+        meter.add_decode_step();
+
+        let vocab = self.runtime.manifest.model.vocab;
+        let needs_scores = self.policy.needs_scores();
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let Some(a) = slot else { continue };
+
+            // Append the new KV row to every layer, then fold H2O scores.
+            let pos = a.next_pos as u32;
+            for layer in 0..self.n_layer {
+                let base = (layer * b + i) * self.row_elems;
+                let k_row = &out.new_k.data[base..base + self.row_elems];
+                let v_row = &out.new_v.data[base..base + self.row_elems];
+                a.cache.append(layer, k_row, v_row, pos)?;
+                if needs_scores {
+                    let sbase = (layer * b + i) * m;
+                    let n = a.cache.layer_len(layer).min(m);
+                    a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n]);
+                }
+            }
+
+            // Charge the pool for the appended rows; OOM kills the request.
+            let new_bytes = a.cache.bytes();
+            if a.reservation.resize(new_bytes).is_err() {
+                a.oom = true;
+                continue;
+            }
+            a.peak_bytes = a.peak_bytes.max(new_bytes);
+
+            // Sample the next token from this slot's logits row.
+            let row = &out.logits.data[i * vocab..(i + 1) * vocab];
+            let tok = sample(row, a.req.sampling, &mut self.rng);
+            a.generated.push(tok);
+            a.last_token = tok;
+            a.next_pos += 1;
+            meter.add_tokens(1);
+            if a.generated.len() == 1 {
+                a.timing.first_token_s = a.t_admit.elapsed().as_secs_f64() + a.timing.queue_s;
+            }
+
+            // Per-layer re-compression with each layer's own budget
+            // (Algorithm 1, lines 15–19).
+            for layer in 0..self.n_layer {
+                let budget = a.plan.budgets[layer];
+                if a.cache.layer_len(layer) > budget {
+                    let keep = self.policy.keep(&a.cache.layers[layer].meta, budget);
+                    a.cache.retain(layer, &keep)?;
+                    run.evictions += 1;
+                }
+            }
+            let shrunk = a.cache.bytes();
+            if shrunk != new_bytes {
+                let _ = a.reservation.resize(shrunk);
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer 3 — the serving coordinator: engine (continuous batching +
+//! SqueezeAttention budgets + eviction), router (multi-worker), TCP server,
+//! and the request/response types.
+
+pub mod engine;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use engine::{Engine, EngineRunStats};
+pub use request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
+pub use router::{RoutePolicy, Router};

@@ -1,0 +1,98 @@
+//! Request/response types flowing through the serving engine.
+
+use crate::model::Sampling;
+use crate::squeeze::BudgetPlan;
+
+/// How the per-layer initial budget `b_init` is specified (paper §4.1: "a
+/// unified cache budget (like 4096 tokens or 20% of prompt length)").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BudgetSpec {
+    /// Absolute tokens per layer.
+    Tokens(usize),
+    /// Fraction of the prompt length (clamped to >= 4 tokens).
+    Fraction(f64),
+    /// No limit (Full Cache).
+    Unlimited,
+}
+
+impl BudgetSpec {
+    /// Resolve to an absolute per-layer token budget for a given prompt.
+    pub fn resolve(&self, prompt_len: usize, max_seq: usize) -> usize {
+        match *self {
+            BudgetSpec::Tokens(n) => n.max(4),
+            BudgetSpec::Fraction(f) => ((prompt_len as f64 * f).round() as usize).max(4),
+            BudgetSpec::Unlimited => max_seq,
+        }
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self { id, prompt, max_new_tokens, sampling: Sampling::Greedy }
+    }
+}
+
+/// Why a request stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Model emitted EOS.
+    Eos,
+    /// Hit max_new_tokens (or the capacity clamp).
+    Length,
+    /// KV pool exhausted (the paper's "OOM" table cells).
+    Oom,
+    /// Rejected before prefill (queue backpressure).
+    Rejected,
+}
+
+/// Timing breakdown of one request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestTiming {
+    /// Queue wait before prefill started (s).
+    pub queue_s: f64,
+    /// Prefill execution (s).
+    pub prefill_s: f64,
+    /// Squeeze overhead: cosine-stat reduction + kmeans + allocation (s).
+    pub squeeze_s: f64,
+    /// First token latency from admission (s).
+    pub first_token_s: f64,
+    /// Total latency from admission (s).
+    pub total_s: f64,
+}
+
+/// The engine's answer to a request.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub generated: Vec<i32>,
+    pub finish: FinishReason,
+    pub timing: RequestTiming,
+    /// The layer-budget plan that served this request.
+    pub plan: BudgetPlan,
+    /// Peak KV bytes held by this sequence.
+    pub peak_kv_bytes: usize,
+    /// Total cached tokens (sum over layers) at end of generation.
+    pub final_kv_tokens: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_spec_resolution() {
+        assert_eq!(BudgetSpec::Tokens(64).resolve(100, 640), 64);
+        assert_eq!(BudgetSpec::Fraction(0.2).resolve(100, 640), 20);
+        assert_eq!(BudgetSpec::Fraction(0.001).resolve(100, 640), 4); // floor
+        assert_eq!(BudgetSpec::Unlimited.resolve(100, 640), 640);
+    }
+}

@@ -1,0 +1,140 @@
+//! Multi-worker router: spreads requests across engine workers.
+//!
+//! Each worker owns an `Engine` on a dedicated thread (the engine is
+//! synchronous; PJRT-CPU execution is compute-bound) and pulls work from its
+//! own channel. The router assigns each incoming request to the worker with
+//! the least outstanding work (least-loaded, falling back to round-robin on
+//! ties) — the same shape as vLLM's router in front of engine replicas.
+//! Plain std threading: the offline dependency set has no tokio.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+
+use super::engine::Engine;
+use super::request::{Request, RequestOutput};
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Job>,
+    inflight: Arc<AtomicUsize>,
+}
+
+struct Job {
+    request: Request,
+    reply: mpsc::Sender<RequestOutput>,
+}
+
+/// Routing discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+pub struct Router {
+    workers: Vec<WorkerHandle>,
+    next: AtomicUsize,
+    policy: RoutePolicy,
+}
+
+impl Router {
+    /// Spawn `n_workers` engines (each compiles its own executables).
+    ///
+    /// The PJRT client is not `Send` (it holds `Rc` internals), so each
+    /// engine is constructed *inside* its worker thread; construction errors
+    /// are reported back over a readiness channel before `spawn` returns.
+    pub fn spawn(cfg: ServeConfig, n_workers: usize, policy: RoutePolicy) -> Result<Self> {
+        let mut workers = Vec::new();
+        for w in 0..n_workers.max(1) {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let inflight2 = inflight.clone();
+            let cfg = cfg.clone();
+            let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+            std::thread::spawn(move || match Engine::new(cfg) {
+                Ok(engine) => {
+                    let _ = ready_tx.send(Ok(()));
+                    worker_loop(engine, rx, inflight2);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                }
+            });
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker {w} died during startup"))?
+                .map_err(|e| anyhow::anyhow!("worker {w} failed to start: {e}"))?;
+            workers.push(WorkerHandle { tx, inflight });
+        }
+        Ok(Self { workers, next: AtomicUsize::new(0), policy })
+    }
+
+    fn pick(&self) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len()
+            }
+            RoutePolicy::LeastLoaded => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, w)| (w.inflight.load(Ordering::Relaxed), *i))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Route one request; blocks until its worker finishes it.
+    pub fn submit(&self, request: Request) -> Result<RequestOutput> {
+        Ok(self.submit_async(request)?.recv()?)
+    }
+
+    /// Route one request; returns a receiver for the eventual output (lets a
+    /// caller pipeline many requests before collecting).
+    pub fn submit_async(&self, request: Request) -> Result<mpsc::Receiver<RequestOutput>> {
+        let w = &self.workers[self.pick()];
+        w.inflight.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        w.tx
+            .send(Job { request, reply })
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        Ok(rx)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.workers.iter().map(|w| w.inflight.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Worker loop: micro-batches whatever is queued (up to the engine's slot
+/// count) into one `generate_batch` call — the dynamic batching the paper's
+/// throughput tables rely on.
+fn worker_loop(mut engine: Engine, rx: mpsc::Receiver<Job>, inflight: Arc<AtomicUsize>) {
+    while let Ok(first) = rx.recv() {
+        let mut jobs = vec![first];
+        while jobs.len() < engine.slot_count() {
+            match rx.try_recv() {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+        let requests: Vec<Request> = jobs.iter().map(|j| j.request.clone()).collect();
+        let mut outputs = engine.generate_batch(requests);
+        // generate_batch returns outputs sorted by id; match them back.
+        for job in jobs {
+            let idx = outputs.iter().position(|o| o.id == job.request.id);
+            if let Some(i) = idx {
+                let _ = job.reply.send(outputs.swap_remove(i));
+            }
+            inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! JSON-lines TCP front-end over the router (std::net — no tokio in the
+//! offline dependency set; one thread per connection).
+//!
+//! Wire protocol (one JSON object per line):
+//!   -> {"id": 1, "prompt": [256, 5, 6, 257], "max_new_tokens": 32}
+//!   <- {"id": 1, "generated": [...], "finish": "eos", "total_s": 0.42}
+//!
+//! This is deliberately minimal — enough to drive the engine from any
+//! language and for the e2e example to exercise a real network path.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+use super::request::{FinishReason, Request};
+use super::router::Router;
+
+fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Eos => "eos",
+        FinishReason::Length => "length",
+        FinishReason::Oom => "oom",
+        FinishReason::Rejected => "rejected",
+    }
+}
+
+/// Parse one wire request line.
+pub fn parse_wire_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line)?;
+    let id = j.req("id")?.as_i64().ok_or_else(|| anyhow::anyhow!("bad id"))? as u64;
+    let prompt: Vec<i32> = j
+        .req("prompt")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?
+        .iter()
+        .filter_map(|v| v.as_i64().map(|x| x as i32))
+        .collect();
+    let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(64);
+    Ok(Request::new(id, prompt, max_new))
+}
+
+/// Encode one wire response line.
+pub fn encode_wire_response(out: &super::request::RequestOutput) -> String {
+    Json::obj(vec![
+        ("id", Json::num(out.id as f64)),
+        ("generated", Json::arr(out.generated.iter().map(|&t| Json::num(t as f64)))),
+        ("finish", Json::str(finish_str(out.finish))),
+        ("total_s", Json::num(out.timing.total_s)),
+        ("first_token_s", Json::num(out.timing.first_token_s)),
+    ])
+    .to_string()
+}
+
+/// Serve until the listener errors. Each connection may pipeline requests.
+pub fn serve(listener: TcpListener, router: Arc<Router>) -> Result<()> {
+    loop {
+        let (stream, _) = listener.accept()?;
+        let router = router.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle(stream, router) {
+                eprintln!("connection error: {e:#}");
+            }
+        });
+    }
+}
+
+fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_wire_request(&line) {
+            Ok(req) => {
+                let out = router.submit(req)?;
+                writeln!(writer, "{}", encode_wire_response(&out))?;
+            }
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str(e.to_string()))])
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{RequestOutput, RequestTiming};
+    use crate::squeeze::BudgetPlan;
+
+    #[test]
+    fn wire_request_parse() {
+        let r = parse_wire_request(r#"{"id": 3, "prompt": [256, 5], "max_new_tokens": 9}"#)
+            .unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, vec![256, 5]);
+        assert_eq!(r.max_new_tokens, 9);
+        // default max_new
+        let r2 = parse_wire_request(r#"{"id": 1, "prompt": []}"#).unwrap();
+        assert_eq!(r2.max_new_tokens, 64);
+        assert!(parse_wire_request("{notjson").is_err());
+    }
+
+    #[test]
+    fn wire_response_encode_roundtrip() {
+        let out = RequestOutput {
+            id: 7,
+            generated: vec![1, 2, 260],
+            finish: FinishReason::Eos,
+            timing: RequestTiming { total_s: 0.5, first_token_s: 0.1, ..Default::default() },
+            plan: BudgetPlan::uniform(2, 8),
+            peak_kv_bytes: 0,
+            final_kv_tokens: 0,
+        };
+        let line = encode_wire_response(&out);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("eos"));
+        assert_eq!(j.get("generated").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

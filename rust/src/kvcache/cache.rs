@@ -1,0 +1,270 @@
+//! Per-sequence, per-layer KV cache owned by the coordinator.
+//!
+//! The cache is the 2-D object the paper manages: one `LayerCache` per
+//! attention layer, each holding a *different* number of tokens once
+//! SqueezeAttention has reallocated budgets. Rows are stored compacted (valid
+//! prefix), so eviction = select keep-set on metadata + in-place compaction,
+//! and the decode step only needs a `cache_len` per layer.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Tensor;
+
+/// Metadata for one cached token slot in one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlotMeta {
+    /// Absolute position of the token in the sequence (RoPE was applied with
+    /// this position; it never changes after eviction).
+    pub position: u32,
+    /// Accumulated attention mass received during decode (the H2O signal).
+    pub score: f64,
+}
+
+/// KV rows + metadata for one layer of one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct LayerCache {
+    /// `len * row_elems` f32, row-major.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub meta: Vec<SlotMeta>,
+}
+
+impl LayerCache {
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+}
+
+/// The full KV cache of one sequence.
+#[derive(Debug, Clone)]
+pub struct SequenceCache {
+    pub layers: Vec<LayerCache>,
+    /// Elements per KV row (= n_head * head_dim).
+    pub row_elems: usize,
+}
+
+impl SequenceCache {
+    pub fn new(n_layer: usize, row_elems: usize) -> Self {
+        Self { layers: vec![LayerCache::default(); n_layer], row_elems }
+    }
+
+    /// Build from prefill outputs `k`,`v` of shape `[n_layer, L, H, D]`,
+    /// keeping the first `prompt_len` rows of each layer.
+    pub fn from_prefill(k: &Tensor, v: &Tensor, prompt_len: usize) -> Result<Self> {
+        if k.shape.len() != 4 || k.shape != v.shape {
+            return Err(anyhow!("bad prefill cache shapes k={:?} v={:?}", k.shape, v.shape));
+        }
+        let (n_layer, l, h, d) = (k.shape[0], k.shape[1], k.shape[2], k.shape[3]);
+        if prompt_len > l {
+            return Err(anyhow!("prompt_len {prompt_len} > bucket {l}"));
+        }
+        let row = h * d;
+        let mut cache = Self::new(n_layer, row);
+        for layer in 0..n_layer {
+            let lc = &mut cache.layers[layer];
+            lc.k.reserve(prompt_len * row);
+            lc.v.reserve(prompt_len * row);
+            let base = layer * l * row;
+            lc.k.extend_from_slice(&k.data[base..base + prompt_len * row]);
+            lc.v.extend_from_slice(&v.data[base..base + prompt_len * row]);
+            lc.meta.extend((0..prompt_len).map(|p| SlotMeta { position: p as u32, score: 0.0 }));
+        }
+        Ok(cache)
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.layers[layer].len()
+    }
+
+    /// Total cached tokens across layers (the paper's 2-D cache size).
+    pub fn total_tokens(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+
+    /// Cache bytes (K+V f32 payload only; metadata is host bookkeeping).
+    pub fn bytes(&self) -> usize {
+        self.total_tokens() * self.row_elems * 2 * 4
+    }
+
+    /// Largest per-layer length (drives decode-tier selection).
+    pub fn max_layer_len(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+
+    /// Append one token's K/V row to `layer`.
+    pub fn append(&mut self, layer: usize, k_row: &[f32], v_row: &[f32], position: u32) -> Result<()> {
+        if k_row.len() != self.row_elems || v_row.len() != self.row_elems {
+            return Err(anyhow!("row size {} != {}", k_row.len(), self.row_elems));
+        }
+        let lc = &mut self.layers[layer];
+        lc.k.extend_from_slice(k_row);
+        lc.v.extend_from_slice(v_row);
+        lc.meta.push(SlotMeta { position, score: 0.0 });
+        Ok(())
+    }
+
+    /// Accumulate decode attention mass into slot scores of `layer`.
+    /// `scores[i]` corresponds to slot `i`; extra entries (padding) ignored.
+    pub fn add_scores(&mut self, layer: usize, scores: &[f32]) {
+        let lc = &mut self.layers[layer];
+        for (slot, &s) in lc.meta.iter_mut().zip(scores.iter()) {
+            slot.score += s as f64;
+        }
+    }
+
+    /// Keep exactly the slots in `keep` (sorted ascending, in-range, unique)
+    /// for `layer`, compacting payload + metadata.
+    pub fn retain(&mut self, layer: usize, keep: &[usize]) -> Result<()> {
+        let lc = &mut self.layers[layer];
+        let n = lc.len();
+        let row = self.row_elems;
+        let mut prev: Option<usize> = None;
+        for &i in keep {
+            if i >= n {
+                return Err(anyhow!("keep index {i} >= len {n}"));
+            }
+            if let Some(p) = prev {
+                if i <= p {
+                    return Err(anyhow!("keep indices must be strictly ascending"));
+                }
+            }
+            prev = Some(i);
+        }
+        let mut k = Vec::with_capacity(keep.len() * row);
+        let mut v = Vec::with_capacity(keep.len() * row);
+        let mut meta = Vec::with_capacity(keep.len());
+        for &i in keep {
+            k.extend_from_slice(&lc.k[i * row..(i + 1) * row]);
+            v.extend_from_slice(&lc.v[i * row..(i + 1) * row]);
+            meta.push(lc.meta[i]);
+        }
+        lc.k = k;
+        lc.v = v;
+        lc.meta = meta;
+        Ok(())
+    }
+
+    /// Copy this sequence's cache into slot `b` of a padded decode batch
+    /// buffer of shape `[n_layer, B, M, row_elems]` and fill `cache_lens`.
+    pub fn write_into_batch(
+        &self,
+        k_buf: &mut Tensor,
+        v_buf: &mut Tensor,
+        lens: &mut [i32],
+        b: usize,
+    ) -> Result<()> {
+        let (n_layer, bsz, m) = (k_buf.shape[0], k_buf.shape[1], k_buf.shape[2]);
+        let row = self.row_elems;
+        debug_assert_eq!(k_buf.shape[3] * k_buf.shape.get(4).copied().unwrap_or(1), row);
+        if self.n_layer() != n_layer || b >= bsz {
+            return Err(anyhow!("batch buffer mismatch"));
+        }
+        for layer in 0..n_layer {
+            let lc = &self.layers[layer];
+            if lc.len() >= m {
+                return Err(anyhow!(
+                    "layer {layer} has {} slots but tier capacity is {m} (needs len < M)",
+                    lc.len()
+                ));
+            }
+            let base = (layer * bsz + b) * m * row;
+            k_buf.data[base..base + lc.k.len()].copy_from_slice(&lc.k);
+            v_buf.data[base..base + lc.v.len()].copy_from_slice(&lc.v);
+            lens[layer * bsz + b] = lc.len() as i32;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_prefill(n_layer: usize, l: usize, h: usize, d: usize) -> (Tensor, Tensor) {
+        let n = n_layer * l * h * d;
+        let k = Tensor::from_vec(&[n_layer, l, h, d], (0..n).map(|i| i as f32).collect()).unwrap();
+        let v = Tensor::from_vec(&[n_layer, l, h, d], (0..n).map(|i| -(i as f32)).collect()).unwrap();
+        (k, v)
+    }
+
+    #[test]
+    fn from_prefill_truncates_to_prompt() {
+        let (k, v) = mk_prefill(2, 8, 2, 4);
+        let c = SequenceCache::from_prefill(&k, &v, 5).unwrap();
+        assert_eq!(c.n_layer(), 2);
+        assert_eq!(c.layer_len(0), 5);
+        assert_eq!(c.total_tokens(), 10);
+        // First row of layer 1 = elements at offset 1*8*8.
+        assert_eq!(c.layers[1].k[0], 64.0);
+        assert_eq!(c.layers[0].meta[3].position, 3);
+    }
+
+    #[test]
+    fn append_and_scores() {
+        let mut c = SequenceCache::new(1, 4);
+        c.append(0, &[1.0; 4], &[2.0; 4], 0).unwrap();
+        c.append(0, &[3.0; 4], &[4.0; 4], 1).unwrap();
+        c.add_scores(0, &[0.25, 0.75, 99.0]); // padding entry ignored
+        assert_eq!(c.layers[0].meta[0].score, 0.25);
+        assert_eq!(c.layers[0].meta[1].score, 0.75);
+        assert!(c.append(0, &[0.0; 3], &[0.0; 3], 2).is_err());
+    }
+
+    #[test]
+    fn retain_compacts() {
+        let mut c = SequenceCache::new(1, 2);
+        for i in 0..5 {
+            c.append(0, &[i as f32; 2], &[10.0 + i as f32; 2], i).unwrap();
+        }
+        c.retain(0, &[0, 3, 4]).unwrap();
+        assert_eq!(c.layer_len(0), 3);
+        assert_eq!(c.layers[0].k, vec![0.0, 0.0, 3.0, 3.0, 4.0, 4.0]);
+        assert_eq!(c.layers[0].meta[1].position, 3);
+        // invalid keep sets
+        assert!(c.retain(0, &[2, 1]).is_err());
+        assert!(c.retain(0, &[9]).is_err());
+    }
+
+    #[test]
+    fn write_into_batch_pads() {
+        let (k, v) = mk_prefill(2, 4, 1, 2);
+        let c = SequenceCache::from_prefill(&k, &v, 3).unwrap();
+        let mut kb = Tensor::zeros(&[2, 2, 6, 1, 2]);
+        let mut vb = Tensor::zeros(&[2, 2, 6, 1, 2]);
+        let mut lens = vec![0i32; 4];
+        c.write_into_batch(&mut kb, &mut vb, &mut lens, 1).unwrap();
+        assert_eq!(lens, vec![0, 3, 0, 3]);
+        // layer 0, slot b=1, first row == first prefill row of layer 0
+        let base = (0 * 2 + 1) * 6 * 2;
+        assert_eq!(&kb.data[base..base + 2], &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn write_into_batch_rejects_full_capacity() {
+        let mut c = SequenceCache::new(1, 2);
+        for i in 0..4 {
+            c.append(0, &[0.0; 2], &[0.0; 2], i).unwrap();
+        }
+        let mut kb = Tensor::zeros(&[1, 1, 4, 1, 2]);
+        let mut vb = Tensor::zeros(&[1, 1, 4, 1, 2]);
+        let mut lens = vec![0i32; 1];
+        // len == M is not allowed: the step appends at slot len.
+        assert!(c.write_into_batch(&mut kb, &mut vb, &mut lens, 0).is_err());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut c = SequenceCache::new(2, 4);
+        c.append(0, &[0.0; 4], &[0.0; 4], 0).unwrap();
+        c.append(1, &[0.0; 4], &[0.0; 4], 0).unwrap();
+        assert_eq!(c.bytes(), 2 * 4 * 2 * 4);
+    }
+}

@@ -1,0 +1,31 @@
+//! Full Cache: the no-eviction reference point (dashed line in Fig. 3).
+
+use super::EvictionPolicy;
+use crate::kvcache::cache::SlotMeta;
+
+pub struct FullCache;
+
+impl EvictionPolicy for FullCache {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    /// Ignores the budget entirely — Full Cache keeps everything. The engine
+    /// must pair this policy with an unbounded budget / largest tier.
+    fn keep(&self, meta: &[SlotMeta], _budget: usize) -> Vec<usize> {
+        (0..meta.len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::eviction::mk_meta;
+
+    #[test]
+    fn keeps_everything() {
+        let meta = mk_meta(10);
+        assert_eq!(FullCache.keep(&meta, 3).len(), 10);
+        assert_eq!(FullCache.keep(&meta, 100).len(), 10);
+    }
+}

@@ -1,0 +1,115 @@
+//! Heavy-Hitter Oracle (Zhang et al. 2024): rank tokens by accumulated
+//! attention mass and keep the heavy hitters, alongside a recency window
+//! (H2O keeps `budget/2` recent + `budget/2` top-score by default).
+//!
+//! The score signal comes for free from the decode kernel (per-slot
+//! probability mass summed over heads), accumulated into `SlotMeta.score` by
+//! the engine after every step.
+
+use super::EvictionPolicy;
+use crate::kvcache::cache::SlotMeta;
+
+pub struct H2o {
+    /// Fraction of the budget reserved for the most recent tokens.
+    recent_frac: f64,
+}
+
+impl H2o {
+    pub fn new(recent_frac: f64) -> Self {
+        Self { recent_frac: recent_frac.clamp(0.0, 1.0) }
+    }
+}
+
+impl EvictionPolicy for H2o {
+    fn name(&self) -> &'static str {
+        "h2o"
+    }
+
+    fn needs_scores(&self) -> bool {
+        true
+    }
+
+    fn keep(&self, meta: &[SlotMeta], budget: usize) -> Vec<usize> {
+        let n = meta.len();
+        if n <= budget {
+            return (0..n).collect();
+        }
+        let recent = ((budget as f64 * self.recent_frac).round() as usize).min(budget);
+        let heavy = budget - recent;
+        let recent_start = n - recent;
+
+        // Top-`heavy` scores among the non-recent prefix; ties broken toward
+        // older tokens (stable heavy-hitter behaviour).
+        let mut prefix: Vec<usize> = (0..recent_start).collect();
+        prefix.sort_by(|&a, &b| {
+            meta[b].score
+                .partial_cmp(&meta[a].score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut keep: Vec<usize> = prefix.into_iter().take(heavy).collect();
+        keep.extend(recent_start..n);
+        keep.sort_unstable();
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::cache::SlotMeta;
+    use crate::kvcache::eviction::mk_meta;
+
+    fn meta_with_scores(scores: &[f64]) -> Vec<SlotMeta> {
+        scores
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| SlotMeta { position: i as u32, score: s })
+            .collect()
+    }
+
+    #[test]
+    fn keeps_heavy_hitters_and_recent() {
+        // 8 slots; slot 1 and 3 are heavy. budget 4, half recent.
+        let meta = meta_with_scores(&[0.0, 9.0, 0.1, 8.0, 0.2, 0.0, 0.0, 0.0]);
+        let keep = H2o::new(0.5).keep(&meta, 4);
+        assert_eq!(keep, vec![1, 3, 6, 7]);
+    }
+
+    #[test]
+    fn pure_recency_when_frac_one() {
+        let meta = meta_with_scores(&[9.0, 9.0, 9.0, 0.0, 0.0]);
+        let keep = H2o::new(1.0).keep(&meta, 2);
+        assert_eq!(keep, vec![3, 4]);
+    }
+
+    #[test]
+    fn pure_heavy_when_frac_zero() {
+        let meta = meta_with_scores(&[1.0, 9.0, 2.0, 8.0, 3.0]);
+        let keep = H2o::new(0.0).keep(&meta, 2);
+        assert_eq!(keep, vec![1, 3]);
+    }
+
+    #[test]
+    fn tie_break_prefers_older() {
+        let meta = meta_with_scores(&[5.0, 5.0, 5.0, 5.0]);
+        let keep = H2o::new(0.0).keep(&meta, 2);
+        assert_eq!(keep, vec![0, 1]);
+    }
+
+    #[test]
+    fn under_budget_identity() {
+        let meta = mk_meta(3);
+        assert_eq!(H2o::new(0.5).keep(&meta, 10), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn result_sorted_and_bounded() {
+        let meta = meta_with_scores(&[0.5, 0.1, 0.9, 0.3, 0.7, 0.2, 0.8, 0.4]);
+        for budget in 1..8 {
+            let keep = H2o::new(0.5).keep(&meta, budget);
+            assert_eq!(keep.len(), budget);
+            assert!(keep.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Sequence-wise KV eviction policies — the paper's baselines.
+//!
+//! A policy is a pure function from slot metadata to a keep-set: given the
+//! per-slot `(position, accumulated attention score)` of one layer and that
+//! layer's budget, return the (strictly ascending) indices to keep. The
+//! engine applies the same policy per layer with *different* budgets once
+//! SqueezeAttention has reallocated them — the policies themselves are
+//! budget-agnostic, which is exactly the orthogonality the paper exploits.
+
+mod full;
+mod h2o;
+mod sliding_window;
+mod streaming_llm;
+
+pub use full::FullCache;
+pub use h2o::H2o;
+pub use sliding_window::SlidingWindow;
+pub use streaming_llm::StreamingLlm;
+
+use crate::config::{PolicyKind, ServeConfig};
+use crate::kvcache::cache::SlotMeta;
+
+/// A sequence-wise KV-cache compressor (`C_seq` in Algorithm 1).
+pub trait EvictionPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Indices (strictly ascending) of slots to keep; `len() <= budget`
+    /// whenever `budget <= meta.len()`, and identity when under budget.
+    fn keep(&self, meta: &[SlotMeta], budget: usize) -> Vec<usize>;
+
+    /// Whether this policy consumes the decode attention-mass signal.
+    fn needs_scores(&self) -> bool {
+        false
+    }
+}
+
+/// Instantiate the policy selected by a serve config.
+pub fn make_policy(cfg: &ServeConfig) -> Box<dyn EvictionPolicy> {
+    match cfg.policy {
+        PolicyKind::Full => Box::new(FullCache),
+        PolicyKind::SlidingWindow => Box::new(SlidingWindow),
+        PolicyKind::StreamingLlm => Box::new(StreamingLlm::new(cfg.sinks)),
+        PolicyKind::H2o => Box::new(H2o::new(cfg.h2o_recent_frac)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn mk_meta(n: usize) -> Vec<SlotMeta> {
+    (0..n).map(|i| SlotMeta { position: i as u32, score: 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+
+    #[test]
+    fn factory_matches_kind() {
+        let mut cfg = ServeConfig::new("x");
+        for (kind, name) in [
+            (PolicyKind::Full, "full"),
+            (PolicyKind::SlidingWindow, "sliding_window"),
+            (PolicyKind::StreamingLlm, "streaming_llm"),
+            (PolicyKind::H2o, "h2o"),
+        ] {
+            cfg.policy = kind;
+            assert_eq!(make_policy(&cfg).name(), name);
+        }
+    }
+}

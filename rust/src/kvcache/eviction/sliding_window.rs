@@ -1,0 +1,44 @@
+//! Sliding Window Attention (Beltagy et al. 2020): keep only the most
+//! recent `budget` tokens — the "Local" strategy. The paper's best baseline
+//! for Mistral/Mixtral, whose pretraining used windowed attention.
+
+use super::EvictionPolicy;
+use crate::kvcache::cache::SlotMeta;
+
+pub struct SlidingWindow;
+
+impl EvictionPolicy for SlidingWindow {
+    fn name(&self) -> &'static str {
+        "sliding_window"
+    }
+
+    fn keep(&self, meta: &[SlotMeta], budget: usize) -> Vec<usize> {
+        let n = meta.len();
+        let start = n.saturating_sub(budget);
+        (start..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::eviction::mk_meta;
+
+    #[test]
+    fn keeps_most_recent() {
+        let meta = mk_meta(10);
+        assert_eq!(SlidingWindow.keep(&meta, 3), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn under_budget_identity() {
+        let meta = mk_meta(2);
+        assert_eq!(SlidingWindow.keep(&meta, 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_budget_empty() {
+        let meta = mk_meta(4);
+        assert!(SlidingWindow.keep(&meta, 0).is_empty());
+    }
+}

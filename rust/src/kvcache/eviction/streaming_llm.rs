@@ -1,0 +1,70 @@
+//! StreamingLLM (Xiao et al. 2023): attention sinks. Keep the first `sinks`
+//! tokens of the sequence (paper recommends n=4) plus the most recent
+//! `budget - sinks` tokens.
+//!
+//! "First tokens of the sequence" means smallest *original positions*, which
+//! after compaction are simply the lowest current indices — eviction never
+//! reorders slots.
+
+use super::EvictionPolicy;
+use crate::kvcache::cache::SlotMeta;
+
+pub struct StreamingLlm {
+    sinks: usize,
+}
+
+impl StreamingLlm {
+    pub fn new(sinks: usize) -> Self {
+        Self { sinks }
+    }
+}
+
+impl EvictionPolicy for StreamingLlm {
+    fn name(&self) -> &'static str {
+        "streaming_llm"
+    }
+
+    fn keep(&self, meta: &[SlotMeta], budget: usize) -> Vec<usize> {
+        let n = meta.len();
+        if n <= budget {
+            return (0..n).collect();
+        }
+        let sinks = self.sinks.min(budget);
+        let recent = budget - sinks;
+        let mut keep: Vec<usize> = (0..sinks).collect();
+        keep.extend(n - recent..n);
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::eviction::mk_meta;
+
+    #[test]
+    fn sinks_plus_recent() {
+        let meta = mk_meta(10);
+        let keep = StreamingLlm::new(4).keep(&meta, 6);
+        assert_eq!(keep, vec![0, 1, 2, 3, 8, 9]);
+    }
+
+    #[test]
+    fn budget_smaller_than_sinks() {
+        let meta = mk_meta(10);
+        let keep = StreamingLlm::new(4).keep(&meta, 2);
+        assert_eq!(keep, vec![0, 1]);
+    }
+
+    #[test]
+    fn under_budget_identity() {
+        let meta = mk_meta(5);
+        assert_eq!(StreamingLlm::new(4).keep(&meta, 8), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn exact_budget_boundary() {
+        let meta = mk_meta(6);
+        assert_eq!(StreamingLlm::new(4).keep(&meta, 6).len(), 6);
+    }
+}

@@ -1,0 +1,10 @@
+//! KV-cache substrate: per-sequence 2-D caches (layer × token), the global
+//! byte pool (the HBM stand-in), and the sequence-wise eviction policies.
+
+pub mod cache;
+pub mod eviction;
+pub mod pool;
+
+pub use cache::{LayerCache, SequenceCache, SlotMeta};
+pub use eviction::{make_policy, EvictionPolicy, FullCache, H2o, SlidingWindow, StreamingLlm};
+pub use pool::{KvPool, OutOfMemory, Reservation};

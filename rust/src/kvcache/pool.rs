@@ -1,0 +1,200 @@
+//! Global KV memory pool with byte-granular accounting.
+//!
+//! Plays the role of the GPU HBM budget in the paper's Tables 3/9 and Fig. 4:
+//! every cached token is charged here, OOM = a reservation that does not fit.
+//! `capacity = 0` means unlimited (accuracy experiments); throughput/OOM
+//! experiments set a finite capacity so Full Cache hits the same wall the
+//! paper's A100s do.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Returned when a reservation exceeds remaining pool capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfMemory {
+    pub requested: usize,
+    pub in_use: usize,
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KV pool OOM: requested {} B with {}/{} B in use",
+            self.requested, self.in_use, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
+
+/// Shared KV pool. Cloning shares the underlying accounting.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    capacity: usize, // 0 = unlimited
+    in_use: AtomicUsize,
+    peak: AtomicUsize,
+    oom_events: AtomicUsize,
+}
+
+impl KvPool {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                capacity: capacity_bytes,
+                in_use: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+                oom_events: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    pub fn unlimited() -> Self {
+        Self::new(0)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.inner.in_use.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn oom_events(&self) -> usize {
+        self.inner.oom_events.load(Ordering::Relaxed)
+    }
+
+    /// Reserve `bytes`; fails atomically with `OutOfMemory` when capped.
+    pub fn reserve(&self, bytes: usize) -> Result<(), OutOfMemory> {
+        if self.inner.capacity == 0 {
+            let now = self.inner.in_use.fetch_add(bytes, Ordering::Relaxed) + bytes;
+            self.inner.peak.fetch_max(now, Ordering::Relaxed);
+            return Ok(());
+        }
+        let mut cur = self.inner.in_use.load(Ordering::Relaxed);
+        loop {
+            let next = cur + bytes;
+            if next > self.inner.capacity {
+                self.inner.oom_events.fetch_add(1, Ordering::Relaxed);
+                return Err(OutOfMemory {
+                    requested: bytes,
+                    in_use: cur,
+                    capacity: self.inner.capacity,
+                });
+            }
+            match self.inner.in_use.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.inner.peak.fetch_max(next, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Release previously reserved bytes.
+    pub fn release(&self, bytes: usize) {
+        let prev = self.inner.in_use.fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(prev >= bytes, "pool release underflow: {prev} - {bytes}");
+    }
+}
+
+/// RAII reservation that releases on drop and supports resizing as a
+/// sequence's cache grows (append) or shrinks (eviction).
+pub struct Reservation {
+    pool: KvPool,
+    bytes: usize,
+}
+
+impl Reservation {
+    pub fn new(pool: &KvPool, bytes: usize) -> Result<Self, OutOfMemory> {
+        pool.reserve(bytes)?;
+        Ok(Self { pool: pool.clone(), bytes })
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Adjust the reservation to `new_bytes` (grow may OOM; shrink cannot).
+    pub fn resize(&mut self, new_bytes: usize) -> Result<(), OutOfMemory> {
+        if new_bytes > self.bytes {
+            self.pool.reserve(new_bytes - self.bytes)?;
+        } else {
+            self.pool.release(self.bytes - new_bytes);
+        }
+        self.bytes = new_bytes;
+        Ok(())
+    }
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        self.pool.release(self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_roundtrip() {
+        let pool = KvPool::new(100);
+        pool.reserve(60).unwrap();
+        assert_eq!(pool.in_use(), 60);
+        assert!(pool.reserve(50).is_err());
+        assert_eq!(pool.oom_events(), 1);
+        pool.release(60);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.peak(), 60);
+    }
+
+    #[test]
+    fn unlimited_never_ooms() {
+        let pool = KvPool::unlimited();
+        pool.reserve(usize::MAX / 4).unwrap();
+        assert_eq!(pool.oom_events(), 0);
+    }
+
+    #[test]
+    fn reservation_raii() {
+        let pool = KvPool::new(100);
+        {
+            let mut r = Reservation::new(&pool, 40).unwrap();
+            r.resize(80).unwrap();
+            assert_eq!(pool.in_use(), 80);
+            assert!(r.resize(200).is_err());
+            assert_eq!(pool.in_use(), 80); // failed grow leaves state intact
+            r.resize(10).unwrap();
+            assert_eq!(pool.in_use(), 10);
+        }
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn shared_accounting_across_clones() {
+        let pool = KvPool::new(100);
+        let p2 = pool.clone();
+        pool.reserve(70).unwrap();
+        assert!(p2.reserve(40).is_err());
+        p2.release(70);
+        assert_eq!(pool.in_use(), 0);
+    }
+}

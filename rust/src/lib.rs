@@ -1,0 +1,37 @@
+//! # SqueezeAttention
+//!
+//! A reproduction of *SqueezeAttention: 2D Management of KV-Cache in LLM
+//! Inference via Layer-wise Optimal Budget* (ICLR 2025) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: continuous
+//!   batching, KV-cache pool, sequence-wise eviction policies (Sliding
+//!   Window / StreamingLLM / H2O), and the paper's layer-wise budget
+//!   allocator driven by the cosine-similarity importance probe.
+//! * **Layer 2** — a JAX transformer AOT-lowered to HLO-text artifacts
+//!   (`python/compile/model.py`), executed via PJRT (`runtime`).
+//! * **Layer 1** — Pallas kernels for prefill flash attention, budget-masked
+//!   decode attention (which also emits the H2O signal), and the cosine
+//!   probe (`python/compile/kernels/`).
+//!
+//! Quickstart:
+//! ```no_run
+//! use squeezeattention::config::ServeConfig;
+//! use squeezeattention::coordinator::{Engine, Request};
+//!
+//! let cfg = ServeConfig::new("artifacts/tiny");
+//! let mut engine = Engine::new(cfg).unwrap();
+//! let out = engine.generate_batch(vec![Request::new(0, vec![256, 5, 257], 16)]);
+//! println!("{:?}", out[0].generated);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod squeeze;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,195 @@
+//! `squeeze-serve` — the serving launcher.
+//!
+//! Subcommands:
+//!   serve     run the TCP JSON-lines server over a worker pool
+//!   generate  one-shot: run a synthetic workload batch and print results
+//!   inspect   print manifest / artifact inventory
+//!   project   paper-scale cost-model projection (no artifacts needed)
+//!
+//! Run `squeeze-serve help` for flags.
+
+use anyhow::{anyhow, Result};
+
+use squeezeattention::config::{PolicyKind, ServeConfig};
+use squeezeattention::coordinator::{Engine, Request, RoutePolicy, Router};
+use squeezeattention::model::tokenizer;
+use squeezeattention::simulator::{self, KvPolicy};
+use squeezeattention::util::Args;
+use squeezeattention::workload::{answer_accuracy, trim_at_eos, TraceSpec};
+
+const HELP: &str = "\
+squeeze-serve — SqueezeAttention serving coordinator
+
+USAGE: squeeze-serve <command> [flags]
+
+COMMANDS
+  serve     --listen 127.0.0.1:7177 --workers 1 [engine flags]
+  generate  --n 8 --prompt-len 192 --max-new 48 [--task copy] [--seed 0]
+            [--verbose] [engine flags]
+  inspect   --artifacts artifacts/tiny
+  project   --model Mistral-7B --prompt-len 512 --gen-len 1024
+            --batches 1,32,64,128,224 --budget-frac 0.2
+  help      this text
+
+ENGINE FLAGS (serve/generate)
+  --artifacts DIR      artifact directory           [artifacts/tiny]
+  --config FILE        JSON ServeConfig (flags override)
+  --policy P           full|sliding_window|streaming_llm|h2o  [sliding_window]
+  --budget N           per-layer token budget b_init          [128]
+  --budget-frac F      b_init = F * prompt_len (overrides --budget)
+  --no-squeeze         disable layer-budget reallocation
+  --p F                squeeze hyperparameter p               [0.35]
+  --max-batch N        decode slots                           [8]
+  --kernel K           pallas|jnp                             [pallas]
+  --kv-pool-mib N      KV pool capacity (0 = unlimited)       [0]
+";
+
+fn engine_config(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => ServeConfig::from_json_file(&path)?,
+        None => ServeConfig::new(args.str("artifacts", "artifacts/tiny")),
+    };
+    if args.opt_str("config").is_some() {
+        if let Some(a) = args.opt_str("artifacts") {
+            cfg.artifacts = a;
+        }
+    }
+    if let Some(p) = args.opt_str("policy") {
+        cfg.policy = PolicyKind::parse(&p).ok_or_else(|| anyhow!("unknown policy {p}"))?;
+    }
+    cfg.budget = args.usize("budget", cfg.budget)?;
+    if let Some(f) = args.opt_f64("budget-frac")? {
+        cfg.budget_frac = Some(f);
+    }
+    if args.flag("no-squeeze") {
+        cfg.squeeze.enabled = false;
+    }
+    cfg.squeeze.p = args.f64("p", cfg.squeeze.p)?;
+    cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
+    cfg.kernel = args.str("kernel", &cfg.kernel);
+    cfg.kv_pool_bytes = args.usize("kv-pool-mib", cfg.kv_pool_bytes >> 20)? << 20;
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["no-squeeze", "verbose"])?;
+    match args.positional(0).unwrap_or("help") {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "inspect" => cmd_inspect(&args),
+        "project" => cmd_project(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n\n{HELP}")),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = engine_config(args)?;
+    let listen = args.str("listen", "127.0.0.1:7177");
+    let workers = args.usize("workers", 1)?;
+    let router = std::sync::Arc::new(Router::spawn(cfg, workers, RoutePolicy::LeastLoaded)?);
+    let listener = std::net::TcpListener::bind(&listen)?;
+    println!("listening on {listen} with {} worker(s)", router.n_workers());
+    squeezeattention::coordinator::server::serve(listener, router)
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = engine_config(args)?;
+    let n = args.usize("n", 8)?;
+    let prompt_len = args.usize("prompt-len", 192)?;
+    let max_new = args.usize("max-new", 48)?;
+    let seed = args.u64("seed", 0)?;
+    let mut eng = Engine::new(cfg)?;
+    let mut spec = TraceSpec::closed(n, prompt_len, max_new, seed);
+    if let Some(t) = args.opt_str("task") {
+        let t = squeezeattention::workload::Task::parse(&t)
+            .ok_or_else(|| anyhow!("unknown task {t}"))?;
+        spec = spec.with_tasks(&[t]);
+    }
+    let items = spec.generate();
+    let reqs: Vec<Request> = items
+        .iter()
+        .enumerate()
+        .map(|(i, it)| Request::new(i as u64, it.sample.prompt.clone(), it.max_new_tokens))
+        .collect();
+    let outs = eng.generate_batch(reqs);
+    let mut total_acc = 0.0;
+    let mut scored = 0usize;
+    for (it, out) in items.iter().zip(&outs) {
+        let acc = answer_accuracy(&it.sample, &out.generated);
+        if acc.is_finite() {
+            total_acc += acc;
+            scored += 1;
+        }
+        if args.flag("verbose") {
+            println!(
+                "[{}] {:9} acc={:.2} finish={:?} gen={}",
+                out.id,
+                it.sample.task.name(),
+                acc,
+                out.finish,
+                tokenizer::render(trim_at_eos(&out.generated)),
+            );
+        }
+    }
+    let run = &eng.last_run;
+    println!(
+        "requests={} steps={} gen_tokens={} wall={:.2}s throughput={:.1} tok/s \
+         evictions={} peak_kv={}B mean_acc={:.3}",
+        outs.len(),
+        run.decode_steps,
+        run.generated_tokens,
+        run.wall_s,
+        run.generated_tokens as f64 / run.wall_s.max(1e-9),
+        run.evictions,
+        run.peak_pool_bytes,
+        total_acc / scored.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let m = squeezeattention::config::Manifest::load(args.str("artifacts", "artifacts/tiny"))?;
+    println!(
+        "model={} layers={} d_model={} heads={} vocab={} max_seq={} trained={}",
+        m.model.name, m.model.n_layer, m.model.d_model, m.model.n_head, m.model.vocab,
+        m.model.max_seq, m.trained
+    );
+    println!("kv bytes/token = {}", m.model.kv_bytes_per_token());
+    for a in &m.artifacts {
+        println!(
+            "  {:40} kind={:7} kernel={:6} len={:?} batch={:?} cap={:?}",
+            a.file, a.kind, a.kernel, a.len, a.batch, a.cap
+        );
+    }
+    Ok(())
+}
+
+fn cmd_project(args: &Args) -> Result<()> {
+    let model = args.str("model", "Mistral-7B");
+    let prompt_len = args.usize("prompt-len", 512)?;
+    let gen_len = args.usize("gen-len", 1024)?;
+    let batches = args.usize_list("batches", &[1, 32, 64, 128, 224])?;
+    let budget_frac = args.f64("budget-frac", 0.2)?;
+    let spec = simulator::by_name(&model)
+        .ok_or_else(|| anyhow!("unknown model {model}; see simulator::ZOO"))?;
+    let cluster = simulator::A100_40GB_X8;
+    let b_init = ((prompt_len + gen_len) as f64 * budget_frac).round() as usize;
+    let squeezed = KvPolicy::squeeze(spec.n_layer, spec.n_layer / 2, b_init, 0.35);
+    println!(
+        "{} on {} | prompt {} + gen {} | b_init {} tokens/layer",
+        spec.name, cluster.name, prompt_len, gen_len, b_init
+    );
+    println!("{:>6} | {:>18} | {:>18}", "batch", "full (tok/s)", "squeeze (tok/s)");
+    for b in batches {
+        let full = simulator::simulate_decode(spec, &cluster, &KvPolicy::Full, b, prompt_len, gen_len);
+        let sq = simulator::simulate_decode(spec, &cluster, &squeezed, b, prompt_len, gen_len);
+        let f = full.tokens_per_s.map(|t| format!("{t:.1}")).unwrap_or_else(|| "OOM".into());
+        let s = sq.tokens_per_s.map(|t| format!("{t:.1}")).unwrap_or_else(|| "OOM".into());
+        println!("{b:>6} | {f:>18} | {s:>18}");
+    }
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Serving metrics: latency histograms, throughput counters, memory peaks.
+
+mod histogram;
+mod throughput;
+
+pub use histogram::Histogram;
+pub use throughput::ThroughputMeter;

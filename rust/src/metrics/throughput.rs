@@ -1,0 +1,78 @@
+//! Token/request throughput accounting over a wall-clock window.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct ThroughputMeter {
+    start: Instant,
+    tokens: u64,
+    requests: u64,
+    decode_steps: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), tokens: 0, requests: 0, decode_steps: 0 }
+    }
+
+    pub fn add_tokens(&mut self, n: u64) {
+        self.tokens += n;
+    }
+
+    pub fn add_request(&mut self) {
+        self.requests += 1;
+    }
+
+    pub fn add_decode_step(&mut self) {
+        self.decode_steps += 1;
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn decode_steps(&self) -> u64 {
+        self.decode_steps
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Generated tokens per second since construction.
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.requests as f64 / self.elapsed_s().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        let mut m = ThroughputMeter::new();
+        m.add_tokens(10);
+        m.add_tokens(5);
+        m.add_request();
+        m.add_decode_step();
+        assert_eq!(m.tokens(), 15);
+        assert_eq!(m.requests(), 1);
+        assert_eq!(m.decode_steps(), 1);
+        assert!(m.tokens_per_s() > 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Model-adjacent utilities: the shared token vocabulary and sampling.
+
+pub mod sampling;
+pub mod tokenizer;
+
+pub use sampling::{argmax, sample, Sampling};

@@ -1,0 +1,87 @@
+//! Token sampling over logits rows.
+
+use crate::util::Rng;
+
+/// How to pick the next token from a logits row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Argmax (all evaluation benches use this — deterministic).
+    Greedy,
+    /// Softmax sampling with a temperature.
+    Temperature(f32),
+}
+
+/// Pick a token id from `logits`.
+pub fn sample(logits: &[f32], how: Sampling, rng: &mut Rng) -> i32 {
+    match how {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature(t) => {
+            let t = t.max(1e-4);
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f64> = logits.iter().map(|&l| (((l - m) / t) as f64).exp()).collect();
+            let total: f64 = exps.iter().sum();
+            let mut u = rng.f64() * total;
+            for (i, e) in exps.iter().enumerate() {
+                u -= e;
+                if u <= 0.0 {
+                    return i as i32;
+                }
+            }
+            (exps.len() - 1) as i32
+        }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > bv {
+            bv = l;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::seed_from_u64(0);
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        assert_eq!(sample(&logits, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_matches_greedy() {
+        let mut rng = Rng::seed_from_u64(7);
+        let logits = vec![0.0, 10.0, 1.0];
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, Sampling::Temperature(0.01), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_samples_in_range() {
+        let mut rng = Rng::seed_from_u64(3);
+        let logits = vec![1.0; 8];
+        for _ in 0..50 {
+            let t = sample(&logits, Sampling::Temperature(1.0), &mut rng);
+            assert!((0..8).contains(&t));
+        }
+    }
+
+    #[test]
+    fn temperature_covers_support() {
+        let mut rng = Rng::seed_from_u64(5);
+        let logits = vec![1.0, 1.0];
+        let mut seen = [false, false];
+        for _ in 0..100 {
+            seen[sample(&logits, Sampling::Temperature(1.0), &mut rng) as usize] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+}

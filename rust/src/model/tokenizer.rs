@@ -1,0 +1,93 @@
+//! Token vocabulary shared with the python task suite.
+//!
+//! The model is token-level (no text): ids 1..=223 are content tokens, the
+//! specials below mark task structure. The authoritative ids travel in
+//! `manifest.json` (`TokenMap`); the constants here are the compile-time
+//! mirror and are cross-checked against the manifest at engine startup.
+
+use crate::config::TokenMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 256;
+pub const SEP: i32 = 257;
+pub const QUERY: i32 = 258;
+pub const ANSWER: i32 = 259;
+pub const EOS: i32 = 260;
+pub const MARK: i32 = 261;
+pub const EQUALS: i32 = 262;
+pub const COMMA: i32 = 263;
+
+/// Content sub-ranges (mirror of python tasks.py).
+pub const KEY_LO: i32 = 1;
+pub const KEY_HI: i32 = 48;
+pub const VAL_LO: i32 = 49;
+pub const VAL_HI: i32 = 96;
+pub const WORD_LO: i32 = 1;
+pub const WORD_HI: i32 = 96;
+pub const LM_MOD: i32 = 96;
+pub const FIRST_K: usize = 8;
+
+/// Verify the compile-time constants against a manifest's token map; a
+/// mismatch means the artifacts were produced by an incompatible task suite.
+pub fn check_token_map(map: &TokenMap) -> anyhow::Result<()> {
+    let pairs = [
+        (PAD, map.pad, "pad"),
+        (BOS, map.bos, "bos"),
+        (SEP, map.sep, "sep"),
+        (QUERY, map.query, "query"),
+        (ANSWER, map.answer, "answer"),
+        (EOS, map.eos, "eos"),
+        (MARK, map.mark, "mark"),
+        (EQUALS, map.equals, "equals"),
+        (COMMA, map.comma, "comma"),
+    ];
+    for (ours, theirs, name) in pairs {
+        if ours != theirs {
+            return Err(anyhow::anyhow!(
+                "token map mismatch for {name}: rust {ours} vs manifest {theirs}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Render a token sequence for logs: specials as names, content as numbers.
+pub fn render(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| match t {
+            PAD => "<pad>".to_string(),
+            BOS => "<bos>".to_string(),
+            SEP => "<sep>".to_string(),
+            QUERY => "<q>".to_string(),
+            ANSWER => "<a>".to_string(),
+            EOS => "<eos>".to_string(),
+            MARK => "<mark>".to_string(),
+            EQUALS => "=".to_string(),
+            COMMA => ";".to_string(),
+            t => t.to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_specials() {
+        assert_eq!(render(&[BOS, 5, EQUALS, 60, COMMA, EOS]), "<bos> 5 = 60 ; <eos>");
+    }
+
+    #[test]
+    fn token_map_check() {
+        let ok = TokenMap {
+            pad: 0, bos: 256, sep: 257, query: 258, answer: 259,
+            eos: 260, mark: 261, equals: 262, comma: 263,
+        };
+        assert!(check_token_map(&ok).is_ok());
+        let bad = TokenMap { bos: 1, ..ok };
+        assert!(check_token_map(&bad).is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! PJRT runtime: loads HLO-text artifacts, uploads the weight set once as
+//! device buffers, and exposes typed `prefill` / `decode` calls.
+//!
+//! Pattern per /opt/xla-example: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b`. Executables are compiled lazily per
+//! (kind, shape-tier) and memoized; weights are device-resident so a decode
+//! step moves only the step tensors (tokens + KV cache).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Manifest;
+use super::tensor::{Tensor, TensorI32};
+
+/// Outputs of one prefill call.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// `[vocab]` next-token logits at the last valid prompt position.
+    pub logits: Tensor,
+    /// `[n_layer, L, H, D]` — K cache (RoPE applied).
+    pub k: Tensor,
+    /// `[n_layer, L, H, D]` — V cache.
+    pub v: Tensor,
+    /// `[n_layer, L]` — cosine similarity across each attention block.
+    pub cos_sims: Tensor,
+}
+
+/// Outputs of one batched decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// `[B, vocab]`.
+    pub logits: Tensor,
+    /// `[n_layer, B, H, D]` — K row for the token just processed.
+    pub new_k: Tensor,
+    /// `[n_layer, B, H, D]`.
+    pub new_v: Tensor,
+    /// `[n_layer, B, M]` — per-slot attention mass (H2O signal).
+    pub scores: Tensor,
+}
+
+/// Cumulative runtime counters (perf pass instrumentation).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub h2d_secs: f64,
+    pub d2h_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// A borrowed host array heading into an execution. Uploaded with
+/// `buffer_from_host_buffer` (synchronous copy semantics), so the borrow only
+/// needs to live for the duration of the call.
+enum HostInput<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl HostInput<'_> {
+    fn upload(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        match self {
+            HostInput::F32(data, dims) => {
+                Ok(client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+            }
+            HostInput::I32(data, dims) => {
+                Ok(client.buffer_from_host_buffer::<i32>(data, dims, None)?)
+            }
+        }
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    kernel: String,
+    weights: Vec<xla::PjRtBuffer>,
+    prefill_exes: Mutex<HashMap<usize, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    decode_exes: Mutex<HashMap<(usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load manifest + weights from an artifact directory and bind a kernel
+    /// variant ("pallas" — the shipped default — or "jnp" for the ablation).
+    pub fn load(artifact_dir: &str, kernel: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        if client.devices().is_empty() {
+            return Err(anyhow!("no PJRT devices"));
+        }
+        let mut weights = Vec::new();
+        for (entry, data) in manifest.load_weights()? {
+            // buffer_from_host_buffer copies during the call
+            // (kImmutableOnlyDuringCall) — buffer_from_host_literal is async
+            // and reads the literal after we would have freed it.
+            weights.push(client.buffer_from_host_buffer::<f32>(&data, &entry.shape, None)?);
+        }
+        Ok(Self {
+            client,
+            manifest,
+            kernel: kernel.to_string(),
+            weights,
+            prefill_exes: Mutex::new(HashMap::new()),
+            decode_exes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn kernel(&self) -> &str {
+        &self.kernel
+    }
+
+    /// Smallest prefill bucket >= `len`.
+    pub fn prefill_bucket_for(&self, len: usize) -> Result<usize> {
+        self.manifest
+            .prefill_buckets(&self.kernel)
+            .into_iter()
+            .find(|&b| b >= len)
+            .ok_or_else(|| anyhow!("prompt of {len} tokens exceeds largest prefill bucket"))
+    }
+
+    /// Smallest decode capacity tier with batch == `batch` and cap >= `cap`.
+    pub fn decode_tier_for(&self, batch: usize, cap: usize) -> Result<(usize, usize)> {
+        self.manifest
+            .decode_tiers(&self.kernel)
+            .into_iter()
+            .filter(|&(b, m)| b == batch && m >= cap)
+            .min_by_key(|&(_, m)| m)
+            .ok_or_else(|| anyhow!("no decode tier batch={batch} cap>={cap}"))
+    }
+
+    /// Decode batch sizes available for this kernel.
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .decode_tiers(&self.kernel)
+            .into_iter()
+            .map(|(b, _)| b)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    fn compile(&self, file: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(file)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.stats.lock().unwrap().compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    fn prefill_exe(&self, bucket: usize) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.prefill_exes.lock().unwrap().get(&bucket) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.find_prefill(&self.kernel, bucket)?;
+        let exe = std::sync::Arc::new(self.compile(&self.manifest.artifact_path(entry))?);
+        self.prefill_exes.lock().unwrap().insert(bucket, exe.clone());
+        Ok(exe)
+    }
+
+    fn decode_exe(&self, tier: (usize, usize)) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.decode_exes.lock().unwrap().get(&tier) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.find_decode(&self.kernel, tier.0, tier.1)?;
+        let exe = std::sync::Arc::new(self.compile(&self.manifest.artifact_path(entry))?);
+        self.decode_exes.lock().unwrap().insert(tier, exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact of the bound kernel (warmup).
+    pub fn compile_all(&self) -> Result<()> {
+        for b in self.manifest.prefill_buckets(&self.kernel) {
+            self.prefill_exe(b)?;
+        }
+        for t in self.manifest.decode_tiers(&self.kernel) {
+            self.decode_exe(t)?;
+        }
+        Ok(())
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        step_inputs: &[HostInput<'_>],
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        let step_bufs: Vec<xla::PjRtBuffer> = step_inputs
+            .iter()
+            .map(|h| h.upload(&self.client))
+            .collect::<Result<_>>()?;
+        args.extend(step_bufs.iter());
+        let h2d = t0.elapsed().as_secs_f64();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let t1 = Instant::now();
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let mut s = self.stats.lock().unwrap();
+        s.h2d_secs += h2d;
+        s.d2h_secs += t1.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Run prefill for a prompt (padded internally to the bucket size).
+    ///
+    /// Returned K/V/cos tensors are sliced views over the *bucket* length;
+    /// callers should only read the first `prompt.len()` positions.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        let bucket = self.prefill_bucket_for(prompt.len())?;
+        let exe = self.prefill_exe(bucket)?;
+        let mut toks = prompt.to_vec();
+        toks.resize(bucket, 0);
+        let vlen = [prompt.len() as i32];
+        let t0 = Instant::now();
+        let outs = self.run(
+            &exe,
+            &[
+                HostInput::I32(&toks, &[bucket]),
+                HostInput::I32(&vlen, &[]),
+            ],
+        )?;
+        if outs.len() != 4 {
+            return Err(anyhow!("prefill returned {} outputs, want 4", outs.len()));
+        }
+        let out = PrefillOut {
+            logits: Tensor::from_literal(&outs[0])?,
+            k: Tensor::from_literal(&outs[1])?,
+            v: Tensor::from_literal(&outs[2])?,
+            cos_sims: Tensor::from_literal(&outs[3])?,
+        };
+        let mut s = self.stats.lock().unwrap();
+        s.prefill_calls += 1;
+        s.prefill_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Run one decode step on tier `(B, M)`.
+    ///
+    /// * `tokens`, `positions`: `[B]`
+    /// * `k_cache`, `v_cache`: `[n_layer, B, M, H, D]`
+    /// * `cache_lens`: `[n_layer, B]`, each strictly `< M` for active slots
+    ///   (the step appends the new token's KV at slot `len` internally).
+    pub fn decode(
+        &self,
+        tier: (usize, usize),
+        tokens: &TensorI32,
+        positions: &TensorI32,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        cache_lens: &TensorI32,
+    ) -> Result<DecodeOut> {
+        let exe = self.decode_exe(tier)?;
+        let t0 = Instant::now();
+        let outs = self.run(
+            &exe,
+            &[
+                HostInput::I32(&tokens.data, &tokens.shape),
+                HostInput::I32(&positions.data, &positions.shape),
+                HostInput::F32(&k_cache.data, &k_cache.shape),
+                HostInput::F32(&v_cache.data, &v_cache.shape),
+                HostInput::I32(&cache_lens.data, &cache_lens.shape),
+            ],
+        )?;
+        if outs.len() != 4 {
+            return Err(anyhow!("decode returned {} outputs, want 4", outs.len()));
+        }
+        let out = DecodeOut {
+            logits: Tensor::from_literal(&outs[0])?,
+            new_k: Tensor::from_literal(&outs[1])?,
+            new_v: Tensor::from_literal(&outs[2])?,
+            scores: Tensor::from_literal(&outs[3])?,
+        };
+        let mut s = self.stats.lock().unwrap();
+        s.decode_calls += 1;
+        s.decode_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}

@@ -1,0 +1,8 @@
+//! Layer-3 ↔ XLA boundary: PJRT client wrapper, typed prefill/decode calls,
+//! and the host tensor types that carry KV state between steps.
+
+mod client;
+mod tensor;
+
+pub use client::{DecodeOut, PrefillOut, Runtime, RuntimeStats};
+pub use tensor::{Tensor, TensorI32};

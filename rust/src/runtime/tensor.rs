@@ -1,0 +1,119 @@
+//! Minimal host-side tensors used at the runtime boundary.
+//!
+//! The coordinator keeps all KV state in plain `Vec<f32>`-backed tensors and
+//! converts to/from `xla::Literal` only at the execute boundary; everything
+//! in between (append, evict, compact) is cheap slice manipulation.
+
+use anyhow::{anyhow, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} wants {} elems, got {}", shape, n, data.len()));
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat index from a multi-index.
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut f = 0;
+        for (i, &x) in idx.iter().enumerate() {
+            debug_assert!(x < self.shape[i], "index {idx:?} out of {:?}", self.shape);
+            f = f * self.shape[i] + x;
+        }
+        f
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let f = self.flat(idx);
+        self.data[f] = v;
+    }
+
+    /// Convert to an XLA literal of this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Build from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Self::from_vec(&dims, data)
+    }
+}
+
+/// A dense row-major i32 tensor (token ids, positions, lengths).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} wants {} elems, got {}", shape, n, data.len()));
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_indexing_row_major() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.5);
+        assert_eq!(t.flat(&[1, 2, 3]), 1 * 12 + 2 * 4 + 3);
+        assert_eq!(t.at(&[1, 2, 3]), 7.5);
+        assert_eq!(t.numel(), 24);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+        assert!(TensorI32::from_vec(&[3], vec![1, 2]).is_err());
+    }
+}

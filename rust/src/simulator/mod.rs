@@ -1,0 +1,11 @@
+//! Paper-scale substrate: an analytic A100 memory/bandwidth model over the
+//! paper's model zoo. Used by the benches to project Tables 2/3/9 and
+//! Fig. 4 at the scales the paper ran (we have no A100s here); the *measured*
+//! counterparts run on the tiny model through the real engine.
+
+pub mod costmodel;
+pub mod zoo;
+
+pub use costmodel::{per_token_kv_bytes, simulate_decode, Cluster, KvPolicy, SimPoint,
+                    A100_40GB_X1, A100_40GB_X8};
+pub use zoo::{by_name, ModelSpec, ZOO};

@@ -1,0 +1,150 @@
+//! The paper's model zoo as shape specs for the analytic cost model.
+//!
+//! Sources: model cards / config.json of each checkpoint. `kv_dim` is the
+//! *per-layer* K (or V) width actually cached: `n_kv_heads × head_dim` —
+//! GQA/MQA models cache far less than d_model.
+
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layer: usize,
+    pub d_model: usize,
+    /// n_kv_heads * head_dim (per-layer cached width for K or V).
+    pub kv_dim: usize,
+    /// Total parameters (for weight-traffic and HBM residency).
+    pub n_params: f64,
+    /// Parameters touched per token (≠ n_params for MoE).
+    pub active_params: f64,
+    /// Cache/weight dtype bytes (paper: FP16).
+    pub dtype_bytes: usize,
+}
+
+impl ModelSpec {
+    /// KV-cache bytes per cached token across all layers (K+V).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        (2 * self.kv_dim * self.dtype_bytes * self.n_layer) as f64
+    }
+
+    /// Per-layer KV bytes per token (K+V).
+    pub fn kv_bytes_per_token_layer(&self) -> f64 {
+        (2 * self.kv_dim * self.dtype_bytes) as f64
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * self.dtype_bytes as f64
+    }
+
+    pub fn active_weight_bytes(&self) -> f64 {
+        self.active_params * self.dtype_bytes as f64
+    }
+}
+
+pub const MISTRAL_7B: ModelSpec = ModelSpec {
+    name: "Mistral-7B",
+    n_layer: 32,
+    d_model: 4096,
+    kv_dim: 1024, // 8 kv heads x 128
+    n_params: 7.24e9,
+    active_params: 7.24e9,
+    dtype_bytes: 2,
+};
+
+pub const LLAMA2_7B: ModelSpec = ModelSpec {
+    name: "Llama2-7B",
+    n_layer: 32,
+    d_model: 4096,
+    kv_dim: 4096, // MHA
+    n_params: 6.74e9,
+    active_params: 6.74e9,
+    dtype_bytes: 2,
+};
+
+pub const LLAMA2_70B: ModelSpec = ModelSpec {
+    name: "Llama2-70B",
+    n_layer: 80,
+    d_model: 8192,
+    kv_dim: 1024, // 8 kv heads x 128 (GQA)
+    n_params: 6.9e10,
+    active_params: 6.9e10,
+    dtype_bytes: 2,
+};
+
+pub const FALCON_7B: ModelSpec = ModelSpec {
+    name: "Falcon-7B",
+    n_layer: 32,
+    d_model: 4544,
+    kv_dim: 64, // MQA: 1 kv head x 64
+    n_params: 7.22e9,
+    active_params: 7.22e9,
+    dtype_bytes: 2,
+};
+
+pub const OPT_6_7B: ModelSpec = ModelSpec {
+    name: "OPT-6.7B",
+    n_layer: 32,
+    d_model: 4096,
+    kv_dim: 4096, // MHA
+    n_params: 6.7e9,
+    active_params: 6.7e9,
+    dtype_bytes: 2,
+};
+
+pub const GPT_NEOX_20B: ModelSpec = ModelSpec {
+    name: "GPT-NeoX-20B",
+    n_layer: 44,
+    d_model: 6144,
+    kv_dim: 6144, // MHA
+    n_params: 2.05e10,
+    active_params: 2.05e10,
+    dtype_bytes: 2,
+};
+
+pub const MIXTRAL_8X7B: ModelSpec = ModelSpec {
+    name: "Mixtral-8x7B",
+    n_layer: 32,
+    d_model: 4096,
+    kv_dim: 1024,
+    n_params: 4.67e10,
+    active_params: 1.29e10, // 2-of-8 experts
+    dtype_bytes: 2,
+};
+
+pub const ZOO: [&ModelSpec; 7] = [
+    &MISTRAL_7B,
+    &LLAMA2_7B,
+    &LLAMA2_70B,
+    &FALCON_7B,
+    &OPT_6_7B,
+    &GPT_NEOX_20B,
+    &MIXTRAL_8X7B,
+];
+
+pub fn by_name(name: &str) -> Option<&'static ModelSpec> {
+    ZOO.iter().copied().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_7b_paper_number() {
+        // Paper §2.1: Llama-2-7B FP16 KV ≈ 0.5 MB per token.
+        let b = LLAMA2_7B.kv_bytes_per_token();
+        assert!((b - 524_288.0).abs() < 1.0, "{b}");
+    }
+
+    #[test]
+    fn gqa_models_cache_less() {
+        assert!(MISTRAL_7B.kv_bytes_per_token() < LLAMA2_7B.kv_bytes_per_token() / 3.0);
+        assert!(FALCON_7B.kv_bytes_per_token() < MISTRAL_7B.kv_bytes_per_token());
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        assert!(by_name("mistral-7b").is_some());
+        assert!(by_name("gpt-neox-20b").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

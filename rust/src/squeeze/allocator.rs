@@ -1,0 +1,205 @@
+//! Algorithm 1: layer-wise budget reallocation.
+//!
+//! Given per-layer importance (mean cosine similarity, *lower = more
+//! important*), cluster into `groups` (paper: 3) with 1-D k-means. The
+//! highest-cosine group G3 ("unimportant") keeps only `p × b_init`; the freed
+//! budget is split equally among the remaining layers. Total budget is
+//! conserved exactly (integer rounding remainder is handed out
+//! deterministically, one token at a time, to the most important layers).
+
+
+use super::kmeans::{kmeans_1d, Clustering};
+use crate::config::SqueezeConfig;
+
+/// The outcome of one budget-reallocation decision.
+#[derive(Debug, Clone)]
+pub struct BudgetPlan {
+    /// Per-layer token budget.
+    pub budgets: Vec<usize>,
+    /// Group id per layer (0 = most important … groups-1 = least).
+    pub groups: Vec<usize>,
+    /// Per-layer importance signal that produced the plan.
+    pub layer_means: Vec<f64>,
+    /// True when reallocation actually moved budget (false = identity:
+    /// squeeze disabled, degenerate clustering, or p = 1).
+    pub reallocated: bool,
+}
+
+impl BudgetPlan {
+    /// Uniform plan: every layer gets `b_init` (the baselines).
+    pub fn uniform(n_layer: usize, b_init: usize) -> Self {
+        Self {
+            budgets: vec![b_init; n_layer],
+            groups: vec![0; n_layer],
+            layer_means: vec![0.0; n_layer],
+            reallocated: false,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.budgets.iter().sum()
+    }
+
+    pub fn max_budget(&self) -> usize {
+        self.budgets.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Count of layers in the least-important group.
+    pub fn unimportant_layers(&self) -> usize {
+        let g = self.groups.iter().copied().max().unwrap_or(0);
+        if !self.reallocated {
+            return 0;
+        }
+        self.groups.iter().filter(|&&x| x == g).count()
+    }
+}
+
+/// Compute the Algorithm-1 budget plan.
+///
+/// * `layer_means` — mean cosine per layer (higher = less important).
+/// * `b_init` — the uniform per-layer budget being redistributed.
+pub fn allocate(layer_means: &[f64], b_init: usize, cfg: &SqueezeConfig) -> BudgetPlan {
+    let n = layer_means.len();
+    assert!(n > 0);
+    if !cfg.enabled || cfg.p >= 1.0 || n <= cfg.groups || b_init == 0 {
+        let mut plan = BudgetPlan::uniform(n, b_init);
+        plan.layer_means = layer_means.to_vec();
+        return plan;
+    }
+
+    let clustering: Clustering = kmeans_1d(layer_means, cfg.groups, 100);
+    let g3 = cfg.groups - 1;
+    let g3_members = clustering.members(g3);
+    let keep = clustering.assignment.iter().filter(|&&a| a != g3).count();
+    // Degenerate: everything (or nothing) is "unimportant" — do not move.
+    if g3_members.is_empty() || keep == 0 {
+        let mut plan = BudgetPlan::uniform(n, b_init);
+        plan.layer_means = layer_means.to_vec();
+        plan.groups = clustering.assignment;
+        return plan;
+    }
+
+    let total = n * b_init;
+    // G3 keeps p*b_init, floored at min_budget.
+    let g3_budget = ((b_init as f64 * cfg.p).round() as usize).max(cfg.min_budget).min(b_init);
+    let freed = total - g3_members.len() * g3_budget;
+    let boosted = freed / keep;
+    let mut remainder = freed - boosted * keep;
+
+    let mut budgets = vec![0usize; n];
+    // Hand the rounding remainder to the most important layers first
+    // (ascending cosine -> stable order by (group, mean, index)).
+    let mut keep_order: Vec<usize> = (0..n).filter(|&i| clustering.assignment[i] != g3).collect();
+    keep_order.sort_by(|&a, &b| {
+        clustering.assignment[a]
+            .cmp(&clustering.assignment[b])
+            .then(layer_means[a].partial_cmp(&layer_means[b]).unwrap())
+            .then(a.cmp(&b))
+    });
+    for &i in &keep_order {
+        budgets[i] = boosted;
+        if remainder > 0 {
+            budgets[i] += 1;
+            remainder -= 1;
+        }
+    }
+    for &i in &g3_members {
+        budgets[i] = g3_budget;
+    }
+
+    debug_assert_eq!(budgets.iter().sum::<usize>(), total);
+    BudgetPlan {
+        budgets,
+        groups: clustering.assignment,
+        layer_means: layer_means.to_vec(),
+        reallocated: g3_budget < b_init,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(p: f64) -> SqueezeConfig {
+        SqueezeConfig { enabled: true, p, groups: 3, min_budget: 1 }
+    }
+
+    #[test]
+    fn conserves_total_budget() {
+        // 8 layers: 2 special (low), 3 mid, 3 high cosine.
+        let means = [0.1, 0.15, 0.5, 0.55, 0.52, 0.9, 0.92, 0.95];
+        let plan = allocate(&means, 100, &cfg(0.3));
+        assert_eq!(plan.total(), 800);
+        assert!(plan.reallocated);
+        // G3 layers squeezed to 30.
+        assert_eq!(plan.budgets[5], 30);
+        assert_eq!(plan.budgets[6], 30);
+        assert_eq!(plan.budgets[7], 30);
+        // Important layers got boosted above b_init.
+        assert!(plan.budgets[0] > 100 && plan.budgets[2] > 100);
+    }
+
+    #[test]
+    fn paper_appendix_a2_example() {
+        // 32 layers, 18 important, 14 unimportant, b_init=1000, p=0.3:
+        // unimportant -> 300, important -> (18000 + 700*14)/18 = 1544.
+        let mut means = vec![0.2; 10];
+        means.extend(vec![0.5; 8]);
+        means.extend(vec![0.9; 14]);
+        let plan = allocate(&means, 1000, &cfg(0.3));
+        assert_eq!(plan.total(), 32_000);
+        for i in 18..32 {
+            assert_eq!(plan.budgets[i], 300);
+        }
+        for i in 0..18 {
+            assert!(plan.budgets[i] == 1544 || plan.budgets[i] == 1545,
+                    "layer {i} got {}", plan.budgets[i]);
+        }
+    }
+
+    #[test]
+    fn p_one_is_identity() {
+        let means = [0.1, 0.5, 0.9, 0.2, 0.6, 0.95];
+        let plan = allocate(&means, 64, &cfg(1.0));
+        assert!(!plan.reallocated);
+        assert!(plan.budgets.iter().all(|&b| b == 64));
+    }
+
+    #[test]
+    fn disabled_is_identity() {
+        let mut c = cfg(0.3);
+        c.enabled = false;
+        let plan = allocate(&[0.1, 0.9, 0.5, 0.2, 0.8], 64, &c);
+        assert!(!plan.reallocated);
+        assert_eq!(plan.total(), 5 * 64);
+    }
+
+    #[test]
+    fn degenerate_constant_means() {
+        let plan = allocate(&[0.5; 8], 64, &cfg(0.3));
+        // k-means collapses; no group separation worth acting on — either
+        // identity or a conserved reallocation, but never a budget loss.
+        assert_eq!(plan.total(), 8 * 64);
+    }
+
+    #[test]
+    fn min_budget_floor() {
+        let mut c = cfg(0.05);
+        c.min_budget = 8;
+        let means = [0.1, 0.1, 0.9, 0.9, 0.9, 0.9, 0.9, 0.2];
+        let plan = allocate(&means, 20, &c);
+        assert_eq!(plan.total(), 160);
+        for (i, &g) in plan.groups.iter().enumerate() {
+            if g == 2 {
+                assert!(plan.budgets[i] >= 8);
+            }
+        }
+    }
+
+    #[test]
+    fn few_layers_identity() {
+        // n <= groups cannot cluster meaningfully.
+        let plan = allocate(&[0.1, 0.9], 64, &cfg(0.3));
+        assert!(!plan.reallocated);
+    }
+}

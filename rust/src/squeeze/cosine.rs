@@ -1,0 +1,186 @@
+//! Layer-importance statistics from the prefill cosine-similarity probe.
+//!
+//! The prefill artifact emits `cos_sims[n_layer, L]` — per layer, the cosine
+//! similarity of the residual stream across the attention block for every
+//! prompt position (paper Eq. 5). This module reduces that to the per-layer
+//! mean over *valid* prompt tokens (Algorithm 1, lines 2–4) and supports
+//! accumulation across prompts (the Fig. 2 heatmaps average 200 prompts).
+
+use crate::runtime::Tensor;
+
+/// Accumulated per-layer cosine statistics.
+#[derive(Debug, Clone)]
+pub struct CosineStats {
+    n_layer: usize,
+    /// Sum of per-token cosine values per layer.
+    sums: Vec<f64>,
+    /// Token count per layer.
+    counts: Vec<u64>,
+    /// Optional per-position accumulation for heatmaps: `[n_layer][pos]`.
+    heat_sums: Vec<Vec<f64>>,
+    heat_counts: Vec<Vec<u64>>,
+}
+
+impl CosineStats {
+    pub fn new(n_layer: usize) -> Self {
+        Self {
+            n_layer,
+            sums: vec![0.0; n_layer],
+            counts: vec![0; n_layer],
+            heat_sums: vec![Vec::new(); n_layer],
+            heat_counts: vec![Vec::new(); n_layer],
+        }
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.n_layer
+    }
+
+    /// Fold in one prefill's `cos_sims` tensor (`[n_layer, L]`), counting
+    /// only the first `valid_len` positions (the rest is bucket padding).
+    /// Position 0 is skipped: BOS changes the stream degenerately and its
+    /// cosine is uninformative noise shared by all layers.
+    pub fn observe(&mut self, cos_sims: &Tensor, valid_len: usize) {
+        assert_eq!(cos_sims.shape.len(), 2);
+        assert_eq!(cos_sims.shape[0], self.n_layer);
+        let l = cos_sims.shape[1];
+        let valid = valid_len.min(l);
+        for layer in 0..self.n_layer {
+            if self.heat_sums[layer].len() < valid {
+                self.heat_sums[layer].resize(valid, 0.0);
+                self.heat_counts[layer].resize(valid, 0);
+            }
+            for pos in 1..valid {
+                let v = cos_sims.at(&[layer, pos]) as f64;
+                if !v.is_finite() {
+                    continue;
+                }
+                self.sums[layer] += v;
+                self.counts[layer] += 1;
+                self.heat_sums[layer][pos] += v;
+                self.heat_counts[layer][pos] += 1;
+            }
+        }
+    }
+
+    /// Per-layer mean cosine similarity (the Algorithm-1 importance signal).
+    /// Layers with no observations get 1.0 (= "attention changed nothing"),
+    /// which k-means puts in the least-important group — the safe default.
+    pub fn layer_means(&self) -> Vec<f64> {
+        (0..self.n_layer)
+            .map(|i| {
+                if self.counts[i] == 0 {
+                    1.0
+                } else {
+                    self.sums[i] / self.counts[i] as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Heatmap row for a layer: mean cosine per prompt position (Fig. 2).
+    pub fn heatmap_row(&self, layer: usize) -> Vec<f64> {
+        self.heat_sums[layer]
+            .iter()
+            .zip(&self.heat_counts[layer])
+            .map(|(&s, &c)| if c == 0 { f64::NAN } else { s / c as f64 })
+            .collect()
+    }
+
+    pub fn observations(&self, layer: usize) -> u64 {
+        self.counts[layer]
+    }
+
+    /// Merge another accumulator (same n_layer) into this one.
+    pub fn merge(&mut self, other: &CosineStats) {
+        assert_eq!(self.n_layer, other.n_layer);
+        for i in 0..self.n_layer {
+            self.sums[i] += other.sums[i];
+            self.counts[i] += other.counts[i];
+            let n = other.heat_sums[i].len();
+            if self.heat_sums[i].len() < n {
+                self.heat_sums[i].resize(n, 0.0);
+                self.heat_counts[i].resize(n, 0);
+            }
+            for p in 0..n {
+                self.heat_sums[i][p] += other.heat_sums[i][p];
+                self.heat_counts[i][p] += other.heat_counts[i][p];
+            }
+        }
+    }
+}
+
+/// Plain cosine similarity between two host vectors (used by the simulator
+/// substrate and tests; the request path uses the Pallas kernel's output).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0f64;
+    let mut na = 0f64;
+    let mut nb = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    #[test]
+    fn observe_masks_padding_and_bos() {
+        let mut s = CosineStats::new(2);
+        // layer 0: [x, 0.5, 0.5, PAD-garbage], layer 1: [x, 0.9, 0.9, garbage]
+        let t = Tensor::from_vec(
+            &[2, 4],
+            vec![0.0, 0.5, 0.5, 77.0, 0.0, 0.9, 0.9, -77.0],
+        )
+        .unwrap();
+        s.observe(&t, 3); // only positions 1..3 counted
+        let m = s.layer_means();
+        assert!((m[0] - 0.5).abs() < 1e-6);
+        assert!((m[1] - 0.9).abs() < 1e-6);
+        assert_eq!(s.observations(0), 2);
+    }
+
+    #[test]
+    fn empty_layers_default_unimportant() {
+        let s = CosineStats::new(3);
+        assert_eq!(s.layer_means(), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn merge_matches_joint_observation() {
+        let t1 = Tensor::from_vec(&[1, 3], vec![0.0, 0.2, 0.4]).unwrap();
+        let t2 = Tensor::from_vec(&[1, 3], vec![0.0, 0.8, 0.6]).unwrap();
+        let mut a = CosineStats::new(1);
+        a.observe(&t1, 3);
+        let mut b = CosineStats::new(1);
+        b.observe(&t2, 3);
+        a.merge(&b);
+        let mut joint = CosineStats::new(1);
+        joint.observe(&t1, 3);
+        joint.observe(&t2, 3);
+        assert!((a.layer_means()[0] - joint.layer_means()[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_host() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heatmap_rows() {
+        let mut s = CosineStats::new(1);
+        let t = Tensor::from_vec(&[1, 4], vec![0.0, 0.1, 0.2, 0.3]).unwrap();
+        s.observe(&t, 4);
+        let row = s.heatmap_row(0);
+        assert!(row[0].is_nan()); // BOS position skipped
+        assert!((row[2] - 0.2).abs() < 1e-6);
+    }
+}

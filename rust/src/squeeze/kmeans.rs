@@ -1,0 +1,156 @@
+//! 1-D k-means for layer grouping (paper §4.1, Algorithm 1 line 5).
+//!
+//! Deterministic: centroids are seeded at quantiles of the sorted input, and
+//! Lloyd iterations on one dimension preserve the order of centroids, so the
+//! returned group ids are stable and ordered — group `k-1` always has the
+//! *largest* cosine similarity (the least important layers, "G3").
+
+/// Result of clustering `values` into `k` ordered groups.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Clustering {
+    /// Group id per input value, in input order. Ids are ordered by centroid:
+    /// group 0 = smallest values (most important layers).
+    pub assignment: Vec<usize>,
+    /// Final centroid per group, ascending.
+    pub centroids: Vec<f64>,
+    /// Iterations until convergence.
+    pub iterations: usize,
+}
+
+impl Clustering {
+    pub fn group_size(&self, g: usize) -> usize {
+        self.assignment.iter().filter(|&&a| a == g).count()
+    }
+
+    /// Member indices of group `g`, in input order.
+    pub fn members(&self, g: usize) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == g)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Cluster 1-D `values` into `k` groups. Panics if `values` is empty or
+/// `k == 0`; if there are fewer distinct values than `k`, duplicate
+/// centroids collapse and high groups may be empty — callers (the budget
+/// allocator) treat empty G3 as "no reallocation".
+pub fn kmeans_1d(values: &[f64], k: usize, max_iter: usize) -> Clustering {
+    assert!(!values.is_empty() && k > 0);
+    let n = values.len();
+    let mut sorted: Vec<f64> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Quantile seeding: centroid j at the (j + 0.5)/k quantile.
+    let mut centroids: Vec<f64> = (0..k)
+        .map(|j| {
+            let q = (j as f64 + 0.5) / k as f64;
+            sorted[((q * n as f64) as usize).min(n - 1)]
+        })
+        .collect();
+
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // Assign to nearest centroid (ties -> lower group).
+        let mut changed = false;
+        for (i, &v) in values.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for (j, &c) in centroids.iter().enumerate() {
+                let d = (v - c).abs();
+                if d < bd {
+                    bd = d;
+                    best = j;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update centroids (empty groups keep their position).
+        for j in 0..k {
+            let members: Vec<f64> = values
+                .iter()
+                .zip(&assignment)
+                .filter(|(_, &a)| a == j)
+                .map(|(&v, _)| v)
+                .collect();
+            if !members.is_empty() {
+                centroids[j] = members.iter().sum::<f64>() / members.len() as f64;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+    }
+
+    // Normalize: relabel groups so centroids ascend (quantile seeding keeps
+    // them sorted already, but guard against pathological updates).
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+    let mut relabel = vec![0usize; k];
+    for (new, &old) in order.iter().enumerate() {
+        relabel[old] = new;
+    }
+    let assignment = assignment.into_iter().map(|a| relabel[a]).collect();
+    let mut cs = centroids.clone();
+    cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Clustering { assignment, centroids: cs, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_obvious_groups() {
+        let vals = [0.1, 0.12, 0.5, 0.52, 0.9, 0.92];
+        let c = kmeans_1d(&vals, 3, 50);
+        assert_eq!(c.assignment, vec![0, 0, 1, 1, 2, 2]);
+        assert!(c.centroids[0] < c.centroids[1] && c.centroids[1] < c.centroids[2]);
+    }
+
+    #[test]
+    fn order_preserving() {
+        // Higher value never lands in a lower group.
+        let vals = [0.3, 0.8, 0.1, 0.95, 0.5, 0.2, 0.85];
+        let c = kmeans_1d(&vals, 3, 50);
+        for i in 0..vals.len() {
+            for j in 0..vals.len() {
+                if vals[i] < vals[j] {
+                    assert!(c.assignment[i] <= c.assignment[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_input_collapses() {
+        let vals = [0.5; 8];
+        let c = kmeans_1d(&vals, 3, 50);
+        // All assigned to one group; others empty.
+        let g = c.assignment[0];
+        assert!(c.assignment.iter().all(|&a| a == g));
+    }
+
+    #[test]
+    fn k_one() {
+        let vals = [1.0, 2.0, 3.0];
+        let c = kmeans_1d(&vals, 1, 10);
+        assert_eq!(c.assignment, vec![0, 0, 0]);
+        assert!((c.centroids[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn members_and_sizes() {
+        let vals = [0.1, 0.9, 0.1, 0.9];
+        let c = kmeans_1d(&vals, 2, 50);
+        assert_eq!(c.group_size(0), 2);
+        assert_eq!(c.members(1), vec![1, 3]);
+    }
+}

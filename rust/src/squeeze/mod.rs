@@ -1,0 +1,12 @@
+//! SqueezeAttention — the paper's contribution: layer-wise KV budget
+//! optimization. Cosine-similarity importance statistics (`cosine`), 1-D
+//! k-means grouping (`kmeans`), and the Algorithm-1 budget allocator
+//! (`allocator`).
+
+pub mod allocator;
+pub mod cosine;
+pub mod kmeans;
+
+pub use allocator::{allocate, BudgetPlan};
+pub use cosine::{cosine, CosineStats};
+pub use kmeans::{kmeans_1d, Clustering};

@@ -1,0 +1,179 @@
+//! Minimal CLI argument parser (no clap in the offline dependency set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! subcommands, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name). `bool_flags` lists flags that
+    /// take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut bools = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    values.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    bools.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    values.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, bools, positional })
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, bool_flags)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.values.get(name).cloned()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad float '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow!("--{name}: bad float '{v}'"))?)),
+        }
+    }
+
+    /// Comma-separated usizes.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.values.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<usize>().map_err(|_| anyhow!("--{name}: bad list '{v}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error out on unknown flags (typo guard) given the known set.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.values.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        for k in &self.bools {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn values_and_bools() {
+        let a = Args::parse(
+            &argv(&["generate", "--budget", "64", "--p=0.3", "--verbose"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(0), Some("generate"));
+        assert_eq!(a.usize("budget", 0).unwrap(), 64);
+        assert!((a.f64("p", 1.0).unwrap() - 0.3).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(&[]), &[]).unwrap();
+        assert_eq!(a.str("policy", "sliding_window"), "sliding_window");
+        assert_eq!(a.usize("n", 8).unwrap(), 8);
+        assert!(a.opt_str("task").is_none());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv(&["--budget"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&argv(&["--batches", "1, 8,16"]), &[]).unwrap();
+        assert_eq!(a.usize_list("batches", &[]).unwrap(), vec![1, 8, 16]);
+        assert_eq!(a.usize_list("other", &[2, 3]).unwrap(), vec![2, 3]);
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = Args::parse(&argv(&["--budgte", "64"]), &[]).unwrap();
+        assert!(a.check_known(&["budget"]).is_err());
+        assert!(a.check_known(&["budgte"]).is_ok());
+    }
+}

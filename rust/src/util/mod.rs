@@ -1,0 +1,13 @@
+//! From-scratch substrates for the offline build: JSON, PRNG, CLI parsing,
+//! bench harness, and property testing (see the Cargo.toml note — only the
+//! `xla` crate closure is available offline).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

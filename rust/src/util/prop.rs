@@ -1,0 +1,74 @@
+//! Property-test harness (no proptest in the offline dependency set):
+//! runs a property over many seeded random cases and reports the failing
+//! seed so a failure is reproducible with `check_with_seed`.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` random inputs drawn via the provided RNG. Panics
+/// (with the offending case seed) on the first failure.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000_u64 + case as u64;
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_with_seed<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    seed: u64,
+    mut prop: F,
+) {
+    let mut rng = Rng::seed_from_u64(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helpers usable inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| ensure(rng.f64() < -1.0, "impossible"));
+    }
+
+    #[test]
+    fn ensure_eq_messages() {
+        assert!(ensure_eq(1, 1, "x").is_ok());
+        let e = ensure_eq(1, 2, "budgets").unwrap_err();
+        assert!(e.contains("budgets"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Synthetic workloads: the five evaluation tasks and arrival traces.
+
+pub mod eval;
+pub mod quality;
+pub mod tasks;
+pub mod trace;
+
+pub use eval::{best_baseline_for, evaluate, EvalResult, EvalSpec};
+pub use quality::{answer_accuracy, exact_match, mean_accuracy, trim_at_eos};
+pub use tasks::{lm_next, Sample, Task, TaskGen, ALL_TASKS};
+pub use trace::{TraceItem, TraceSpec};

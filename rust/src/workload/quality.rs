@@ -1,0 +1,97 @@
+//! Exact-match answer scoring — the deterministic stand-in for ROUGE/F1.
+
+use crate::model::tokenizer::EOS;
+
+use super::tasks::Sample;
+
+/// Fraction of expected answer tokens the generation got right, position by
+/// position, stopping at the expected answer's end. An early EOS truncates
+/// credit; extra tokens after the expected answer are not penalized (the
+/// paper's metrics are recall-flavored too).
+pub fn answer_accuracy(sample: &Sample, generated: &[i32]) -> f64 {
+    if sample.answer.is_empty() {
+        return f64::NAN;
+    }
+    let mut hit = 0usize;
+    for (i, &want) in sample.answer.iter().enumerate() {
+        match generated.get(i) {
+            Some(&got) if got == want => hit += 1,
+            _ => {}
+        }
+    }
+    hit as f64 / sample.answer.len() as f64
+}
+
+/// Strict exact match of the full answer (including EOS position).
+pub fn exact_match(sample: &Sample, generated: &[i32]) -> bool {
+    generated.len() >= sample.answer.len()
+        && generated[..sample.answer.len()] == sample.answer[..]
+}
+
+/// Mean accuracy over (sample, generation) pairs, NaN-skipping.
+pub fn mean_accuracy(pairs: &[(Sample, Vec<i32>)]) -> f64 {
+    let scores: Vec<f64> = pairs
+        .iter()
+        .map(|(s, g)| answer_accuracy(s, g))
+        .filter(|a| a.is_finite())
+        .collect();
+    if scores.is_empty() {
+        return f64::NAN;
+    }
+    scores.iter().sum::<f64>() / scores.len() as f64
+}
+
+/// Trim generation at (and including) the first EOS for display.
+pub fn trim_at_eos(generated: &[i32]) -> &[i32] {
+    match generated.iter().position(|&t| t == EOS) {
+        Some(i) => &generated[..=i],
+        None => generated,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::tasks::{Task, TaskGen};
+
+    fn sample_with_answer(answer: Vec<i32>) -> Sample {
+        Sample { task: Task::Copy, prompt: vec![], answer }
+    }
+
+    #[test]
+    fn perfect_match() {
+        let s = sample_with_answer(vec![1, 2, 3, EOS]);
+        assert_eq!(answer_accuracy(&s, &[1, 2, 3, EOS, 9, 9]), 1.0);
+        assert!(exact_match(&s, &[1, 2, 3, EOS]));
+    }
+
+    #[test]
+    fn partial_match() {
+        let s = sample_with_answer(vec![1, 2, 3, 4]);
+        assert_eq!(answer_accuracy(&s, &[1, 9, 3, 9]), 0.5);
+        assert!(!exact_match(&s, &[1, 9, 3, 9]));
+    }
+
+    #[test]
+    fn short_generation() {
+        let s = sample_with_answer(vec![1, 2, 3, 4]);
+        assert_eq!(answer_accuracy(&s, &[1]), 0.25);
+    }
+
+    #[test]
+    fn trim() {
+        assert_eq!(trim_at_eos(&[1, 2, EOS, 7]), &[1, 2, EOS]);
+        assert_eq!(trim_at_eos(&[1, 2]), &[1, 2]);
+    }
+
+    #[test]
+    fn mean_over_tasks() {
+        let mut g = TaskGen::new(0);
+        let s1 = g.gen_copy(3);
+        let perfect = s1.answer.clone();
+        let s2 = g.gen_copy(3);
+        let wrong = vec![0; 4];
+        let m = mean_accuracy(&[(s1, perfect), (s2, wrong)]);
+        assert!((m - 0.5).abs() < 1e-9);
+    }
+}

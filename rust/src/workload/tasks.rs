@@ -1,0 +1,292 @@
+//! Synthetic evaluation workloads — rust mirror of `python/compile/tasks.py`.
+//!
+//! Five tasks stand in for the paper's five datasets (DESIGN.md §4). Each
+//! sample carries its exact expected answer, so generation quality is a
+//! deterministic exact-match rate rather than ROUGE. The token-level formats
+//! are identical to the python generators the model was trained on; only the
+//! RNG streams differ (the two sides need to agree on distribution, not on
+//! draws).
+
+use crate::model::tokenizer::*;
+use crate::util::Rng;
+
+/// The five evaluation tasks (≈ the paper's five datasets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Repeat the payload after SEP (≈ SAMSUM few-shot; recency+induction).
+    Copy,
+    /// key=value store, answer one queried key (≈ TriviaQA/NarrativeQA).
+    Lookup,
+    /// Repeat only MARK-ed tokens (≈ summarization heavy-hitters).
+    Selective,
+    /// Repeat the first FIRST_K payload tokens (sink-token stress).
+    First,
+    /// Deterministic 2nd-order recurrence with noise (≈ local-structure LM).
+    Lm,
+}
+
+pub const ALL_TASKS: [Task; 5] =
+    [Task::Copy, Task::Lookup, Task::Selective, Task::First, Task::Lm];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Copy => "copy",
+            Task::Lookup => "lookup",
+            Task::Selective => "selective",
+            Task::First => "first",
+            Task::Lm => "lm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+/// One evaluation sample: a prompt and the exact expected continuation.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub task: Task,
+    pub prompt: Vec<i32>,
+    pub answer: Vec<i32>,
+}
+
+/// Deterministic component of the `lm` task (mirror of tasks.py::lm_next).
+pub fn lm_next(a: i32, b: i32) -> i32 {
+    ((a * 31 + b * 17 + 7) % LM_MOD) + 1
+}
+
+/// Deterministic workload generator.
+pub struct TaskGen {
+    rng: Rng,
+}
+
+impl TaskGen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::seed_from_u64(seed) }
+    }
+
+    fn word(&mut self) -> i32 {
+        self.rng.range_i32(WORD_LO, WORD_HI)
+    }
+
+    pub fn gen_copy(&mut self, payload_len: usize) -> Sample {
+        let words: Vec<i32> = (0..payload_len).map(|_| self.word()).collect();
+        let mut prompt = vec![BOS];
+        prompt.extend(&words);
+        prompt.push(SEP);
+        let mut answer = words;
+        answer.push(EOS);
+        Sample { task: Task::Copy, prompt, answer }
+    }
+
+    pub fn gen_lookup(&mut self, n_pairs: usize) -> Sample {
+        let n_pairs = n_pairs.min((KEY_HI - KEY_LO + 1) as usize);
+        // distinct keys via partial shuffle
+        let mut keys: Vec<i32> = (KEY_LO..=KEY_HI).collect();
+        for i in 0..n_pairs {
+            let j = self.rng.range(i, keys.len());
+            keys.swap(i, j);
+        }
+        keys.truncate(n_pairs);
+        let vals: Vec<i32> =
+            (0..n_pairs).map(|_| self.rng.range_i32(VAL_LO, VAL_HI)).collect();
+        let mut prompt = vec![BOS];
+        for (k, v) in keys.iter().zip(&vals) {
+            prompt.extend([*k, EQUALS, *v, COMMA]);
+        }
+        let qi = self.rng.below(n_pairs);
+        prompt.extend([QUERY, keys[qi], ANSWER]);
+        Sample { task: Task::Lookup, prompt, answer: vec![vals[qi], EOS] }
+    }
+
+    pub fn gen_selective(&mut self, payload_len: usize, n_marks: usize) -> Sample {
+        let n_marks = n_marks.min(payload_len);
+        // choose n_marks distinct positions
+        let mut pos: Vec<usize> = (0..payload_len).collect();
+        for i in 0..n_marks {
+            let j = self.rng.range(i, pos.len());
+            pos.swap(i, j);
+        }
+        let mut marked_pos = pos[..n_marks].to_vec();
+        marked_pos.sort_unstable();
+        let words: Vec<i32> = (0..payload_len).map(|_| self.word()).collect();
+        let mut prompt = vec![BOS];
+        let mut answer = Vec::new();
+        let mut mi = 0usize;
+        for (i, &w) in words.iter().enumerate() {
+            if mi < marked_pos.len() && marked_pos[mi] == i {
+                prompt.push(MARK);
+                answer.push(w);
+                mi += 1;
+            }
+            prompt.push(w);
+        }
+        prompt.push(SEP);
+        answer.push(EOS);
+        Sample { task: Task::Selective, prompt, answer }
+    }
+
+    pub fn gen_first(&mut self, payload_len: usize) -> Sample {
+        let words: Vec<i32> = (0..payload_len).map(|_| self.word()).collect();
+        let mut prompt = vec![BOS];
+        prompt.extend(&words);
+        prompt.push(QUERY);
+        let mut answer: Vec<i32> = words[..FIRST_K.min(words.len())].to_vec();
+        answer.push(EOS);
+        Sample { task: Task::First, prompt, answer }
+    }
+
+    /// `lm` sample: prompt is a generated chain; the expected continuation is
+    /// the deterministic recurrence (answer_len tokens, no EOS).
+    pub fn gen_lm(&mut self, prompt_len: usize, answer_len: usize) -> Sample {
+        let mut seq = vec![
+            self.rng.range_i32(1, LM_MOD),
+            self.rng.range_i32(1, LM_MOD),
+        ];
+        while seq.len() < prompt_len - 1 {
+            if self.rng.bool(0.1) {
+                seq.push(self.rng.range_i32(1, LM_MOD));
+            } else {
+                let n = lm_next(seq[seq.len() - 1], seq[seq.len() - 2]);
+                seq.push(n);
+            }
+        }
+        // expected continuation = pure deterministic recurrence
+        let mut answer = Vec::with_capacity(answer_len);
+        let (mut a, mut b) = (seq[seq.len() - 1], seq[seq.len() - 2]);
+        for _ in 0..answer_len {
+            let n = lm_next(a, b);
+            answer.push(n);
+            b = a;
+            a = n;
+        }
+        let mut prompt = vec![BOS];
+        prompt.extend(seq);
+        Sample { task: Task::Lm, prompt, answer }
+    }
+
+    /// Sample a task instance sized to roughly `approx_prompt_len` tokens
+    /// (mirror of tasks.py::sample).
+    pub fn sample(&mut self, task: Task, approx_prompt_len: usize) -> Sample {
+        let n = approx_prompt_len.max(8);
+        match task {
+            Task::Copy => self.gen_copy(n.saturating_sub(2).max(4)),
+            Task::Lookup => self.gen_lookup(((n - 4) / 4).max(2)),
+            Task::Selective => {
+                let pl = ((n as f64 - 2.0) / 1.25) as usize;
+                let pl = pl.max(8);
+                self.gen_selective(pl, (pl / 8).max(2))
+            }
+            Task::First => self.gen_first(n - 2),
+            Task::Lm => self.gen_lm(n - 1, 16),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_layout() {
+        let mut g = TaskGen::new(0);
+        let s = g.gen_copy(5);
+        assert_eq!(s.prompt.len(), 7);
+        assert_eq!(s.prompt[0], BOS);
+        assert_eq!(s.prompt[6], SEP);
+        assert_eq!(&s.answer[..5], &s.prompt[1..6]);
+        assert_eq!(*s.answer.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn lookup_answer_is_queried_value() {
+        let mut g = TaskGen::new(1);
+        for _ in 0..20 {
+            let s = g.gen_lookup(8);
+            let q = s.prompt[s.prompt.len() - 2];
+            // find q's value in the body
+            let mut val = None;
+            let mut i = 1;
+            while s.prompt[i] != QUERY {
+                if s.prompt[i] == q && s.prompt[i + 1] == EQUALS {
+                    val = Some(s.prompt[i + 2]);
+                }
+                i += 4;
+            }
+            assert_eq!(s.answer[0], val.expect("query key present"));
+            assert_eq!(s.answer[1], EOS);
+        }
+    }
+
+    #[test]
+    fn lookup_keys_distinct() {
+        let mut g = TaskGen::new(2);
+        let s = g.gen_lookup(48);
+        let mut keys: Vec<i32> = s.prompt[1..]
+            .chunks(4)
+            .take_while(|c| c.len() == 4 && c[1] == EQUALS)
+            .map(|c| c[0])
+            .collect();
+        let n = keys.len();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n);
+    }
+
+    #[test]
+    fn selective_answer_matches_marks() {
+        let mut g = TaskGen::new(3);
+        let s = g.gen_selective(20, 4);
+        let mut expect = Vec::new();
+        for (i, &t) in s.prompt.iter().enumerate() {
+            if t == MARK {
+                expect.push(s.prompt[i + 1]);
+            }
+        }
+        expect.push(EOS);
+        assert_eq!(s.answer, expect);
+        assert_eq!(expect.len(), 5);
+    }
+
+    #[test]
+    fn first_answer_prefix() {
+        let mut g = TaskGen::new(4);
+        let s = g.gen_first(30);
+        assert_eq!(&s.answer[..FIRST_K], &s.prompt[1..1 + FIRST_K]);
+    }
+
+    #[test]
+    fn lm_recurrence_consistency() {
+        assert_eq!(lm_next(1, 1), ((31 + 17 + 7) % 96) + 1);
+        let mut g = TaskGen::new(5);
+        let s = g.gen_lm(64, 8);
+        // continuation must follow the recurrence seeded by prompt tail
+        let n = s.prompt.len();
+        let (a, b) = (s.prompt[n - 1], s.prompt[n - 2]);
+        assert_eq!(s.answer[0], lm_next(a, b));
+        assert_eq!(s.answer[1], lm_next(s.answer[0], a));
+    }
+
+    #[test]
+    fn sample_sizes_roughly_match() {
+        let mut g = TaskGen::new(6);
+        for task in ALL_TASKS {
+            let s = g.sample(task, 100);
+            assert!(
+                (s.prompt.len() as i64 - 100).abs() < 40,
+                "{}: prompt len {}",
+                task.name(),
+                s.prompt.len()
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = TaskGen::new(42).gen_copy(10);
+        let b = TaskGen::new(42).gen_copy(10);
+        assert_eq!(a.prompt, b.prompt);
+    }
+}

@@ -1,0 +1,111 @@
+//! Request-arrival trace generation for serving experiments.
+//!
+//! The paper's throughput tables use closed batches (all requests present at
+//! t=0); its serving context also motivates open-loop arrivals. Both are
+//! supported: `TraceSpec::closed` replays a fixed batch, `TraceSpec::poisson`
+//! draws exponential inter-arrival gaps.
+
+use crate::util::Rng;
+
+use super::tasks::{Sample, Task, TaskGen, ALL_TASKS};
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    /// Arrival time offset from trace start (seconds).
+    pub arrival_s: f64,
+    pub sample: Sample,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub n_requests: usize,
+    /// Tasks to draw from (round-robin); empty = all five.
+    pub tasks: Vec<Task>,
+    pub approx_prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// Requests per second; 0 = closed (all arrive at t=0).
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    pub fn closed(n: usize, prompt_len: usize, max_new: usize, seed: u64) -> Self {
+        Self {
+            n_requests: n,
+            tasks: vec![],
+            approx_prompt_len: prompt_len,
+            max_new_tokens: max_new,
+            arrival_rate: 0.0,
+            seed,
+        }
+    }
+
+    pub fn poisson(mut self, rate: f64) -> Self {
+        self.arrival_rate = rate;
+        self
+    }
+
+    pub fn with_tasks(mut self, tasks: &[Task]) -> Self {
+        self.tasks = tasks.to_vec();
+        self
+    }
+
+    pub fn generate(&self) -> Vec<TraceItem> {
+        let mut gen = TaskGen::new(self.seed);
+        let mut rng = Rng::seed_from_u64(self.seed ^ 0x9e3779b97f4a7c15);
+        let tasks = if self.tasks.is_empty() { ALL_TASKS.to_vec() } else { self.tasks.clone() };
+        let mut t = 0.0f64;
+        (0..self.n_requests)
+            .map(|i| {
+                let task = tasks[i % tasks.len()];
+                let sample = gen.sample(task, self.approx_prompt_len);
+                if self.arrival_rate > 0.0 {
+                    t += rng.exp(self.arrival_rate);
+                }
+                TraceItem { arrival_s: t, sample, max_new_tokens: self.max_new_tokens }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_trace_all_at_zero() {
+        let items = TraceSpec::closed(6, 64, 16, 0).generate();
+        assert_eq!(items.len(), 6);
+        assert!(items.iter().all(|i| i.arrival_s == 0.0));
+        // round-robin over all 5 tasks
+        assert_eq!(items[0].sample.task, ALL_TASKS[0]);
+        assert_eq!(items[4].sample.task, ALL_TASKS[4]);
+        assert_eq!(items[5].sample.task, ALL_TASKS[0]);
+    }
+
+    #[test]
+    fn poisson_monotone_arrivals() {
+        let items = TraceSpec::closed(20, 64, 16, 1).poisson(5.0).generate();
+        for w in items.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(items.last().unwrap().arrival_s > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = TraceSpec::closed(5, 64, 16, 7).generate();
+        let b = TraceSpec::closed(5, 64, 16, 7).generate();
+        assert_eq!(a[3].sample.prompt, b[3].sample.prompt);
+    }
+
+    #[test]
+    fn task_filter() {
+        let items = TraceSpec::closed(4, 64, 16, 0)
+            .with_tasks(&[Task::Lookup])
+            .generate();
+        assert!(items.iter().all(|i| i.sample.task == Task::Lookup));
+    }
+}

@@ -1,0 +1,216 @@
+//! Integration tests over the full runtime stack (PJRT + artifacts).
+//!
+//! All scenarios run inside ONE `#[test]` over ONE `Engine`: the PJRT CPU
+//! client in xla_extension 0.5.1 is not safe to destroy and re-create within
+//! a process (SIGSEGV on the 2nd/3rd cycle), so scenarios share the runtime
+//! and swap policy via `Engine::reconfigure` — which is also the production
+//! path for policy sweeps. Skipped cleanly when `artifacts/tiny` is missing
+//! (run `make artifacts` first).
+
+use squeezeattention::config::{PolicyKind, ServeConfig};
+use squeezeattention::coordinator::{Engine, FinishReason, Request, RequestOutput};
+use squeezeattention::model::tokenizer;
+use squeezeattention::workload::{Task, TaskGen, TraceSpec};
+
+const ARTIFACTS: &str = "artifacts/tiny";
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig::new(ARTIFACTS).with_budget(48)
+}
+
+fn run(eng: &mut Engine, cfg: ServeConfig, reqs: Vec<Request>) -> Vec<RequestOutput> {
+    eng.reconfigure(cfg).unwrap();
+    eng.generate_batch(reqs)
+}
+
+fn trace_requests(n: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec<Request> {
+    TraceSpec::closed(n, prompt_len, max_new, seed)
+        .generate()
+        .iter()
+        .enumerate()
+        .map(|(i, it)| Request::new(i as u64, it.sample.prompt.clone(), max_new))
+        .collect()
+}
+
+#[test]
+fn engine_integration_suite() {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return;
+    }
+    let mut eng = Engine::new(base_cfg()).expect("engine boots from artifacts");
+
+    scenario_batch_with_squeeze(&mut eng);
+    scenario_baseline_uniform(&mut eng);
+    scenario_full_cache_never_evicts(&mut eng);
+    scenario_budgets_bound_cache(&mut eng);
+    scenario_h2o_serves(&mut eng);
+    scenario_oom_finish(&mut eng);
+    scenario_oversized_prompt_rejected(&mut eng);
+    scenario_continuous_batching(&mut eng);
+    scenario_cosine_collection(&mut eng);
+    scenario_deterministic_greedy(&mut eng);
+    scenario_jnp_kernel_matches_pallas(&mut eng);
+}
+
+fn scenario_batch_with_squeeze(eng: &mut Engine) {
+    let outs = run(
+        eng,
+        base_cfg().with_policy(PolicyKind::SlidingWindow),
+        trace_requests(4, 96, 12, 7),
+    );
+    assert_eq!(outs.len(), 4);
+    for out in &outs {
+        assert!(matches!(out.finish, FinishReason::Eos | FinishReason::Length));
+        assert!(!out.generated.is_empty());
+        // Algorithm-1 conservation on the actual serving plan.
+        let n_layer = out.plan.budgets.len();
+        assert_eq!(out.plan.total(), n_layer * 48);
+        assert!(out.generated.iter().all(|&t| (0..272).contains(&t)));
+    }
+    assert!(outs.iter().any(|o| o.plan.reallocated), "no request reallocated budgets");
+    assert!(eng.last_run.evictions > 0, "sliding window never evicted");
+    println!("OK scenario_batch_with_squeeze");
+}
+
+fn scenario_baseline_uniform(eng: &mut Engine) {
+    let mut gen = TaskGen::new(3);
+    let s = gen.sample(Task::Copy, 80);
+    let outs = run(eng, base_cfg().with_squeeze(false), vec![Request::new(0, s.prompt, 8)]);
+    let plan = &outs[0].plan;
+    assert!(!plan.reallocated);
+    assert!(plan.budgets.iter().all(|&b| b == plan.budgets[0]));
+    println!("OK scenario_baseline_uniform");
+}
+
+fn scenario_full_cache_never_evicts(eng: &mut Engine) {
+    let mut gen = TaskGen::new(5);
+    let s = gen.sample(Task::Lm, 60);
+    let plen = s.prompt.len();
+    let outs = run(
+        eng,
+        base_cfg().with_policy(PolicyKind::Full),
+        vec![Request::new(0, s.prompt, 10)],
+    );
+    assert_eq!(eng.last_run.evictions, 0);
+    // The cache holds the prompt plus every *processed* token; the final
+    // sampled token is returned but never fed back (request finished).
+    let expected = plen + outs[0].generated.len() - 1;
+    let n_layer = outs[0].plan.budgets.len();
+    assert_eq!(outs[0].final_kv_tokens, expected * n_layer);
+    println!("OK scenario_full_cache_never_evicts");
+}
+
+fn scenario_budgets_bound_cache(eng: &mut Engine) {
+    let mut gen = TaskGen::new(11);
+    let s = gen.sample(Task::Copy, 120);
+    let outs = run(
+        eng,
+        base_cfg().with_policy(PolicyKind::StreamingLlm).with_budget(24),
+        vec![Request::new(0, s.prompt, 16)],
+    );
+    let out = &outs[0];
+    assert!(
+        out.final_kv_tokens <= out.plan.total(),
+        "cache {} exceeds plan {}",
+        out.final_kv_tokens,
+        out.plan.total()
+    );
+    assert!(out.peak_kv_bytes > 0);
+    println!("OK scenario_budgets_bound_cache");
+}
+
+fn scenario_h2o_serves(eng: &mut Engine) {
+    let outs = run(
+        eng,
+        base_cfg().with_policy(PolicyKind::H2o).with_budget(32),
+        trace_requests(2, 100, 10, 13),
+    );
+    assert_eq!(outs.len(), 2);
+    assert!(outs.iter().all(|o| !o.generated.is_empty()));
+    assert!(eng.last_run.evictions > 0, "h2o at budget 32 over 100-token prompts must evict");
+    println!("OK scenario_h2o_serves");
+}
+
+fn scenario_oom_finish(eng: &mut Engine) {
+    let mut cfg = base_cfg().with_policy(PolicyKind::Full);
+    cfg.kv_pool_bytes = 200_000; // a 96-token prompt at 8 layers ≈ 786 KB
+    let mut gen = TaskGen::new(17);
+    let s = gen.sample(Task::Copy, 96);
+    let outs = run(eng, cfg, vec![Request::new(0, s.prompt, 8)]);
+    assert_eq!(outs[0].finish, FinishReason::Oom);
+    assert_eq!(eng.pool().in_use(), 0, "pool must be fully released");
+    println!("OK scenario_oom_finish");
+}
+
+fn scenario_oversized_prompt_rejected(eng: &mut Engine) {
+    let prompt = vec![tokenizer::BOS; 600]; // > largest prefill bucket (512)
+    let outs = run(eng, base_cfg(), vec![Request::new(0, prompt, 4)]);
+    assert_eq!(outs[0].finish, FinishReason::Rejected);
+    println!("OK scenario_oversized_prompt_rejected");
+}
+
+fn scenario_continuous_batching(eng: &mut Engine) {
+    let mut cfg = base_cfg();
+    cfg.max_batch = 4;
+    let outs = run(eng, cfg, trace_requests(7, 64, 6, 23));
+    assert_eq!(outs.len(), 7);
+    let mut ids: Vec<u64> = outs.iter().map(|o| o.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..7).collect::<Vec<u64>>());
+    println!("OK scenario_continuous_batching");
+}
+
+fn scenario_cosine_collection(eng: &mut Engine) {
+    eng.reconfigure(base_cfg()).unwrap();
+    eng.enable_cosine_collection();
+    let mut gen = TaskGen::new(29);
+    let s = gen.sample(Task::Lookup, 90);
+    let plen = s.prompt.len();
+    eng.generate_batch(vec![Request::new(0, s.prompt, 4)]);
+    let stats = eng.cosine_stats().unwrap();
+    let means = stats.layer_means();
+    assert_eq!(means.len(), 8);
+    assert!(means.iter().all(|m| m.is_finite() && (-1.0..=1.01).contains(m)));
+    let row = stats.heatmap_row(0);
+    assert!(row.len() >= plen - 1);
+    println!("OK scenario_cosine_collection");
+}
+
+fn scenario_deterministic_greedy(eng: &mut Engine) {
+    let run_once = |eng: &mut Engine| {
+        let mut gen = TaskGen::new(37);
+        let s = gen.sample(Task::Copy, 72);
+        run(eng, base_cfg(), vec![Request::new(0, s.prompt, 10)])[0].generated.clone()
+    };
+    let a = run_once(eng);
+    let b = run_once(eng);
+    assert_eq!(a, b);
+    println!("OK scenario_deterministic_greedy");
+}
+
+/// Kernel ablation: the jnp-lowered decode/prefill artifacts must produce the
+/// same greedy generations as the pallas-lowered ones (same math).
+fn scenario_jnp_kernel_matches_pallas(eng: &mut Engine) {
+    let manifest = eng.runtime().manifest.clone();
+    if manifest.prefill_buckets("jnp").is_empty() {
+        println!("SKIP scenario_jnp_kernel_matches_pallas (no jnp artifacts)");
+        return;
+    }
+    // jnp prefill bucket is 256 and decode tier (8, 192): craft a fitting job.
+    let mut gen = TaskGen::new(41);
+    let s = gen.sample(Task::Lookup, 200);
+    let pallas_out = run(
+        eng,
+        base_cfg().with_budget(64),
+        vec![Request::new(0, s.prompt.clone(), 8)],
+    );
+    // A second engine in the same process is safe as long as the first one's
+    // client stays alive (no destroy/re-create cycle).
+    let mut eng_jnp = Engine::new(base_cfg().with_budget(64).with_kernel("jnp"))
+        .expect("jnp engine boots");
+    let jnp_out = eng_jnp.generate_batch(vec![Request::new(0, s.prompt, 8)]);
+    assert_eq!(pallas_out[0].generated, jnp_out[0].generated,
+               "pallas vs jnp kernel generations diverged");
+    println!("OK scenario_jnp_kernel_matches_pallas");
+}

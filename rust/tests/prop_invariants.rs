@@ -1,0 +1,279 @@
+//! Property-based tests over the coordinator's core invariants (run via the
+//! in-repo harness `util::prop` — see Cargo.toml offline note).
+
+use squeezeattention::config::SqueezeConfig;
+use squeezeattention::kvcache::{
+    EvictionPolicy, FullCache, H2o, SequenceCache, SlidingWindow, SlotMeta, StreamingLlm,
+};
+use squeezeattention::squeeze::{allocate, kmeans_1d};
+use squeezeattention::util::prop::{check, ensure, ensure_eq};
+use squeezeattention::util::{Json, Rng};
+
+fn random_meta(rng: &mut Rng, n: usize) -> Vec<SlotMeta> {
+    (0..n)
+        .map(|i| SlotMeta { position: i as u32, score: rng.f64() * 10.0 })
+        .collect()
+}
+
+#[test]
+fn allocator_conserves_total_budget() {
+    check("allocator conservation", 300, |rng| {
+        let n = rng.range(4, 96);
+        let means: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let b_init = rng.range(4, 4096);
+        let cfg = SqueezeConfig {
+            enabled: true,
+            p: 0.05 + rng.f64() * 0.95,
+            groups: 3,
+            min_budget: rng.range(1, 8),
+        };
+        let plan = allocate(&means, b_init, &cfg);
+        ensure_eq(plan.total(), n * b_init, "total budget")?;
+        ensure(plan.budgets.iter().all(|&b| b > 0), "all budgets positive")?;
+        ensure_eq(plan.budgets.len(), n, "plan arity")
+    });
+}
+
+#[test]
+fn allocator_identity_when_disabled_or_p1() {
+    check("allocator identity", 100, |rng| {
+        let n = rng.range(4, 40);
+        let means: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let b_init = rng.range(4, 512);
+        let mut cfg = SqueezeConfig { enabled: false, p: 0.3, groups: 3, min_budget: 1 };
+        let plan = allocate(&means, b_init, &cfg);
+        ensure(plan.budgets.iter().all(|&b| b == b_init), "disabled => uniform")?;
+        cfg.enabled = true;
+        cfg.p = 1.0;
+        let plan = allocate(&means, b_init, &cfg);
+        ensure(plan.budgets.iter().all(|&b| b == b_init), "p=1 => uniform")
+    });
+}
+
+#[test]
+fn allocator_unimportant_layers_get_less() {
+    check("allocator direction", 200, |rng| {
+        let n = rng.range(6, 48);
+        // bimodal means with clear separation
+        let means: Vec<f64> = (0..n)
+            .map(|i| if i % 3 == 0 { 0.85 + rng.f64() * 0.1 } else { 0.1 + rng.f64() * 0.2 })
+            .collect();
+        let b_init = rng.range(16, 1024);
+        let cfg = SqueezeConfig { enabled: true, p: 0.3, groups: 3, min_budget: 1 };
+        let plan = allocate(&means, b_init, &cfg);
+        if !plan.reallocated {
+            return Ok(());
+        }
+        let gmax = *plan.groups.iter().max().unwrap();
+        for i in 0..n {
+            if plan.groups[i] == gmax {
+                ensure(plan.budgets[i] <= b_init, format!("G3 layer {i} not squeezed"))?;
+            } else {
+                ensure(plan.budgets[i] >= b_init, format!("important layer {i} shrank"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kmeans_is_order_preserving() {
+    check("kmeans monotone", 200, |rng| {
+        let n = rng.range(3, 64);
+        let vals: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let k = rng.range(1, 5.min(n));
+        let c = kmeans_1d(&vals, k, 60);
+        for i in 0..n {
+            for j in 0..n {
+                if vals[i] < vals[j] && c.assignment[i] > c.assignment[j] {
+                    return Err(format!(
+                        "v[{i}]={} < v[{j}]={} but group {} > {}",
+                        vals[i], vals[j], c.assignment[i], c.assignment[j]
+                    ));
+                }
+            }
+        }
+        ensure(c.assignment.iter().all(|&a| a < k), "groups in range")
+    });
+}
+
+fn policies() -> Vec<Box<dyn EvictionPolicy>> {
+    vec![
+        Box::new(SlidingWindow),
+        Box::new(StreamingLlm::new(4)),
+        Box::new(H2o::new(0.5)),
+        Box::new(H2o::new(0.0)),
+        Box::new(H2o::new(1.0)),
+    ]
+}
+
+#[test]
+fn eviction_policies_respect_contract() {
+    check("eviction contract", 200, |rng| {
+        let n = rng.range(1, 256);
+        let meta = random_meta(rng, n);
+        let budget = rng.range(1, 300);
+        for p in policies() {
+            let keep = p.keep(&meta, budget);
+            ensure(keep.len() <= n, format!("{}: keep > len", p.name()))?;
+            if budget <= n {
+                ensure(
+                    keep.len() == budget.min(n),
+                    format!("{}: kept {} of {n} at budget {budget}", p.name(), keep.len()),
+                )?;
+            } else {
+                ensure_eq(keep.len(), n, p.name())?;
+            }
+            ensure(keep.windows(2).all(|w| w[0] < w[1]),
+                   format!("{}: keep not strictly ascending", p.name()))?;
+            ensure(keep.iter().all(|&i| i < n), format!("{}: out of range", p.name()))?;
+        }
+        // Full cache always keeps everything.
+        ensure_eq(FullCache.keep(&meta, budget).len(), n, "full")
+    });
+}
+
+#[test]
+fn sliding_window_keeps_suffix() {
+    check("sliding window recency", 100, |rng| {
+        let n = rng.range(2, 128);
+        let meta = random_meta(rng, n);
+        let budget = rng.range(1, n);
+        let keep = SlidingWindow.keep(&meta, budget);
+        ensure_eq(keep, (n - budget..n).collect::<Vec<_>>(), "suffix")
+    });
+}
+
+#[test]
+fn streaming_llm_keeps_sinks() {
+    check("streaming sinks", 100, |rng| {
+        let n = rng.range(8, 200);
+        let sinks = rng.range(1, 6);
+        let meta = random_meta(rng, n);
+        let budget = rng.range(sinks + 1, n);
+        let keep = StreamingLlm::new(sinks).keep(&meta, budget);
+        for s in 0..sinks {
+            ensure(keep.contains(&s), format!("sink {s} evicted"))?;
+        }
+        ensure(keep.contains(&(n - 1)), "most recent evicted")
+    });
+}
+
+#[test]
+fn h2o_keeps_top_scores() {
+    check("h2o heavy hitters", 100, |rng| {
+        let n = rng.range(8, 128);
+        let meta = random_meta(rng, n);
+        let budget = rng.range(2, n);
+        let keep = H2o::new(0.0).keep(&meta, budget);
+        // every kept slot's score >= every dropped slot's score (pure-heavy mode)
+        let kept_min = keep.iter().map(|&i| meta[i].score).fold(f64::INFINITY, f64::min);
+        for i in 0..n {
+            if !keep.contains(&i) {
+                ensure(
+                    meta[i].score <= kept_min + 1e-12,
+                    format!("dropped slot {i} outranks kept"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cache_retain_preserves_selected_rows() {
+    check("cache compaction", 150, |rng| {
+        let row = rng.range(1, 16);
+        let n = rng.range(1, 64);
+        let mut cache = SequenceCache::new(1, row);
+        for i in 0..n {
+            let k: Vec<f32> = (0..row).map(|j| (i * row + j) as f32).collect();
+            let v: Vec<f32> = k.iter().map(|x| -x).collect();
+            cache.append(0, &k, &v, i as u32).map_err(|e| e.to_string())?;
+        }
+        // random keep set (sorted, unique)
+        let mut keep: Vec<usize> =
+            (0..n).filter(|_| rng.bool(0.6)).collect();
+        keep.dedup();
+        let expected: Vec<u32> = keep.iter().map(|&i| i as u32).collect();
+        cache.retain(0, &keep).map_err(|e| e.to_string())?;
+        ensure_eq(cache.layer_len(0), keep.len(), "len after retain")?;
+        let positions: Vec<u32> = cache.layers[0].meta.iter().map(|m| m.position).collect();
+        ensure_eq(positions, expected, "positions")?;
+        // payload rows moved with metadata
+        for (slot, &orig) in keep.iter().enumerate() {
+            let got = &cache.layers[0].k[slot * row..(slot + 1) * row];
+            let want: Vec<f32> = (0..row).map(|j| (orig * row + j) as f32).collect();
+            ensure_eq(got.to_vec(), want, "payload row")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_accounting_balances() {
+    use squeezeattention::kvcache::KvPool;
+    check("pool balance", 100, |rng| {
+        let cap = rng.range(1000, 100_000);
+        let pool = KvPool::new(cap);
+        let mut held: Vec<usize> = Vec::new();
+        for _ in 0..200 {
+            if rng.bool(0.6) {
+                let want = rng.range(1, cap / 4);
+                if pool.reserve(want).is_ok() {
+                    held.push(want);
+                }
+            } else if let Some(b) = held.pop() {
+                pool.release(b);
+            }
+            let sum: usize = held.iter().sum();
+            ensure_eq(pool.in_use(), sum, "in_use == sum(held)")?;
+            ensure(pool.in_use() <= cap, "never exceeds capacity")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::num((rng.range_i32(-100_000, 100_000) as f64) / 4.0),
+            3 => {
+                let n = rng.range(0, 12);
+                Json::str((0..n).map(|_| rng.range_i32(32, 126) as u8 as char).collect::<String>())
+            }
+            4 => Json::arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1))),
+            _ => Json::obj(
+                (0..rng.range(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 200, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("{e}: {text}"))?;
+        ensure_eq(back, v, "roundtrip")
+    });
+}
+
+#[test]
+fn budget_spec_monotone_in_prompt() {
+    use squeezeattention::coordinator::BudgetSpec;
+    check("budget spec", 100, |rng| {
+        let f = rng.f64();
+        let p1 = rng.range(8, 512);
+        let p2 = p1 + rng.range(1, 128);
+        let b1 = BudgetSpec::Fraction(f).resolve(p1, 640);
+        let b2 = BudgetSpec::Fraction(f).resolve(p2, 640);
+        ensure(b2 >= b1, "fraction monotone in prompt length")?;
+        ensure(b1 >= 4, "floor")
+    });
+}

@@ -1,0 +1,60 @@
+//! TCP server integration: boot the router + server on an ephemeral port,
+//! drive it over a real socket with the JSON-lines protocol.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{server, RoutePolicy, Router};
+use squeezeattention::util::Json;
+use squeezeattention::workload::{Task, TaskGen};
+
+const ARTIFACTS: &str = "artifacts/tiny";
+
+#[test]
+fn tcp_roundtrip() {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
+        return;
+    }
+    let cfg = ServeConfig::new(ARTIFACTS).with_budget(48);
+    let router = std::sync::Arc::new(Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server::serve(listener, router);
+    });
+
+    let mut gen = TaskGen::new(0);
+    let sample = gen.sample(Task::Lookup, 60);
+    let prompt_json: Vec<String> = sample.prompt.iter().map(|t| t.to_string()).collect();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // two pipelined requests on one connection
+    for id in [1, 2] {
+        writeln!(
+            writer,
+            "{{\"id\": {id}, \"prompt\": [{}], \"max_new_tokens\": 6}}",
+            prompt_json.join(",")
+        )
+        .unwrap();
+    }
+    for expect_id in [1usize, 2] {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(expect_id));
+        let generated = j.get("generated").unwrap().as_arr().unwrap();
+        assert!(!generated.is_empty());
+        assert!(j.get("total_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    // malformed line -> error object, connection stays usable
+    writeln!(writer, "{{nope").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("error").is_some());
+}
