@@ -2,9 +2,12 @@
 //! serving stack — router, worker engine, TCP JSON-lines server — then
 //! drives batched requests over a real socket and reports latency,
 //! throughput, accuracy and KV memory, for Full Cache vs best-baseline vs
-//! +SqueezeAttention.
+//! +SqueezeAttention. Requests are pipelined on one connection, so they
+//! stream into the worker's continuous-batching scheduler and join its
+//! running batch mid-flight.
 //!
-//!     make artifacts && cargo run --release --example e2e_serving
+//!     cargo run --release --example e2e_serving            # sim backend
+//!     SA_ARTIFACTS=artifacts/tiny cargo run --release --example e2e_serving
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -87,25 +90,23 @@ fn run_arm(name: &'static str, cfg: ServeConfig, n: usize) -> anyhow::Result<Arm
 }
 
 fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
+    let artifacts =
+        std::env::var("SA_ARTIFACTS").unwrap_or_else(|_| "sim://tiny".to_string());
     let n: usize = std::env::var("SA_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
-    println!("e2e serving driver: {n} mixed-task requests over TCP per arm\n");
+    println!("e2e serving driver: {n} mixed-task requests over TCP per arm ({artifacts})\n");
 
     let arms: Vec<(&'static str, ServeConfig)> = vec![
-        ("full-cache", ServeConfig::new("artifacts/tiny").with_policy(PolicyKind::Full)),
+        ("full-cache", ServeConfig::new(artifacts.as_str()).with_policy(PolicyKind::Full)),
         (
             "sliding@30% (baseline)",
-            ServeConfig::new("artifacts/tiny")
+            ServeConfig::new(artifacts.as_str())
                 .with_policy(PolicyKind::SlidingWindow)
                 .with_budget_frac(0.3)
                 .with_squeeze(false),
         ),
         (
             "sliding@20% +squeeze",
-            ServeConfig::new("artifacts/tiny")
+            ServeConfig::new(artifacts.as_str())
                 .with_policy(PolicyKind::SlidingWindow)
                 .with_budget_frac(0.2)
                 .with_squeeze(true),

@@ -1,7 +1,9 @@
-//! Quickstart: load the compiled tiny model, serve one request with
-//! SqueezeAttention enabled, and inspect the layer-budget plan it produced.
+//! Quickstart: boot the engine, serve one request with SqueezeAttention
+//! enabled, and inspect the layer-budget plan it produced. Runs on the
+//! simulated backend by default; point SA_ARTIFACTS at an artifact
+//! directory (PJRT build) for the compiled tiny model.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use squeezeattention::config::{PolicyKind, ServeConfig};
 use squeezeattention::coordinator::{Engine, Request};
@@ -9,8 +11,10 @@ use squeezeattention::model::tokenizer;
 use squeezeattention::workload::{answer_accuracy, trim_at_eos, Task, TaskGen};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Engine over the AOT artifacts (PJRT CPU client + HLO-text load).
-    let cfg = ServeConfig::new("artifacts/tiny")
+    // 1. Engine over the artifacts (sim://tiny, or PJRT + HLO-text load).
+    let artifacts =
+        std::env::var("SA_ARTIFACTS").unwrap_or_else(|_| "sim://tiny".to_string());
+    let cfg = ServeConfig::new(artifacts)
         .with_policy(PolicyKind::SlidingWindow) // sequence-wise C_seq
         .with_budget_frac(0.25); // b_init = 25% of the prompt
     let mut engine = Engine::new(cfg)?;

@@ -1,8 +1,9 @@
 //! LongBench-style evaluation: every task × every eviction policy, with and
 //! without SqueezeAttention, at one budget — the cross-product view that
-//! Fig. 3 summarizes per-task.
+//! Fig. 3 summarizes per-task. Runs on the simulated backend by default
+//! (SA_ARTIFACTS overrides).
 //!
-//!     make artifacts && cargo run --release --example serve_longbench
+//!     cargo run --release --example serve_longbench
 
 use squeezeattention::config::{PolicyKind, ServeConfig};
 use squeezeattention::coordinator::Engine;
@@ -10,15 +11,13 @@ use squeezeattention::util::bench::Table;
 use squeezeattention::workload::{evaluate, EvalSpec, ALL_TASKS};
 
 fn main() -> anyhow::Result<()> {
-    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
-    }
+    let artifacts =
+        std::env::var("SA_ARTIFACTS").unwrap_or_else(|_| "sim://tiny".to_string());
     let budget_frac: f64 =
         std::env::var("SA_BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(0.25);
     let n: usize = std::env::var("SA_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(4);
 
-    let mut eng = Engine::new(ServeConfig::new("artifacts/tiny"))?;
+    let mut eng = Engine::new(ServeConfig::new(artifacts.as_str()))?;
     let policies =
         [PolicyKind::SlidingWindow, PolicyKind::StreamingLlm, PolicyKind::H2o];
 
@@ -28,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         for policy in policies {
             let base = evaluate(
                 &mut eng,
-                ServeConfig::new("artifacts/tiny")
+                ServeConfig::new(artifacts.as_str())
                     .with_policy(policy)
                     .with_budget_frac(budget_frac)
                     .with_squeeze(false),
@@ -36,7 +35,7 @@ fn main() -> anyhow::Result<()> {
             )?;
             let sq = evaluate(
                 &mut eng,
-                ServeConfig::new("artifacts/tiny")
+                ServeConfig::new(artifacts.as_str())
                     .with_policy(policy)
                     .with_budget_frac(budget_frac)
                     .with_squeeze(true),

@@ -92,6 +92,10 @@ pub struct ServeConfig {
     pub kv_pool_bytes: usize,
     /// Admission queue depth before backpressure rejects.
     pub queue_depth: usize,
+    /// On KV-pool OOM mid-decode, preempt-and-requeue the youngest running
+    /// sequence instead of failing a request (continuous-batching default).
+    /// Disable to reproduce the paper's hard-OOM table cells.
+    pub preemption: bool,
 }
 
 impl ServeConfig {
@@ -109,6 +113,7 @@ impl ServeConfig {
             max_new_tokens: 64,
             kv_pool_bytes: 0,
             queue_depth: 256,
+            preemption: true,
         }
     }
 
@@ -168,6 +173,9 @@ impl ServeConfig {
         if let Some(q) = j.get("queue_depth").and_then(|v| v.as_usize()) {
             cfg.queue_depth = q;
         }
+        if let Some(p) = j.get("preemption").and_then(|v| v.as_bool()) {
+            cfg.preemption = p;
+        }
         Ok(cfg)
     }
 
@@ -197,6 +205,7 @@ impl ServeConfig {
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("kv_pool_bytes", Json::num(self.kv_pool_bytes as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("preemption", Json::Bool(self.preemption)),
         ])
     }
 
@@ -227,6 +236,11 @@ impl ServeConfig {
 
     pub fn with_kernel(mut self, kernel: &str) -> Self {
         self.kernel = kernel.to_string();
+        self
+    }
+
+    pub fn with_preemption(mut self, preemption: bool) -> Self {
+        self.preemption = preemption;
         self
     }
 }
@@ -272,6 +286,17 @@ mod tests {
         assert!(!cfg.squeeze.enabled);
         assert_eq!(cfg.budget, 7);
         assert_eq!(cfg.budget_frac, Some(0.2));
+    }
+
+    #[test]
+    fn preemption_roundtrip_and_default() {
+        let cfg = ServeConfig::new("a");
+        assert!(cfg.preemption);
+        let off = ServeConfig::from_json(&cfg.clone().with_preemption(false).to_json()).unwrap();
+        assert!(!off.preemption);
+        // absent key keeps the default
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).unwrap().preemption);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! The serving engine: continuous batching over the AOT decode tiers, with
-//! SqueezeAttention layer-budget allocation and per-layer eviction.
+//! The serving engine: a step-driven continuous-batching scheduler over the
+//! runtime's decode tiers, with SqueezeAttention layer-budget allocation and
+//! per-layer eviction.
 //!
 //! Lifecycle of a request (Algorithm 1 mapped onto the runtime):
 //!   1. **Prefill** — run the bucketed prefill artifact; collect the
@@ -14,53 +15,58 @@
 //!      row, fold the attention-mass signal into H2O scores, and re-compress
 //!      any layer over budget.
 //!
+//! The engine is driven one decode step at a time (`step`), so requests can
+//! join and leave the running batch mid-flight:
+//!
+//! * `submit` enqueues (with `queue_depth` backpressure);
+//! * each `step` admits queued requests into free slots under KV-pool
+//!   admission control, runs one batched decode, retires finished sequences
+//!   immediately, and resolves pool OOM by preempting-and-requeueing the
+//!   youngest running sequence (see `coordinator::scheduler`);
+//! * `generate_batch` is the closed-batch compatibility wrapper: enqueue
+//!   everything, `step` until idle, sort outputs by id.
+//!
 //! The engine is synchronous; the async server (`server.rs`) drives it from
 //! a dedicated thread.
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{PolicyKind, ServeConfig};
 use crate::kvcache::{make_policy, EvictionPolicy, KvPool, Reservation, SequenceCache};
-use crate::metrics::ThroughputMeter;
-use crate::model::tokenizer::{self, check_token_map};
+use crate::metrics::{SchedulerMetrics, ThroughputMeter};
 use crate::model::sample;
+use crate::model::tokenizer::{self, check_token_map};
 use crate::runtime::{Runtime, Tensor, TensorI32};
 use crate::squeeze::{allocate, BudgetPlan, CosineStats};
 use crate::util::Rng;
 
 use super::request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
+use super::scheduler::{Active, Queued, Scheduler};
 
-/// One sequence occupying a decode slot.
-struct Active {
-    req: Request,
-    cache: SequenceCache,
-    plan: BudgetPlan,
-    reservation: Reservation,
-    generated: Vec<i32>,
-    /// Absolute position of the *next* token to decode.
-    next_pos: usize,
-    last_token: i32,
-    effective_max_new: usize,
-    /// Set when the pool rejected growth mid-decode (paper's OOM cells).
-    oom: bool,
-    t_admit: Instant,
-    timing: RequestTiming,
-    peak_bytes: usize,
-}
-
-/// Engine-level aggregate statistics for one `generate_batch` run.
+/// Engine-level aggregate statistics for one run (`generate_batch` resets
+/// them; in step-driven mode they accumulate until the next reset).
 #[derive(Debug, Clone, Default)]
 pub struct EngineRunStats {
     pub decode_steps: u64,
     pub generated_tokens: u64,
     pub evictions: u64,
+    /// Sequences preempted and requeued to resolve KV-pool OOM.
+    pub preemptions: u64,
     pub peak_pool_bytes: usize,
     pub wall_s: f64,
     /// Sum over steps of the capacity tier bound (proxy for KV traffic).
     pub kv_slots_touched: u64,
+}
+
+/// Why an admission attempt did not produce a running sequence.
+enum AdmitError {
+    /// The request is finished (rejected, or permanently OOM): forward the
+    /// output to the caller.
+    Terminal(RequestOutput),
+    /// The pool is transiently full: requeue and retry after retirements.
+    Retry(Queued),
 }
 
 pub struct Engine {
@@ -79,6 +85,9 @@ pub struct Engine {
     collect_cosine: Option<CosineStats>,
     /// Sampling RNG (deterministic; greedy sampling never consumes it).
     rng: Rng,
+    sched: Scheduler,
+    meter: ThroughputMeter,
+    run: EngineRunStats,
     pub last_run: EngineRunStats,
 }
 
@@ -97,6 +106,7 @@ impl Engine {
             .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
         let pool = KvPool::new(cfg.kv_pool_bytes);
         let policy = make_policy(&cfg);
+        let sched = Scheduler::new(batch, cfg.queue_depth);
         Ok(Self {
             runtime,
             policy,
@@ -108,6 +118,9 @@ impl Engine {
             scratch: Default::default(),
             collect_cosine: None,
             rng: Rng::seed_from_u64(0x5A5A_5A5A),
+            sched,
+            meter: ThroughputMeter::new(),
+            run: Default::default(),
             last_run: Default::default(),
             cfg,
         })
@@ -116,7 +129,7 @@ impl Engine {
     /// Swap the serving policy/budget configuration without reloading the
     /// runtime (artifacts + kernel must match the loaded ones). Used for
     /// policy sweeps — PJRT clients are expensive and, on some platforms,
-    /// unsafe to re-create within a process.
+    /// unsafe to re-create within a process. Requires an idle scheduler.
     pub fn reconfigure(&mut self, cfg: ServeConfig) -> Result<()> {
         if cfg.artifacts != self.cfg.artifacts || cfg.kernel != self.cfg.kernel {
             return Err(anyhow!(
@@ -124,6 +137,9 @@ impl Engine {
                 cfg.artifacts,
                 self.cfg.artifacts
             ));
+        }
+        if !self.sched.is_idle() {
+            return Err(anyhow!("reconfigure requires an idle scheduler"));
         }
         self.batch = self
             .runtime
@@ -134,6 +150,7 @@ impl Engine {
             .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
         self.policy = make_policy(&cfg);
         self.pool = KvPool::new(cfg.kv_pool_bytes);
+        self.sched = Scheduler::new(self.batch, cfg.queue_depth);
         self.cfg = cfg;
         Ok(())
     }
@@ -155,6 +172,22 @@ impl Engine {
         self.batch
     }
 
+    /// Scheduler queue/occupancy/preemption counters.
+    pub fn sched_metrics(&self) -> &SchedulerMetrics {
+        self.sched.metrics()
+    }
+
+    /// Live run counters (cumulative since the last `generate_batch` reset;
+    /// `wall_s` is only populated by the `generate_batch` wrapper).
+    pub fn run_stats(&self) -> &EngineRunStats {
+        &self.run
+    }
+
+    /// True while any request is queued or running.
+    pub fn has_work(&self) -> bool {
+        !self.sched.is_idle()
+    }
+
     /// Start accumulating cosine heatmap stats across requests (Fig. 2).
     pub fn enable_cosine_collection(&mut self) {
         self.collect_cosine = Some(CosineStats::new(self.n_layer));
@@ -174,83 +207,206 @@ impl Engine {
         }
     }
 
-    /// Serve a closed batch of requests to completion (continuous batching:
-    /// new requests are admitted into slots as earlier ones finish).
-    pub fn generate_batch(&mut self, requests: Vec<Request>) -> Vec<RequestOutput> {
-        let t0 = Instant::now();
-        let mut meter = ThroughputMeter::new();
-        let mut run = EngineRunStats::default();
-        let mut queue: VecDeque<Request> = requests.into();
-        let mut slots: Vec<Option<Active>> = (0..self.batch).map(|_| None).collect();
+    /// Enqueue a request for continuous batching; it will join the running
+    /// batch at the next `step`. `Err` is the immediate backpressure
+    /// rejection produced when the queue is at `cfg.queue_depth`.
+    pub fn submit(&mut self, req: Request) -> std::result::Result<(), RequestOutput> {
+        match self.sched.enqueue(Queued { req, t_submit: Instant::now() }, true) {
+            Ok(()) => Ok(()),
+            Err(q) => Err(Self::immediate_output(&q, FinishReason::Rejected, self.n_layer)),
+        }
+    }
+
+    /// Advance the scheduler by one cycle: admit from the queue into free
+    /// slots, run one batched decode step, retire finished sequences.
+    /// Returns the requests that finished during this step.
+    pub fn step(&mut self) -> Result<Vec<RequestOutput>> {
+        let mut sched = std::mem::take(&mut self.sched);
+        let res = self.step_inner(&mut sched);
+        self.sched = sched;
+        res
+    }
+
+    /// Step until idle, collecting every output (order of completion).
+    pub fn drain(&mut self) -> Vec<RequestOutput> {
         let mut outputs = Vec::new();
-
-        loop {
-            // Admission: fill free slots from the queue.
-            for s in 0..self.batch {
-                if slots[s].is_none() {
-                    if let Some(req) = queue.pop_front() {
-                        match self.admit(req, t0) {
-                            Ok(active) => slots[s] = Some(active),
-                            Err(out) => outputs.push(out),
-                        }
-                    }
-                }
-            }
-            if slots.iter().all(|s| s.is_none()) {
-                break;
-            }
-
-            // One batched decode step over all occupied slots.
-            if let Err(e) = self.step(&mut slots, &mut run, &mut meter) {
-                // Runtime failure: fail all in-flight requests loudly.
-                eprintln!("decode step failed: {e:#}");
-                for slot in slots.iter_mut() {
-                    if let Some(a) = slot.take() {
-                        outputs.push(Self::finish(a, FinishReason::Oom, t0));
-                    }
-                }
-                break;
-            }
-
-            // Collect finished sequences.
-            for slot in slots.iter_mut() {
-                let done = match slot {
-                    Some(a) => {
-                        a.oom
-                            || a.last_token == tokenizer::EOS
-                            || a.generated.len() >= a.effective_max_new
-                    }
-                    None => false,
-                };
-                if done {
-                    let a = slot.take().unwrap();
-                    let reason = if a.oom {
-                        FinishReason::Oom
-                    } else if a.last_token == tokenizer::EOS {
-                        FinishReason::Eos
-                    } else {
-                        FinishReason::Length
-                    };
-                    meter.add_request();
-                    outputs.push(Self::finish(a, reason, t0));
+        while self.has_work() {
+            match self.step() {
+                Ok(outs) => outputs.extend(outs),
+                Err(e) => {
+                    // Defensive only: step() currently resolves decode
+                    // faults internally (fail-in-place), so this arm is for
+                    // future genuinely-fatal error sources. Never hang the
+                    // caller with requests still queued.
+                    eprintln!("scheduler step failed: {e:#}");
+                    outputs.extend(self.fail_all());
+                    break;
                 }
             }
         }
+        outputs
+    }
 
-        run.wall_s = t0.elapsed().as_secs_f64();
-        run.peak_pool_bytes = self.pool.peak();
-        run.generated_tokens = meter.tokens();
-        self.last_run = run;
+    /// Serve a closed batch of requests to completion — a compatibility
+    /// wrapper that drains the continuous-batching scheduler. The queue cap
+    /// is bypassed (a closed batch is not an open-loop arrival process).
+    ///
+    /// Requires an idle scheduler: mixing this with in-flight `submit`ted
+    /// requests would reset their run counters and misdeliver their outputs
+    /// into this batch's return value.
+    pub fn generate_batch(&mut self, requests: Vec<Request>) -> Vec<RequestOutput> {
+        assert!(
+            self.sched.is_idle(),
+            "generate_batch called with requests in flight; use submit/step"
+        );
+        let t0 = Instant::now();
+        self.meter = ThroughputMeter::new();
+        self.run = EngineRunStats::default();
+        for req in requests {
+            let _ = self.sched.enqueue(Queued { req, t_submit: t0 }, false);
+        }
+        let mut outputs = self.drain();
+        self.run.wall_s = t0.elapsed().as_secs_f64();
+        self.run.peak_pool_bytes = self.pool.peak();
+        self.run.generated_tokens = self.meter.tokens();
+        self.last_run = self.run.clone();
         outputs.sort_by_key(|o| o.id);
         outputs
     }
 
-    /// Prefill + squeeze + prompt compression. Returns the slot state, or a
-    /// terminal output (reject / OOM).
-    fn admit(&mut self, req: Request, t0: Instant) -> std::result::Result<Active, RequestOutput> {
-        let t_admit = Instant::now();
-        let mut timing = RequestTiming { queue_s: t_admit.duration_since(t0).as_secs_f64(), ..Default::default() };
+    fn step_inner(&mut self, sched: &mut Scheduler) -> Result<Vec<RequestOutput>> {
+        let mut outputs = Vec::new();
+        self.admit_phase(sched, &mut outputs);
+        // Retire sequences that are already done at admission — the prefill
+        // logits sampled EOS, or max_new_tokens == 1 — before spending a
+        // decode step on them (and before they could over-generate).
+        self.retire_phase(sched, &mut outputs);
+        let occupancy = sched.running();
+        if occupancy == 0 {
+            return Ok(outputs);
+        }
+        if let Err(e) = self.decode_phase(sched, &mut outputs) {
+            // Runtime fault: fail everything in place rather than bubbling
+            // the error past outputs already collected this step (requests
+            // retired pre-decode must not be lost).
+            eprintln!("decode step failed: {e:#}");
+            Self::fail_in_place(sched, self.n_layer, &mut outputs);
+            return Ok(outputs);
+        }
+        self.retire_phase(sched, &mut outputs);
+        sched.note_step(occupancy);
+        // Keep the live counters coherent for step-driven observers
+        // (`wall_s` is only meaningful for the generate_batch window).
+        self.run.generated_tokens = self.meter.tokens();
+        self.run.peak_pool_bytes = self.pool.peak();
+        Ok(outputs)
+    }
+
+    /// Fill free slots from the queue under KV-pool admission control.
+    fn admit_phase(&mut self, sched: &mut Scheduler, outputs: &mut Vec<RequestOutput>) {
+        while sched.has_free_slot() {
+            let est = match sched.queue.front() {
+                Some(q) => self.estimate_admit_bytes(&q.req),
+                None => break,
+            };
+            let running = sched.running();
+            if self.pool.capacity() > 0 && running > 0 {
+                // `est` upper-bounds the admission cache (Jensen: the plan's
+                // per-layer min(budget, prompt) sum never exceeds the
+                // uniform estimate), so deferring on it never starves a
+                // request that would fit — and avoids a wasted prefill per
+                // step while the pool is saturated. Terminal Oom decisions
+                // are made only by the plan-aware predicted-peak check in
+                // `admit`, once the batch has drained.
+                let available = self.pool.capacity().saturating_sub(self.pool.in_use());
+                if est > available {
+                    sched.metrics.deferred_admissions += 1;
+                    break;
+                }
+            }
+            let q = sched.pop_queue().expect("peeked head exists");
+            let allow_retry = running > 0 && self.cfg.preemption;
+            match self.admit(q, allow_retry, sched.next_seq) {
+                Ok(active) => {
+                    sched.next_seq += 1;
+                    sched.place(active);
+                }
+                Err(AdmitError::Terminal(out)) => {
+                    if out.finish == FinishReason::Oom {
+                        sched.metrics.oom_failures += 1;
+                    }
+                    outputs.push(out);
+                }
+                Err(AdmitError::Retry(q)) => {
+                    sched.metrics.deferred_admissions += 1;
+                    sched.requeue_front(q);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Bytes the prompt cache will occupy right after admission (prompt
+    /// compression applied), estimated without running prefill: per layer at
+    /// most `min(b_init, prompt_len)` tokens. Squeeze reallocation conserves
+    /// the per-layer total, so the uniform estimate is exact up to
+    /// min-budget floors.
+    fn estimate_admit_bytes(&self, req: &Request) -> usize {
         let prompt_len = req.prompt.len();
+        let b_init = self.budget_spec().resolve(prompt_len, self.max_seq);
+        self.n_layer * b_init.min(prompt_len) * SequenceCache::token_bytes(self.row_elems)
+    }
+
+    /// New tokens a request can actually generate: `max_new_tokens` clamped
+    /// to the model's sequence capacity (with the engine's 8-token slack).
+    /// Shared by admission (`effective_max_new`) and growth prediction so
+    /// the two can never disagree.
+    fn effective_new_tokens(&self, prompt_len: usize, max_new: usize) -> usize {
+        max_new.min(self.max_seq.saturating_sub(prompt_len + 8)).max(1)
+    }
+
+    /// Peak bytes a sequence can reach under its budget plan: each layer
+    /// grows to at most budget+1 rows (append-then-evict overshoot), never
+    /// beyond the final sequence length.
+    fn predicted_peak_bytes(&self, plan: &BudgetPlan, prompt_len: usize, max_new: usize) -> usize {
+        let final_len = prompt_len + self.effective_new_tokens(prompt_len, max_new);
+        let tokens: usize = plan.budgets.iter().map(|&b| (b + 1).min(final_len)).sum();
+        tokens * SequenceCache::token_bytes(self.row_elems)
+    }
+
+    /// Prefill + squeeze + prompt compression. Returns the slot state, or
+    /// why the request could not start.
+    fn admit(
+        &mut self,
+        q: Queued,
+        allow_retry: bool,
+        seq: u64,
+    ) -> std::result::Result<Active, AdmitError> {
+        let Queued { req, t_submit } = q;
+        let t_admit = Instant::now();
+        let mut timing = RequestTiming {
+            queue_s: t_admit.duration_since(t_submit).as_secs_f64(),
+            ..Default::default()
+        };
+        let prompt_len = req.prompt.len();
+
+        fn reject(
+            req: &Request,
+            timing: RequestTiming,
+            plan: BudgetPlan,
+            finish: FinishReason,
+            kv: usize,
+        ) -> AdmitError {
+            AdmitError::Terminal(RequestOutput {
+                id: req.id,
+                generated: vec![],
+                finish,
+                timing,
+                plan,
+                peak_kv_bytes: 0,
+                final_kv_tokens: kv,
+            })
+        }
 
         let largest = self
             .runtime
@@ -260,15 +416,13 @@ impl Engine {
             .copied()
             .unwrap_or(0);
         if prompt_len == 0 || prompt_len > largest {
-            return Err(RequestOutput {
-                id: req.id,
-                generated: vec![],
-                finish: FinishReason::Rejected,
+            return Err(reject(
+                &req,
                 timing,
-                plan: BudgetPlan::uniform(self.n_layer, 0),
-                peak_kv_bytes: 0,
-                final_kv_tokens: 0,
-            });
+                BudgetPlan::uniform(self.n_layer, 0),
+                FinishReason::Rejected,
+                0,
+            ));
         }
 
         let tp = Instant::now();
@@ -276,15 +430,13 @@ impl Engine {
             Ok(p) => p,
             Err(e) => {
                 eprintln!("prefill failed: {e:#}");
-                return Err(RequestOutput {
-                    id: req.id,
-                    generated: vec![],
-                    finish: FinishReason::Rejected,
+                return Err(reject(
+                    &req,
                     timing,
-                    plan: BudgetPlan::uniform(self.n_layer, 0),
-                    peak_kv_bytes: 0,
-                    final_kv_tokens: 0,
-                });
+                    BudgetPlan::uniform(self.n_layer, 0),
+                    FinishReason::Rejected,
+                    0,
+                ));
             }
         };
         timing.prefill_s = tp.elapsed().as_secs_f64();
@@ -308,15 +460,7 @@ impl Engine {
             Ok(c) => c,
             Err(e) => {
                 eprintln!("cache build failed: {e:#}");
-                return Err(RequestOutput {
-                    id: req.id,
-                    generated: vec![],
-                    finish: FinishReason::Rejected,
-                    timing,
-                    plan,
-                    peak_kv_bytes: 0,
-                    final_kv_tokens: 0,
-                });
+                return Err(reject(&req, timing, plan, FinishReason::Rejected, 0));
             }
         };
 
@@ -329,36 +473,39 @@ impl Engine {
             }
         }
 
+        // Plan-aware growth prediction: a capped pool that cannot hold this
+        // sequence even alone means it can never finish — fail fast rather
+        // than preempt the world and still OOM.
+        if self.pool.capacity() > 0
+            && self.predicted_peak_bytes(&plan, prompt_len, req.max_new_tokens)
+                > self.pool.capacity()
+        {
+            let kv = cache.total_tokens();
+            return Err(reject(&req, timing, plan, FinishReason::Oom, kv));
+        }
+
         let reservation = match Reservation::new(&self.pool, cache.bytes()) {
             Ok(r) => r,
+            Err(_) if allow_retry => return Err(AdmitError::Retry(Queued { req, t_submit })),
             Err(_) => {
-                return Err(RequestOutput {
-                    id: req.id,
-                    generated: vec![],
-                    finish: FinishReason::Oom,
-                    timing,
-                    plan,
-                    peak_kv_bytes: 0,
-                    final_kv_tokens: cache.total_tokens(),
-                });
+                let kv = cache.total_tokens();
+                return Err(reject(&req, timing, plan, FinishReason::Oom, kv));
             }
         };
 
         // First decoded token comes from the prefill logits.
         let first = sample(&pre.logits.data, req.sampling, &mut self.rng);
-        timing.first_token_s = t_admit.elapsed().as_secs_f64() + timing.queue_s;
+        timing.first_token_s = t_submit.elapsed().as_secs_f64();
 
-        let effective_max_new = req
-            .max_new_tokens
-            .min(self.max_seq.saturating_sub(prompt_len + 8))
-            .max(1);
+        let effective_max_new = self.effective_new_tokens(prompt_len, req.max_new_tokens);
         let peak = cache.bytes();
         Ok(Active {
             generated: vec![first],
             next_pos: prompt_len,
             last_token: first,
             effective_max_new,
-            oom: false,
+            seq,
+            t_submit,
             t_admit,
             timing,
             peak_bytes: peak,
@@ -369,36 +516,17 @@ impl Engine {
         })
     }
 
-    fn finish(a: Active, reason: FinishReason, _t0: Instant) -> RequestOutput {
-        let mut timing = a.timing;
-        timing.total_s = a.t_admit.elapsed().as_secs_f64() + timing.queue_s;
-        let mut generated = a.generated;
-        // Trim a trailing EOS for downstream exact-match scoring? No: keep
-        // the raw stream; scorers decide.
-        if reason == FinishReason::Oom {
-            generated.clear();
-        }
-        RequestOutput {
-            id: a.req.id,
-            generated,
-            finish: reason,
-            timing,
-            plan: a.plan,
-            peak_kv_bytes: a.peak_bytes,
-            final_kv_tokens: a.cache.total_tokens(),
-        }
-    }
-
-    /// One batched decode step over occupied slots.
-    fn step(
+    /// One batched decode step over occupied slots, with OOM resolved by
+    /// preempting the youngest running sequence.
+    fn decode_phase(
         &mut self,
-        slots: &mut [Option<Active>],
-        run: &mut EngineRunStats,
-        meter: &mut ThroughputMeter,
+        sched: &mut Scheduler,
+        outputs: &mut Vec<RequestOutput>,
     ) -> Result<()> {
         let b = self.batch;
         // Tier: smallest capacity covering every layer cache + the new token.
-        let needed = slots
+        let needed = sched
+            .slots
             .iter()
             .flatten()
             .map(|a| a.cache.max_layer_len())
@@ -424,7 +552,7 @@ impl Engine {
         let mut tokens = vec![tokenizer::PAD; b];
         let mut positions = vec![0i32; b];
         let mut lens = vec![0i32; self.n_layer * b];
-        for (i, slot) in slots.iter().enumerate() {
+        for (i, slot) in sched.slots.iter().enumerate() {
             if let Some(a) = slot {
                 tokens[i] = a.last_token;
                 positions[i] = a.next_pos as i32;
@@ -442,16 +570,16 @@ impl Engine {
         );
         self.scratch.insert(tier, (k_buf, v_buf));
         let out = out?;
-        run.decode_steps += 1;
-        run.kv_slots_touched += (self.n_layer * b * m) as u64;
-        meter.add_decode_step();
+        self.run.decode_steps += 1;
+        self.run.kv_slots_touched += (self.n_layer * b * m) as u64;
+        self.meter.add_decode_step();
 
         let vocab = self.runtime.manifest.model.vocab;
         let needs_scores = self.policy.needs_scores();
-        for (i, slot) in slots.iter_mut().enumerate() {
-            let Some(a) = slot else { continue };
 
-            // Append the new KV row to every layer, then fold H2O scores.
+        // Append the new KV row to every layer, then fold H2O scores.
+        for (i, slot) in sched.slots.iter_mut().enumerate() {
+            let Some(a) = slot else { continue };
             let pos = a.next_pos as u32;
             for layer in 0..self.n_layer {
                 let base = (layer * b + i) * self.row_elems;
@@ -464,41 +592,176 @@ impl Engine {
                     a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n]);
                 }
             }
+        }
 
-            // Charge the pool for the appended rows; OOM kills the request.
-            let new_bytes = a.cache.bytes();
-            if a.reservation.resize(new_bytes).is_err() {
-                a.oom = true;
-                continue;
+        // Pool accounting oldest-first: charge the appended rows; on OOM
+        // preempt the youngest other sequence and retry. A sequence fails
+        // with Oom only when it cannot grow with the pool otherwise empty.
+        let mut order: Vec<(u64, usize)> = sched
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|a| (a.seq, i)))
+            .collect();
+        order.sort_unstable();
+        for (_, idx) in order {
+            if sched.slots[idx].is_none() {
+                continue; // preempted by an older sequence in this pass
             }
-            a.peak_bytes = a.peak_bytes.max(new_bytes);
+            loop {
+                let new_bytes = sched.slots[idx].as_ref().expect("checked occupied").cache.bytes();
+                if sched.slots[idx]
+                    .as_mut()
+                    .expect("checked occupied")
+                    .reservation
+                    .resize(new_bytes)
+                    .is_ok()
+                {
+                    let a = sched.slots[idx].as_mut().expect("checked occupied");
+                    a.peak_bytes = a.peak_bytes.max(new_bytes);
+                    break;
+                }
+                let victim = if self.cfg.preemption && sched.running() > 1 {
+                    sched.youngest_running()
+                } else {
+                    None
+                };
+                match victim {
+                    Some(v) if v != idx => {
+                        // Preempt the youngest running sequence: requeue its
+                        // original request, then retry the failed grow.
+                        // Dropping the victim's Active releases its pool
+                        // reservation (RAII), making room.
+                        let va = sched.slots[v].take().expect("victim occupied");
+                        sched.metrics.preemptions += 1;
+                        self.run.preemptions += 1;
+                        sched.requeue_front(Queued { req: va.req, t_submit: va.t_submit });
+                    }
+                    Some(_) => {
+                        // This sequence IS the youngest: it yields to the
+                        // older work instead of evicting it.
+                        let a = sched.slots[idx].take().expect("checked occupied");
+                        sched.metrics.preemptions += 1;
+                        self.run.preemptions += 1;
+                        sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit });
+                        break;
+                    }
+                    None => {
+                        // Alone (or preemption disabled) and still too big:
+                        // a genuine OOM failure.
+                        let a = sched.slots[idx].take().expect("checked occupied");
+                        sched.metrics.oom_failures += 1;
+                        outputs.push(Self::finish(a, FinishReason::Oom));
+                        break;
+                    }
+                }
+            }
+            let Some(a) = sched.slots[idx].as_mut() else { continue };
 
             // Sample the next token from this slot's logits row.
-            let row = &out.logits.data[i * vocab..(i + 1) * vocab];
+            let row = &out.logits.data[idx * vocab..(idx + 1) * vocab];
             let tok = sample(row, a.req.sampling, &mut self.rng);
             a.generated.push(tok);
             a.last_token = tok;
             a.next_pos += 1;
-            meter.add_tokens(1);
-            if a.generated.len() == 1 {
-                a.timing.first_token_s = a.t_admit.elapsed().as_secs_f64() + a.timing.queue_s;
-            }
+            self.meter.add_tokens(1);
 
             // Per-layer re-compression with each layer's own budget
             // (Algorithm 1, lines 15–19).
+            let grown = a.cache.bytes();
             for layer in 0..self.n_layer {
                 let budget = a.plan.budgets[layer];
                 if a.cache.layer_len(layer) > budget {
                     let keep = self.policy.keep(&a.cache.layers[layer].meta, budget);
                     a.cache.retain(layer, &keep)?;
-                    run.evictions += 1;
+                    self.run.evictions += 1;
                 }
             }
             let shrunk = a.cache.bytes();
-            if shrunk != new_bytes {
+            if shrunk != grown {
                 let _ = a.reservation.resize(shrunk);
             }
         }
         Ok(())
+    }
+
+    /// Free the slots of finished sequences so the next step can admit.
+    fn retire_phase(&mut self, sched: &mut Scheduler, outputs: &mut Vec<RequestOutput>) {
+        for slot in sched.slots.iter_mut() {
+            let done = match slot {
+                Some(a) => {
+                    a.last_token == tokenizer::EOS || a.generated.len() >= a.effective_max_new
+                }
+                None => false,
+            };
+            if done {
+                let a = slot.take().expect("checked occupied");
+                let reason = if a.last_token == tokenizer::EOS {
+                    FinishReason::Eos
+                } else {
+                    FinishReason::Length
+                };
+                self.meter.add_request();
+                sched.metrics.completed += 1;
+                outputs.push(Self::finish(a, reason));
+            }
+        }
+        sched.refresh_gauges();
+    }
+
+    /// Fail every in-flight and queued request (runtime fault path — not a
+    /// memory condition, so the reason is `Failed`, not `Oom`).
+    fn fail_in_place(sched: &mut Scheduler, n_layer: usize, outputs: &mut Vec<RequestOutput>) {
+        for slot in sched.slots.iter_mut() {
+            if let Some(a) = slot.take() {
+                outputs.push(Self::finish(a, FinishReason::Failed));
+            }
+        }
+        while let Some(q) = sched.pop_queue() {
+            outputs.push(Self::immediate_output(&q, FinishReason::Failed, n_layer));
+        }
+        sched.refresh_gauges();
+    }
+
+    /// `fail_in_place` over the engine's own scheduler (drain's fault path).
+    fn fail_all(&mut self) -> Vec<RequestOutput> {
+        let mut outputs = Vec::new();
+        let mut sched = std::mem::take(&mut self.sched);
+        Self::fail_in_place(&mut sched, self.n_layer, &mut outputs);
+        self.sched = sched;
+        outputs
+    }
+
+    fn finish(a: Active, reason: FinishReason) -> RequestOutput {
+        let mut timing = a.timing;
+        timing.total_s = a.t_submit.elapsed().as_secs_f64();
+        let mut generated = a.generated;
+        // Keep the raw stream on normal finishes; scorers decide about EOS.
+        if matches!(reason, FinishReason::Oom | FinishReason::Failed) {
+            generated.clear();
+        }
+        RequestOutput {
+            id: a.req.id,
+            generated,
+            finish: reason,
+            timing,
+            plan: a.plan,
+            peak_kv_bytes: a.peak_bytes,
+            final_kv_tokens: a.cache.total_tokens(),
+        }
+    }
+
+    /// Output for a request that never reached a decode slot.
+    fn immediate_output(q: &Queued, finish: FinishReason, n_layer: usize) -> RequestOutput {
+        let total = q.t_submit.elapsed().as_secs_f64();
+        RequestOutput {
+            id: q.req.id,
+            generated: vec![],
+            finish,
+            timing: RequestTiming { queue_s: total, total_s: total, ..Default::default() },
+            plan: BudgetPlan::uniform(n_layer, 0),
+            peak_kv_bytes: 0,
+            final_kv_tokens: 0,
+        }
     }
 }

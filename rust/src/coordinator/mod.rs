@@ -1,12 +1,44 @@
-//! Layer 3 — the serving coordinator: engine (continuous batching +
-//! SqueezeAttention budgets + eviction), router (multi-worker), TCP server,
-//! and the request/response types.
+//! Layer 3 — the serving coordinator.
+//!
+//! Components, outermost in:
+//!
+//! * **server** — JSON-lines TCP front-end; pipelines every request on a
+//!   connection into the router without waiting for earlier responses.
+//! * **router** — spreads requests across engine workers (least-loaded or
+//!   round-robin); each worker drives its engine one decode step at a time,
+//!   so requests arriving mid-flight join the running batch.
+//! * **engine** — prefill, SqueezeAttention budget allocation, per-layer
+//!   eviction, and the batched decode hot path.
+//! * **scheduler** — the continuous-batching state machine the engine
+//!   steps:
+//!
+//! ```text
+//!             submit (queue_depth backpressure)
+//!                │
+//!                v            admission control
+//!   ┌─────────► queue ──────(KvPool headroom + ─────► running batch
+//!   │                         BudgetPlan growth        │  one decode
+//!   │ preempt youngest                prediction)      │  step at a time
+//!   │ on pool OOM                                      v
+//!   └──────────────────────────────────────────── retire on EOS/length
+//!                                                      │
+//!                                                      v
+//!                                               RequestOutput
+//! ```
+//!
+//! A sequence only fails with `FinishReason::Oom` when it cannot fit in the
+//! KV pool even with every other sequence preempted; otherwise OOM pressure
+//! is resolved by preempting the youngest running sequence and requeueing
+//! its request (restart-from-scratch). `Engine::generate_batch` remains as
+//! a closed-batch compatibility wrapper that drains the scheduler.
 
 pub mod engine;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 
 pub use engine::{Engine, EngineRunStats};
 pub use request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
 pub use router::{RoutePolicy, Router};
+pub use scheduler::Scheduler;

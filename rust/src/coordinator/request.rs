@@ -52,6 +52,8 @@ pub enum FinishReason {
     Oom,
     /// Rejected before prefill (queue backpressure).
     Rejected,
+    /// Runtime fault (decode/backend error) — not a memory condition.
+    Failed,
 }
 
 /// Timing breakdown of one request.

@@ -6,7 +6,15 @@
 //! the least outstanding work (least-loaded, falling back to round-robin on
 //! ties) — the same shape as vLLM's router in front of engine replicas.
 //! Plain std threading: the offline dependency set has no tokio.
+//!
+//! The worker loop is step-driven: it drains its channel into the engine's
+//! scheduler queue between decode steps, so a request submitted while a
+//! batch is running joins that batch at the next step instead of waiting
+//! for the whole batch to finish (continuous batching across the network
+//! path). Request ids are rewritten to a worker-local ticket while in
+//! flight, so concurrent connections may reuse ids safely.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -93,8 +101,10 @@ impl Router {
         Ok(self.submit_async(request)?.recv()?)
     }
 
-    /// Route one request; returns a receiver for the eventual output (lets a
-    /// caller pipeline many requests before collecting).
+    /// Route one request; returns a receiver for the eventual output. The
+    /// request enters its worker's scheduler queue immediately and joins the
+    /// running batch at that worker's next decode step — callers pipeline
+    /// many requests and collect later.
     pub fn submit_async(&self, request: Request) -> Result<mpsc::Receiver<RequestOutput>> {
         let w = &self.workers[self.pick()];
         w.inflight.fetch_add(1, Ordering::Relaxed);
@@ -114,26 +124,83 @@ impl Router {
     }
 }
 
-/// Worker loop: micro-batches whatever is queued (up to the engine's slot
-/// count) into one `generate_batch` call — the dynamic batching the paper's
-/// throughput tables rely on.
+/// In-flight bookkeeping for one submitted job: where to send the output and
+/// the caller's original request id (ids are rewritten to worker-local
+/// tickets while inside the engine).
+struct Pending {
+    reply: mpsc::Sender<RequestOutput>,
+    original_id: u64,
+}
+
+/// Worker loop: continuous batching. Jobs are pulled into the engine's
+/// scheduler queue whenever the loop is between decode steps — non-blocking
+/// while the engine has work (so new arrivals join the running batch), and a
+/// blocking `recv` only when idle.
 fn worker_loop(mut engine: Engine, rx: mpsc::Receiver<Job>, inflight: Arc<AtomicUsize>) {
-    while let Ok(first) = rx.recv() {
-        let mut jobs = vec![first];
-        while jobs.len() < engine.slot_count() {
-            match rx.try_recv() {
-                Ok(j) => jobs.push(j),
-                Err(_) => break,
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut ticket: u64 = 0;
+    loop {
+        // Ingest: block only when idle; otherwise take whatever is queued.
+        if !engine.has_work() && pending.is_empty() {
+            match rx.recv() {
+                Ok(job) => ingest(&mut engine, job, &mut pending, &mut ticket, &inflight),
+                Err(_) => return, // router dropped — shut down
             }
         }
-        let requests: Vec<Request> = jobs.iter().map(|j| j.request.clone()).collect();
-        let mut outputs = engine.generate_batch(requests);
-        // generate_batch returns outputs sorted by id; match them back.
-        for job in jobs {
-            let idx = outputs.iter().position(|o| o.id == job.request.id);
-            if let Some(i) = idx {
-                let _ = job.reply.send(outputs.swap_remove(i));
+        while let Ok(job) = rx.try_recv() {
+            ingest(&mut engine, job, &mut pending, &mut ticket, &inflight);
+        }
+
+        // One decode step; completed requests are answered immediately.
+        // (step() resolves decode faults internally by failing requests in
+        // place — the Err arm is defensive, for future fatal error sources.)
+        let outputs = match engine.step() {
+            Ok(outs) => outs,
+            Err(e) => {
+                eprintln!("worker step failed: {e:#}");
+                engine.drain()
             }
+        };
+        for mut out in outputs {
+            if let Some(p) = pending.remove(&out.id) {
+                out.id = p.original_id;
+                let _ = p.reply.send(out);
+                inflight.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+
+        // Defensive: an idle engine with pending entries means outputs were
+        // lost (engine invariant violated). Drop the reply senders so the
+        // callers error out instead of hanging, and avoid a busy spin here.
+        if !engine.has_work() && !pending.is_empty() {
+            eprintln!("worker: {} request(s) vanished without output", pending.len());
+            for _ in pending.drain() {
+                inflight.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn ingest(
+    engine: &mut Engine,
+    job: Job,
+    pending: &mut HashMap<u64, Pending>,
+    ticket: &mut u64,
+    inflight: &Arc<AtomicUsize>,
+) {
+    let Job { mut request, reply } = job;
+    let original_id = request.id;
+    let id = *ticket;
+    *ticket += 1;
+    request.id = id;
+    match engine.submit(request) {
+        Ok(()) => {
+            pending.insert(id, Pending { reply, original_id });
+        }
+        Err(mut out) => {
+            // Queue backpressure: answer the rejection immediately.
+            out.id = original_id;
+            let _ = reply.send(out);
             inflight.fetch_sub(1, Ordering::Relaxed);
         }
     }

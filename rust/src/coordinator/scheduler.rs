@@ -1,0 +1,255 @@
+//! Continuous-batching scheduler state: the admission queue, the running
+//! batch (decode slots), and the metrics that describe them.
+//!
+//! The scheduler is a passive state machine driven by `Engine::step`; each
+//! step moves requests through
+//!
+//! ```text
+//!   submit ──> queue ──admit──> running ──retire──> finished output
+//!                ^                 │
+//!                └────requeue──────┘  (preempted on pool OOM)
+//! ```
+//!
+//! * **Admission** pops queued requests into free slots between decode
+//!   steps, gated by a KV-pool headroom estimate (see
+//!   `Engine::estimate_admit_bytes`) so a full pool does not trigger
+//!   wasted prefills.
+//! * **Retirement** frees a slot the moment its sequence finishes (EOS /
+//!   length / OOM), so the very next step can admit from the queue —
+//!   requests join and leave a running batch mid-flight.
+//! * **Preemption**: when a sequence cannot grow its KV reservation, the
+//!   youngest running sequence (possibly the failing one itself — it then
+//!   yields to older work) is dropped and its original request is requeued
+//!   at the front (restart-from-scratch semantics: its prompt is
+//!   re-prefilled on re-admission and partial output discarded). The oldest
+//!   sequence is never preempted, which guarantees forward progress; a
+//!   sequence only fails with `FinishReason::Oom` if it cannot fit with the
+//!   pool otherwise empty.
+//!
+//! The scheduler owns no model state; `Active` carries everything a running
+//! sequence needs (its per-sequence cache, budget plan, and RAII pool
+//! reservation, so dropping an `Active` always releases its bytes).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::kvcache::{Reservation, SequenceCache};
+use crate::metrics::SchedulerMetrics;
+use crate::squeeze::BudgetPlan;
+
+use super::request::{Request, RequestTiming};
+
+/// A request waiting for admission, with its original submission time so
+/// queue latency (and latency across preemptions) is accounted end-to-end.
+pub(crate) struct Queued {
+    pub req: Request,
+    pub t_submit: Instant,
+}
+
+/// One sequence occupying a decode slot.
+pub(crate) struct Active {
+    pub req: Request,
+    pub cache: SequenceCache,
+    pub plan: BudgetPlan,
+    pub reservation: Reservation,
+    pub generated: Vec<i32>,
+    /// Absolute position of the *next* token to decode.
+    pub next_pos: usize,
+    pub last_token: i32,
+    pub effective_max_new: usize,
+    /// Admission ordinal — larger = younger (preemption picks the max).
+    pub seq: u64,
+    pub t_submit: Instant,
+    pub t_admit: Instant,
+    pub timing: RequestTiming,
+    pub peak_bytes: usize,
+}
+
+/// Queue + running batch + counters. Created sized to the engine's decode
+/// slot count; `Default` builds an empty zero-slot scheduler (used only to
+/// move the real one out of the engine during a step).
+pub struct Scheduler {
+    pub(crate) queue: VecDeque<Queued>,
+    pub(crate) slots: Vec<Option<Active>>,
+    pub(crate) metrics: SchedulerMetrics,
+    pub(crate) next_seq: u64,
+    /// Queue backpressure threshold (0 = unbounded).
+    pub(crate) max_queue: usize,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new(0, 0)
+    }
+}
+
+impl Scheduler {
+    pub(crate) fn new(slots: usize, max_queue: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            slots: (0..slots).map(|_| None).collect(),
+            metrics: SchedulerMetrics { slots, ..Default::default() },
+            next_seq: 0,
+            max_queue,
+        }
+    }
+
+    pub fn running(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn metrics(&self) -> &SchedulerMetrics {
+        &self.metrics
+    }
+
+    pub(crate) fn has_free_slot(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// Enqueue at the back; `Err` returns the item when backpressure applies
+    /// (cap enforced only for `enforce_cap`, i.e. open-loop submission).
+    pub(crate) fn enqueue(&mut self, q: Queued, enforce_cap: bool) -> Result<(), Queued> {
+        if enforce_cap && self.max_queue > 0 && self.queue.len() >= self.max_queue {
+            self.metrics.rejected += 1;
+            return Err(q);
+        }
+        self.queue.push_back(q);
+        self.note_queue();
+        Ok(())
+    }
+
+    /// Requeue at the front (preemption / transient admission failure) —
+    /// never subject to the backpressure cap.
+    pub(crate) fn requeue_front(&mut self, q: Queued) {
+        self.queue.push_front(q);
+        self.note_queue();
+    }
+
+    pub(crate) fn pop_queue(&mut self) -> Option<Queued> {
+        let q = self.queue.pop_front();
+        self.metrics.queue_depth = self.queue.len();
+        q
+    }
+
+    fn note_queue(&mut self) {
+        self.metrics.queue_depth = self.queue.len();
+        self.metrics.queue_peak = self.metrics.queue_peak.max(self.queue.len());
+    }
+
+    /// Place a newly admitted sequence into the first free slot.
+    pub(crate) fn place(&mut self, active: Active) {
+        let slot = self
+            .slots
+            .iter_mut()
+            .find(|s| s.is_none())
+            .expect("place() requires a free slot");
+        *slot = Some(active);
+        self.metrics.admitted += 1;
+        let running = self.running();
+        self.metrics.running = running;
+        self.metrics.peak_occupancy = self.metrics.peak_occupancy.max(running);
+    }
+
+    /// Index of the youngest running sequence (largest admission ordinal) —
+    /// the preemption victim. LIFO preemption keeps the oldest work moving,
+    /// which is what guarantees forward progress under a capped pool.
+    pub(crate) fn youngest_running(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .max_by_key(|(_, s)| s.as_ref().map(|a| a.seq))
+            .map(|(i, _)| i)
+    }
+
+    /// Refresh the gauges after a step.
+    pub(crate) fn note_step(&mut self, batch_occupancy: usize) {
+        self.metrics.steps += 1;
+        self.metrics.occupancy_sum += batch_occupancy as u64;
+        self.refresh_gauges();
+    }
+
+    /// Refresh the occupancy/queue gauges (used by retirements and fault
+    /// paths that bypass `note_step`, so an idle engine never reports a
+    /// phantom running sequence).
+    pub(crate) fn refresh_gauges(&mut self) {
+        self.metrics.running = self.running();
+        self.metrics.queue_depth = self.queue.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::KvPool;
+
+    fn dummy_active(seq: u64, pool: &KvPool) -> Active {
+        Active {
+            req: Request::new(seq, vec![1, 2, 3], 4),
+            cache: SequenceCache::new(1, 4),
+            plan: BudgetPlan::uniform(1, 8),
+            reservation: Reservation::new(pool, 0).unwrap(),
+            generated: vec![],
+            next_pos: 3,
+            last_token: 1,
+            effective_max_new: 4,
+            seq,
+            t_submit: Instant::now(),
+            t_admit: Instant::now(),
+            timing: RequestTiming::default(),
+            peak_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn queue_cap_and_requeue_bypass() {
+        let mut s = Scheduler::new(2, 2);
+        let q = |id| Queued { req: Request::new(id, vec![1], 1), t_submit: Instant::now() };
+        assert!(s.enqueue(q(0), true).is_ok());
+        assert!(s.enqueue(q(1), true).is_ok());
+        assert!(s.enqueue(q(2), true).is_err());
+        assert_eq!(s.metrics().rejected, 1);
+        // requeue ignores the cap and goes to the front
+        s.requeue_front(q(9));
+        assert_eq!(s.queue_len(), 3);
+        assert_eq!(s.pop_queue().unwrap().req.id, 9);
+        assert_eq!(s.metrics().queue_peak, 3);
+    }
+
+    #[test]
+    fn place_and_youngest_selection() {
+        let pool = KvPool::unlimited();
+        let mut s = Scheduler::new(3, 0);
+        s.place(dummy_active(10, &pool));
+        s.place(dummy_active(11, &pool));
+        s.place(dummy_active(12, &pool));
+        assert_eq!(s.running(), 3);
+        assert_eq!(s.metrics().peak_occupancy, 3);
+        // youngest overall is slot 2 (seq 12)
+        assert_eq!(s.youngest_running(), Some(2));
+        s.slots[2] = None;
+        assert_eq!(s.youngest_running(), Some(1));
+        s.slots[1] = None;
+        assert_eq!(s.youngest_running(), Some(0));
+        s.slots[0] = None;
+        assert_eq!(s.youngest_running(), None);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn step_gauges() {
+        let mut s = Scheduler::new(4, 0);
+        s.note_step(3);
+        s.note_step(1);
+        assert_eq!(s.metrics().steps, 2);
+        assert!((s.metrics().mean_occupancy() - 2.0).abs() < 1e-12);
+    }
+}

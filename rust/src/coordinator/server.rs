@@ -1,22 +1,26 @@
 //! JSON-lines TCP front-end over the router (std::net — no tokio in the
-//! offline dependency set; one thread per connection).
+//! offline dependency set; one reader + one writer thread per connection).
 //!
 //! Wire protocol (one JSON object per line):
 //!   -> {"id": 1, "prompt": [256, 5, 6, 257], "max_new_tokens": 32}
 //!   <- {"id": 1, "generated": [...], "finish": "eos", "total_s": 0.42}
 //!
-//! This is deliberately minimal — enough to drive the engine from any
-//! language and for the e2e example to exercise a real network path.
+//! Every parsed line is submitted to the router *immediately* (not after the
+//! previous response), so pipelined requests stream into a worker's
+//! scheduler queue and join its running batch mid-flight. Responses are
+//! written back in request order per connection; malformed lines produce an
+//! in-order `{"error": ...}` object and the connection stays usable.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::util::Json;
 
-use super::request::{FinishReason, Request};
+use super::request::{FinishReason, Request, RequestOutput};
 use super::router::Router;
 
 fn finish_str(f: FinishReason) -> &'static str {
@@ -25,6 +29,7 @@ fn finish_str(f: FinishReason) -> &'static str {
         FinishReason::Length => "length",
         FinishReason::Oom => "oom",
         FinishReason::Rejected => "rejected",
+        FinishReason::Failed => "failed",
     }
 }
 
@@ -44,7 +49,7 @@ pub fn parse_wire_request(line: &str) -> Result<Request> {
 }
 
 /// Encode one wire response line.
-pub fn encode_wire_response(out: &super::request::RequestOutput) -> String {
+pub fn encode_wire_response(out: &RequestOutput) -> String {
     Json::obj(vec![
         ("id", Json::num(out.id as f64)),
         ("generated", Json::arr(out.generated.iter().map(|&t| Json::num(t as f64)))),
@@ -68,29 +73,52 @@ pub fn serve(listener: TcpListener, router: Arc<Router>) -> Result<()> {
     }
 }
 
+/// One in-order response slot for the writer thread: either a pending engine
+/// output or an immediate protocol error.
+enum PendingLine {
+    Output(mpsc::Receiver<RequestOutput>),
+    Error(String),
+}
+
 fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
-    let mut writer = stream.try_clone()?;
+    let writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
+    let (tx, rx) = mpsc::channel::<PendingLine>();
+    let responder = std::thread::spawn(move || write_loop(writer, rx));
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        match parse_wire_request(&line) {
-            Ok(req) => {
-                let out = router.submit(req)?;
-                writeln!(writer, "{}", encode_wire_response(&out))?;
-            }
-            Err(e) => {
-                writeln!(
-                    writer,
-                    "{}",
-                    Json::obj(vec![("error", Json::str(e.to_string()))])
-                )?;
-            }
+        let item = match parse_wire_request(&line) {
+            Ok(req) => match router.submit_async(req) {
+                Ok(rx_out) => PendingLine::Output(rx_out),
+                Err(e) => PendingLine::Error(e.to_string()),
+            },
+            Err(e) => PendingLine::Error(e.to_string()),
+        };
+        if tx.send(item).is_err() {
+            break; // writer gone (client hung up mid-stream)
         }
     }
+    drop(tx);
+    let _ = responder.join();
     Ok(())
+}
+
+fn write_loop(mut writer: TcpStream, rx: mpsc::Receiver<PendingLine>) {
+    for item in rx {
+        let line = match item {
+            PendingLine::Output(rx_out) => match rx_out.recv() {
+                Ok(out) => encode_wire_response(&out),
+                Err(_) => Json::obj(vec![("error", Json::str("request dropped"))]).to_string(),
+            },
+            PendingLine::Error(e) => Json::obj(vec![("error", Json::str(e))]).to_string(),
+        };
+        if writeln!(writer, "{line}").is_err() {
+            return;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -89,9 +89,16 @@ impl SequenceCache {
         self.layers.iter().map(|l| l.len()).sum()
     }
 
+    /// Bytes one cached token occupies in one layer for the given row width
+    /// (K+V f32 payload). The single source of truth for pool charging —
+    /// admission estimators must use this too.
+    pub fn token_bytes(row_elems: usize) -> usize {
+        row_elems * 2 * 4
+    }
+
     /// Cache bytes (K+V f32 payload only; metadata is host bookkeeping).
     pub fn bytes(&self) -> usize {
-        self.total_tokens() * self.row_elems * 2 * 4
+        self.total_tokens() * Self::token_bytes(self.row_elems)
     }
 
     /// Largest per-layer length (drives decode-tier selection).

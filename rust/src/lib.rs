@@ -4,25 +4,63 @@
 //! Inference via Layer-wise Optimal Budget* (ICLR 2025) as a three-layer
 //! Rust + JAX + Pallas serving stack:
 //!
-//! * **Layer 3 (this crate)** — the serving coordinator: continuous
-//!   batching, KV-cache pool, sequence-wise eviction policies (Sliding
-//!   Window / StreamingLLM / H2O), and the paper's layer-wise budget
-//!   allocator driven by the cosine-similarity importance probe.
+//! * **Layer 3 (this crate)** — the serving coordinator: a step-driven
+//!   continuous-batching scheduler, KV-cache pool, sequence-wise eviction
+//!   policies (Sliding Window / StreamingLLM / H2O), and the paper's
+//!   layer-wise budget allocator driven by the cosine-similarity importance
+//!   probe.
 //! * **Layer 2** — a JAX transformer AOT-lowered to HLO-text artifacts
-//!   (`python/compile/model.py`), executed via PJRT (`runtime`).
+//!   (`python/compile/model.py`), executed via PJRT (`runtime`, behind the
+//!   `pjrt` feature). The default build runs a deterministic simulated
+//!   backend (`sim://tiny`) with the same interface, so the whole stack is
+//!   testable without artifacts.
 //! * **Layer 1** — Pallas kernels for prefill flash attention, budget-masked
 //!   decode attention (which also emits the H2O signal), and the cosine
 //!   probe (`python/compile/kernels/`).
 //!
-//! Quickstart:
-//! ```no_run
+//! ## Scheduler architecture (admission → step → retire/preempt)
+//!
+//! The engine no longer runs closed batches internally; it is driven one
+//! decode step at a time by `Engine::step`, over the state machine in
+//! [`coordinator::scheduler`]:
+//!
+//! 1. **Submit** — `Engine::submit` enqueues a request (backpressure at
+//!    `ServeConfig::queue_depth` produces an immediate `Rejected` output).
+//! 2. **Admit** — between decode steps, queued requests fill free decode
+//!    slots. Admission is KV-pool aware twice over: a pre-prefill headroom
+//!    estimate (`min(b_init, prompt_len)` tokens per layer) skips wasted
+//!    prefills while the pool is saturated, and the post-prefill
+//!    `BudgetPlan` predicts the sequence's peak growth — a request that
+//!    cannot fit *even alone* fails fast with `Oom`.
+//! 3. **Step** — one batched decode over the occupied slots on the smallest
+//!    capacity tier that fits; new KV rows are appended, charged to the
+//!    pool, then each layer is re-compressed to its own budget (the paper's
+//!    2-D management).
+//! 4. **Retire / preempt** — finished sequences (EOS or length) free their
+//!    slot immediately, so waiting requests join the running batch on the
+//!    next step. If a sequence cannot grow its reservation, the youngest
+//!    *other* running sequence is preempted and requeued (restart-from-
+//!    scratch) instead of failing anyone; `FinishReason::Oom` is reserved
+//!    for requests that cannot fit with the pool otherwise empty.
+//!
+//! `Engine::generate_batch` survives as a thin compatibility wrapper
+//! (enqueue everything, drain the scheduler, sort by id) and is
+//! token-identical to the step-driven path under greedy sampling — the
+//! `scheduler_parity` integration test pins that equivalence. The router
+//! drives one engine per worker thread step-by-step, so requests arriving
+//! over TCP mid-batch are decoded alongside the ones already running;
+//! queue depth, batch occupancy and preemption counters are exported via
+//! [`metrics::SchedulerMetrics`].
+//!
+//! Quickstart (runs on the simulated backend — no artifacts needed):
+//! ```
 //! use squeezeattention::config::ServeConfig;
 //! use squeezeattention::coordinator::{Engine, Request};
 //!
-//! let cfg = ServeConfig::new("artifacts/tiny");
+//! let cfg = ServeConfig::new("sim://tiny");
 //! let mut engine = Engine::new(cfg).unwrap();
 //! let out = engine.generate_batch(vec![Request::new(0, vec![256, 5, 257], 16)]);
-//! println!("{:?}", out[0].generated);
+//! assert!(!out[0].generated.is_empty());
 //! ```
 
 pub mod config;

@@ -32,7 +32,8 @@ COMMANDS
   help      this text
 
 ENGINE FLAGS (serve/generate)
-  --artifacts DIR      artifact directory           [artifacts/tiny]
+  --artifacts DIR      artifact directory, or sim://tiny for the
+                       simulated backend            [sim://tiny]
   --config FILE        JSON ServeConfig (flags override)
   --policy P           full|sliding_window|streaming_llm|h2o  [sliding_window]
   --budget N           per-layer token budget b_init          [128]
@@ -47,7 +48,7 @@ ENGINE FLAGS (serve/generate)
 fn engine_config(args: &Args) -> Result<ServeConfig> {
     let mut cfg = match args.opt_str("config") {
         Some(path) => ServeConfig::from_json_file(&path)?,
-        None => ServeConfig::new(args.str("artifacts", "artifacts/tiny")),
+        None => ServeConfig::new(args.str("artifacts", "sim://tiny")),
     };
     if args.opt_str("config").is_some() {
         if let Some(a) = args.opt_str("artifacts") {
@@ -152,7 +153,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
-    let m = squeezeattention::config::Manifest::load(args.str("artifacts", "artifacts/tiny"))?;
+    let dir = args.str("artifacts", "sim://tiny");
+    let m = if let Some(spec) = dir.strip_prefix("sim://") {
+        squeezeattention::runtime::SimModel::new(spec)?.manifest()
+    } else {
+        squeezeattention::config::Manifest::load(&dir)?
+    };
     println!(
         "model={} layers={} d_model={} heads={} vocab={} max_seq={} trained={}",
         m.model.name, m.model.n_layer, m.model.d_model, m.model.n_head, m.model.vocab,

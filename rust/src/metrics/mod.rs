@@ -1,7 +1,11 @@
-//! Serving metrics: latency histograms, throughput counters, memory peaks.
+//! Serving metrics: latency histograms, throughput counters, memory peaks,
+//! and the continuous-batching scheduler's queue/occupancy/preemption
+//! counters.
 
 mod histogram;
+mod scheduler;
 mod throughput;
 
 pub use histogram::Histogram;
+pub use scheduler::SchedulerMetrics;
 pub use throughput::ThroughputMeter;

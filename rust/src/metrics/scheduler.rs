@@ -1,0 +1,72 @@
+//! Continuous-batching scheduler observability: queue depth, batch
+//! occupancy, admission/preemption/retirement counters. One instance lives
+//! inside the engine's `Scheduler` and is updated on every step; gauges
+//! (`queue_depth`, `running`) reflect the state after the most recent step,
+//! counters are cumulative since the last (re)configure.
+
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerMetrics {
+    /// Configured decode slots (batch capacity).
+    pub slots: usize,
+    /// Current queued requests (gauge).
+    pub queue_depth: usize,
+    /// High-water mark of the queue.
+    pub queue_peak: usize,
+    /// Currently running sequences (gauge).
+    pub running: usize,
+    /// High-water mark of concurrently running sequences.
+    pub peak_occupancy: usize,
+    /// Decode steps executed (steps with at least one running sequence).
+    pub steps: u64,
+    /// Sum over steps of the number of sequences in that step's batch
+    /// (mean occupancy = occupancy_sum / steps).
+    pub occupancy_sum: u64,
+    /// Requests admitted into a decode slot (includes re-admissions).
+    pub admitted: u64,
+    /// Admission attempts skipped because the KV pool lacked headroom.
+    pub deferred_admissions: u64,
+    /// Running sequences preempted and requeued to resolve pool OOM.
+    pub preemptions: u64,
+    /// Requests that finished normally (EOS or length) and freed a slot.
+    pub completed: u64,
+    /// Requests rejected at submission (queue backpressure).
+    pub rejected: u64,
+    /// Requests failed with OOM (could not fit even with the pool drained).
+    pub oom_failures: u64,
+}
+
+impl SchedulerMetrics {
+    /// Mean sequences per decode step.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.steps as f64
+        }
+    }
+
+    /// Mean occupancy as a fraction of configured slots.
+    pub fn batch_utilization(&self) -> f64 {
+        if self.slots == 0 {
+            0.0
+        } else {
+            self.mean_occupancy() / self.slots as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let mut m = SchedulerMetrics { slots: 4, ..Default::default() };
+        assert_eq!(m.mean_occupancy(), 0.0);
+        assert_eq!(m.batch_utilization(), 0.0);
+        m.steps = 4;
+        m.occupancy_sum = 10;
+        assert!((m.mean_occupancy() - 2.5).abs() < 1e-12);
+        assert!((m.batch_utilization() - 0.625).abs() < 1e-12);
+    }
+}

@@ -1,5 +1,7 @@
-//! PJRT runtime: loads HLO-text artifacts, uploads the weight set once as
-//! device buffers, and exposes typed `prefill` / `decode` calls.
+//! PJRT runtime backend (compiled only with `--features pjrt`, which
+//! additionally requires the external `xla` crate): loads HLO-text
+//! artifacts, uploads the weight set once as device buffers, and exposes
+//! typed `prefill` / `decode` calls.
 //!
 //! Pattern per /opt/xla-example: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
@@ -14,45 +16,9 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::Manifest;
+
 use super::tensor::{Tensor, TensorI32};
-
-/// Outputs of one prefill call.
-#[derive(Debug, Clone)]
-pub struct PrefillOut {
-    /// `[vocab]` next-token logits at the last valid prompt position.
-    pub logits: Tensor,
-    /// `[n_layer, L, H, D]` — K cache (RoPE applied).
-    pub k: Tensor,
-    /// `[n_layer, L, H, D]` — V cache.
-    pub v: Tensor,
-    /// `[n_layer, L]` — cosine similarity across each attention block.
-    pub cos_sims: Tensor,
-}
-
-/// Outputs of one batched decode step.
-#[derive(Debug, Clone)]
-pub struct DecodeOut {
-    /// `[B, vocab]`.
-    pub logits: Tensor,
-    /// `[n_layer, B, H, D]` — K row for the token just processed.
-    pub new_k: Tensor,
-    /// `[n_layer, B, H, D]`.
-    pub new_v: Tensor,
-    /// `[n_layer, B, M]` — per-slot attention mass (H2O signal).
-    pub scores: Tensor,
-}
-
-/// Cumulative runtime counters (perf pass instrumentation).
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeStats {
-    pub prefill_calls: u64,
-    pub decode_calls: u64,
-    pub prefill_secs: f64,
-    pub decode_secs: f64,
-    pub h2d_secs: f64,
-    pub d2h_secs: f64,
-    pub compile_secs: f64,
-}
+use super::{DecodeOut, PrefillOut, RuntimeStats};
 
 /// A borrowed host array heading into an execution. Uploaded with
 /// `buffer_from_host_buffer` (synchronous copy semantics), so the borrow only
@@ -75,7 +41,7 @@ impl HostInput<'_> {
     }
 }
 
-pub struct Runtime {
+pub struct PjrtRuntime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     kernel: String,
@@ -85,7 +51,7 @@ pub struct Runtime {
     stats: Mutex<RuntimeStats>,
 }
 
-impl Runtime {
+impl PjrtRuntime {
     /// Load manifest + weights from an artifact directory and bind a kernel
     /// variant ("pallas" — the shipped default — or "jnp" for the ablation).
     pub fn load(artifact_dir: &str, kernel: &str) -> Result<Self> {
@@ -116,40 +82,13 @@ impl Runtime {
         self.stats.lock().unwrap().clone()
     }
 
-    pub fn kernel(&self) -> &str {
-        &self.kernel
-    }
-
     /// Smallest prefill bucket >= `len`.
-    pub fn prefill_bucket_for(&self, len: usize) -> Result<usize> {
+    fn prefill_bucket_for(&self, len: usize) -> Result<usize> {
         self.manifest
             .prefill_buckets(&self.kernel)
             .into_iter()
             .find(|&b| b >= len)
             .ok_or_else(|| anyhow!("prompt of {len} tokens exceeds largest prefill bucket"))
-    }
-
-    /// Smallest decode capacity tier with batch == `batch` and cap >= `cap`.
-    pub fn decode_tier_for(&self, batch: usize, cap: usize) -> Result<(usize, usize)> {
-        self.manifest
-            .decode_tiers(&self.kernel)
-            .into_iter()
-            .filter(|&(b, m)| b == batch && m >= cap)
-            .min_by_key(|&(_, m)| m)
-            .ok_or_else(|| anyhow!("no decode tier batch={batch} cap>={cap}"))
-    }
-
-    /// Decode batch sizes available for this kernel.
-    pub fn decode_batches(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self
-            .manifest
-            .decode_tiers(&self.kernel)
-            .into_iter()
-            .map(|(b, _)| b)
-            .collect();
-        v.sort_unstable();
-        v.dedup();
-        v
     }
 
     fn compile(&self, file: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {

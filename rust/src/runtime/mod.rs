@@ -1,8 +1,269 @@
-//! Layer-3 ↔ XLA boundary: PJRT client wrapper, typed prefill/decode calls,
-//! and the host tensor types that carry KV state between steps.
+//! Layer-3 ↔ model-execution boundary: typed prefill/decode calls, the host
+//! tensor types that carry KV state between steps, and pluggable backends.
+//!
+//! Two backends sit behind the one `Runtime` type:
+//!
+//! * **sim** (always available) — a deterministic simulated model selected
+//!   by the `sim://<name>` artifact scheme (`sim://tiny`). Runs the whole
+//!   coordinator hermetically with no compiled artifacts; this is what the
+//!   test tier exercises.
+//! * **pjrt** (`--features pjrt`, additionally requires the external `xla`
+//!   crate) — the real PJRT client over AOT HLO-text artifacts produced by
+//!   `python/compile/aot.py`, selected by an on-disk artifact directory.
 
+#[cfg(feature = "pjrt")]
 mod client;
+mod sim;
 mod tensor;
 
-pub use client::{DecodeOut, PrefillOut, Runtime, RuntimeStats};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Manifest;
+
+pub use sim::SimModel;
 pub use tensor::{Tensor, TensorI32};
+
+/// Outputs of one prefill call.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    /// `[vocab]` next-token logits at the last valid prompt position.
+    pub logits: Tensor,
+    /// `[n_layer, L, H, D]` — K cache (RoPE applied).
+    pub k: Tensor,
+    /// `[n_layer, L, H, D]` — V cache.
+    pub v: Tensor,
+    /// `[n_layer, L]` — cosine similarity across each attention block.
+    pub cos_sims: Tensor,
+}
+
+/// Outputs of one batched decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    /// `[B, vocab]`.
+    pub logits: Tensor,
+    /// `[n_layer, B, H, D]` — K row for the token just processed.
+    pub new_k: Tensor,
+    /// `[n_layer, B, H, D]`.
+    pub new_v: Tensor,
+    /// `[n_layer, B, M]` — per-slot attention mass (H2O signal).
+    pub scores: Tensor,
+}
+
+/// Cumulative runtime counters (perf pass instrumentation).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub h2d_secs: f64,
+    pub d2h_secs: f64,
+    pub compile_secs: f64,
+}
+
+enum Backend {
+    Sim(SimModel),
+    #[cfg(feature = "pjrt")]
+    Pjrt(client::PjrtRuntime),
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    kernel: String,
+    backend: Backend,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load a backend for `artifact_dir` and bind a kernel variant ("pallas"
+    /// — the shipped default — or "jnp" for the ablation). `sim://<name>`
+    /// selects the simulated backend; anything else is an on-disk artifact
+    /// directory for the PJRT backend.
+    pub fn load(artifact_dir: &str, kernel: &str) -> Result<Self> {
+        if let Some(spec) = artifact_dir.strip_prefix("sim://") {
+            let model = SimModel::new(spec)?;
+            let manifest = model.manifest();
+            return Ok(Self {
+                manifest,
+                kernel: kernel.to_string(),
+                backend: Backend::Sim(model),
+                stats: Mutex::new(RuntimeStats::default()),
+            });
+        }
+        Self::load_disk(artifact_dir, kernel)
+    }
+
+    /// On-disk artifact directory → PJRT backend.
+    #[cfg(feature = "pjrt")]
+    fn load_disk(artifact_dir: &str, kernel: &str) -> Result<Self> {
+        let inner = client::PjrtRuntime::load(artifact_dir, kernel)?;
+        let manifest = inner.manifest.clone();
+        Ok(Self {
+            manifest,
+            kernel: kernel.to_string(),
+            backend: Backend::Pjrt(inner),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Without the `pjrt` feature there is no backend for on-disk artifacts.
+    #[cfg(not(feature = "pjrt"))]
+    fn load_disk(artifact_dir: &str, _kernel: &str) -> Result<Self> {
+        Err(anyhow!(
+            "artifact dir '{artifact_dir}' needs the PJRT backend (build with \
+             --features pjrt and the xla crate), or use the sim:// scheme \
+             (e.g. sim://tiny)"
+        ))
+    }
+
+    pub fn kernel(&self) -> &str {
+        &self.kernel
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        match &self.backend {
+            Backend::Sim(_) => self.stats.lock().unwrap().clone(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.stats(),
+        }
+    }
+
+    /// Smallest prefill bucket >= `len`.
+    pub fn prefill_bucket_for(&self, len: usize) -> Result<usize> {
+        self.manifest
+            .prefill_buckets(&self.kernel)
+            .into_iter()
+            .find(|&b| b >= len)
+            .ok_or_else(|| anyhow!("prompt of {len} tokens exceeds largest prefill bucket"))
+    }
+
+    /// Smallest decode capacity tier with batch == `batch` and cap >= `cap`.
+    pub fn decode_tier_for(&self, batch: usize, cap: usize) -> Result<(usize, usize)> {
+        self.manifest
+            .decode_tiers(&self.kernel)
+            .into_iter()
+            .filter(|&(b, m)| b == batch && m >= cap)
+            .min_by_key(|&(_, m)| m)
+            .ok_or_else(|| anyhow!("no decode tier batch={batch} cap>={cap}"))
+    }
+
+    /// Decode batch sizes available for this kernel.
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .manifest
+            .decode_tiers(&self.kernel)
+            .into_iter()
+            .map(|(b, _)| b)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Eagerly compile every artifact of the bound kernel (warmup). The sim
+    /// backend has nothing to compile.
+    pub fn compile_all(&self) -> Result<()> {
+        match &self.backend {
+            Backend::Sim(_) => Ok(()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.compile_all(),
+        }
+    }
+
+    /// Run prefill for a prompt (padded internally to the bucket size).
+    ///
+    /// Returned K/V/cos tensors are sliced views over the *bucket* length;
+    /// callers should only read the first `prompt.len()` positions.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        match &self.backend {
+            Backend::Sim(m) => {
+                let bucket = self.prefill_bucket_for(prompt.len())?;
+                let t0 = Instant::now();
+                let out = m.prefill(prompt, bucket)?;
+                let mut s = self.stats.lock().unwrap();
+                s.prefill_calls += 1;
+                s.prefill_secs += t0.elapsed().as_secs_f64();
+                Ok(out)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.prefill(prompt),
+        }
+    }
+
+    /// Run one decode step on tier `(B, M)`.
+    ///
+    /// * `tokens`, `positions`: `[B]`
+    /// * `k_cache`, `v_cache`: `[n_layer, B, M, H, D]`
+    /// * `cache_lens`: `[n_layer, B]`, each strictly `< M` for active slots
+    ///   (the step appends the new token's KV at slot `len` internally).
+    pub fn decode(
+        &self,
+        tier: (usize, usize),
+        tokens: &TensorI32,
+        positions: &TensorI32,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        cache_lens: &TensorI32,
+    ) -> Result<DecodeOut> {
+        match &self.backend {
+            Backend::Sim(m) => {
+                let t0 = Instant::now();
+                let out = m.decode(tier, tokens, positions, k_cache, v_cache, cache_lens)?;
+                let mut s = self.stats.lock().unwrap();
+                s.decode_calls += 1;
+                s.decode_secs += t0.elapsed().as_secs_f64();
+                Ok(out)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.decode(tier, tokens, positions, k_cache, v_cache, cache_lens),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_scheme_loads_and_queries() {
+        let rt = Runtime::load("sim://tiny", "pallas").unwrap();
+        assert_eq!(rt.kernel(), "pallas");
+        assert_eq!(rt.prefill_bucket_for(100).unwrap(), 128);
+        assert_eq!(rt.decode_tier_for(8, 100).unwrap(), (8, 128));
+        assert_eq!(rt.decode_batches(), vec![1, 2, 4, 8]);
+        assert!(rt.prefill_bucket_for(600).is_err());
+        rt.compile_all().unwrap();
+    }
+
+    #[test]
+    fn sim_prefill_decode_roundtrip_counts_stats() {
+        let rt = Runtime::load("sim://tiny", "pallas").unwrap();
+        let pre = rt.prefill(&[256, 3, 4, 257]).unwrap();
+        assert_eq!(pre.logits.shape, vec![272]);
+        assert_eq!(pre.k.shape, vec![8, 64, 4, 32]);
+        let tokens = TensorI32::from_vec(&[1], vec![7]).unwrap();
+        let positions = TensorI32::from_vec(&[1], vec![4]).unwrap();
+        let k = Tensor::zeros(&[8, 1, 64, 4, 32]);
+        let v = Tensor::zeros(&[8, 1, 64, 4, 32]);
+        let lens = TensorI32::from_vec(&[8, 1], vec![0; 8]).unwrap();
+        let out = rt.decode((1, 64), &tokens, &positions, &k, &v, &lens).unwrap();
+        assert_eq!(out.logits.shape, vec![1, 272]);
+        let s = rt.stats();
+        assert_eq!(s.prefill_calls, 1);
+        assert_eq!(s.decode_calls, 1);
+    }
+
+    #[test]
+    fn disk_artifacts_without_pjrt_feature_error() {
+        #[cfg(not(feature = "pjrt"))]
+        assert!(Runtime::load("artifacts/tiny", "pallas").is_err());
+    }
+
+    #[test]
+    fn unknown_sim_model_errors() {
+        assert!(Runtime::load("sim://nope", "pallas").is_err());
+    }
+}

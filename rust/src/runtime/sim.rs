@@ -1,0 +1,413 @@
+//! Deterministic simulated runtime backend (`sim://` artifact scheme).
+//!
+//! Stands in for the PJRT/XLA runtime when no compiled artifacts (or no
+//! `xla` crate) are available, so the whole coordinator — scheduler, KV
+//! pool, eviction, budget allocation, router, TCP server — can run and be
+//! tested hermetically. It is a *toy transformer-shaped* model, not a
+//! trained one:
+//!
+//! * K/V rows, queries and the unembedding are pseudo-random but pure
+//!   functions of `(token, layer, element)` via 64-bit integer mixing, so
+//!   every call is bit-reproducible and never touches libm.
+//! * The decode step computes a real (unnormalized) attention reduction
+//!   over exactly the cached rows it is handed, masked by `cache_lens`.
+//!   Logits therefore depend on the precise cache contents — evicting a
+//!   different token yields different generations, which is what makes the
+//!   scheduler-parity and eviction tests meaningful.
+//! * The cosine probe emits a three-band layer profile (important / middle /
+//!   unimportant) with small token-dependent jitter, so Algorithm 1's
+//!   k-means grouping reallocates budgets exactly as it would on a real
+//!   model (paper Fig. 2's shape).
+//!
+//! The shape set mirrors the `artifacts/tiny` contract: 8 layers, 4 heads x
+//! 32 dims, vocab 272, max_seq 640, prefill buckets {64,128,256,512} and
+//! decode tiers {1,2,4,8} x {64,128,192,256,384,512,640}, published for both
+//! the "pallas" and "jnp" kernel names (the sim math is kernel-independent,
+//! which trivially satisfies the kernel-ablation equivalence the real
+//! artifacts are tested for).
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ArtifactEntry, Manifest, ModelCfg, TokenMap, WeightsIndex};
+
+use super::tensor::{Tensor, TensorI32};
+use super::{DecodeOut, PrefillOut};
+
+const SALT_K: u64 = 0xA1B2_C3D4_E5F6_0001;
+const SALT_V: u64 = 0xA1B2_C3D4_E5F6_0002;
+const SALT_Q: u64 = 0xA1B2_C3D4_E5F6_0003;
+const SALT_E: u64 = 0xA1B2_C3D4_E5F6_0004;
+const SALT_S: u64 = 0xA1B2_C3D4_E5F6_0005;
+const SALT_P: u64 = 0xA1B2_C3D4_E5F6_0006;
+const SALT_C: u64 = 0xA1B2_C3D4_E5F6_0007;
+const SALT_B: u64 = 0xA1B2_C3D4_E5F6_0008;
+
+/// SplitMix64 finalizer: uniform 64-bit mixing of an arbitrary key.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Map a mixed hash to [-1, 1).
+fn unit(h: u64) -> f32 {
+    ((h >> 11) as f64 * (2.0 / 9_007_199_254_740_992.0) - 1.0) as f32
+}
+
+/// Pseudo-random feature in [-1, 1) keyed by two indices and a salt.
+fn feat(a: u64, b: u64, salt: u64) -> f32 {
+    unit(mix(a ^ b.rotate_left(17) ^ salt))
+}
+
+pub struct SimModel {
+    manifest: Manifest,
+    n_layer: usize,
+    n_head: usize,
+    head_dim: usize,
+    vocab: usize,
+    /// n_head * head_dim — elements per K (or V) row.
+    row: usize,
+}
+
+impl SimModel {
+    /// Build the named sim model. Only the "tiny" shape exists today;
+    /// `sim://` with an empty tail also resolves to it.
+    pub fn new(spec: &str) -> Result<Self> {
+        if !spec.is_empty() && spec != "tiny" {
+            return Err(anyhow!("unknown sim model '{spec}' (available: tiny)"));
+        }
+        let (n_layer, n_head, head_dim, vocab, max_seq) = (8usize, 4usize, 32usize, 272usize, 640usize);
+        let mut artifacts = Vec::new();
+        for kernel in ["pallas", "jnp"] {
+            for len in [64usize, 128, 256, 512] {
+                artifacts.push(ArtifactEntry {
+                    file: format!("sim_prefill_{kernel}_l{len}"),
+                    kind: "prefill".to_string(),
+                    kernel: kernel.to_string(),
+                    len: Some(len),
+                    batch: None,
+                    cap: None,
+                });
+            }
+            for batch in [1usize, 2, 4, 8] {
+                for cap in [64usize, 128, 192, 256, 384, 512, 640] {
+                    artifacts.push(ArtifactEntry {
+                        file: format!("sim_decode_{kernel}_b{batch}_m{cap}"),
+                        kind: "decode".to_string(),
+                        kernel: kernel.to_string(),
+                        len: None,
+                        batch: Some(batch),
+                        cap: Some(cap),
+                    });
+                }
+            }
+        }
+        let manifest = Manifest {
+            model: ModelCfg {
+                name: "sim-tiny".to_string(),
+                n_layer,
+                d_model: n_head * head_dim,
+                n_head,
+                vocab,
+                ffn_mult: 4,
+                max_seq,
+                rope_theta: 10_000.0,
+                head_dim,
+            },
+            trained: true,
+            tokens: TokenMap {
+                pad: 0,
+                bos: 256,
+                sep: 257,
+                query: 258,
+                answer: 259,
+                eos: 260,
+                mark: 261,
+                equals: 262,
+                comma: 263,
+            },
+            weights: WeightsIndex {
+                file: String::new(),
+                dtype: "f32".to_string(),
+                index: Vec::new(),
+            },
+            artifacts,
+            dir: PathBuf::new(),
+        };
+        Ok(Self { manifest, n_layer, n_head, head_dim, vocab, row: n_head * head_dim })
+    }
+
+    pub fn manifest(&self) -> Manifest {
+        self.manifest.clone()
+    }
+
+    fn k_elem(&self, token: i32, layer: usize, j: usize) -> f32 {
+        feat(token as u64, (layer * 997 + j) as u64, SALT_K)
+    }
+
+    fn v_elem(&self, token: i32, layer: usize, j: usize) -> f32 {
+        feat(token as u64, (layer * 997 + j) as u64, SALT_V)
+    }
+
+    /// Per-layer cosine-probe band: a three-group profile with a small
+    /// per-layer tilt so k-means sees clean, stable clusters.
+    fn cos_base(&self, layer: usize) -> f32 {
+        let band = layer * 3 / self.n_layer.max(1);
+        let base = match band {
+            0 => 0.16,
+            1 => 0.52,
+            _ => 0.88,
+        };
+        base + 0.01 * (layer % 3) as f32
+    }
+
+    /// Attention reduction for one query token over one layer's cached rows
+    /// `(k_rows, v_rows)`, accumulating into `state` and writing |mass| into
+    /// `scores[..len]`.
+    fn attend_layer(
+        &self,
+        token: i32,
+        layer: usize,
+        rows: (&[f32], &[f32]),
+        len: usize,
+        state: &mut [f32],
+        mut scores: Option<&mut [f32]>,
+    ) {
+        let (k_rows, v_rows) = rows;
+        let row = self.row;
+        let inv_row = 1.0f32 / row as f32;
+        let inv_layer = 1.0f32 / self.n_layer as f32;
+        let q: Vec<f32> = (0..row)
+            .map(|j| feat(token as u64, (layer * 997 + j) as u64, SALT_Q))
+            .collect();
+        for i in 0..len {
+            let k = &k_rows[i * row..(i + 1) * row];
+            let mut w = 0.0f32;
+            for (kj, qj) in k.iter().zip(&q) {
+                w += kj * qj;
+            }
+            w *= inv_row;
+            if let Some(s) = scores.as_deref_mut() {
+                s[i] = w.abs();
+            }
+            let v = &v_rows[i * row..(i + 1) * row];
+            let scale = w * inv_layer;
+            for (sj, vj) in state.iter_mut().zip(v) {
+                *sj += scale * vj;
+            }
+        }
+    }
+
+    /// Project an attention state to vocab logits, with the query token's
+    /// own embedding and position folded in (so successive steps differ even
+    /// over an unchanged cache) and a tiny per-token tiebreak bias.
+    fn logits_from_state(&self, token: i32, position: i32, state: &mut [f32], out: &mut [f32]) {
+        let row = self.row;
+        for (j, s) in state.iter_mut().enumerate() {
+            *s += 0.5 * feat(token as u64, j as u64, SALT_S)
+                + 0.1 * feat(position as u64, j as u64, SALT_P);
+        }
+        let inv_row = 1.0f32 / row as f32;
+        for (t, o) in out.iter_mut().enumerate() {
+            let mut dot = 0.0f32;
+            for (j, s) in state.iter().enumerate() {
+                dot += *s * feat(t as u64, j as u64, SALT_E);
+            }
+            *o = dot * inv_row + 1e-3 * unit(mix(t as u64 ^ SALT_B));
+        }
+        // Greedy decoding must be length-deterministic for the scheduler
+        // tests: push EOS far below the argmax range (it stays finite, so
+        // temperature sampling can still terminate a sequence).
+        let eos = crate::model::tokenizer::EOS as usize;
+        if eos < out.len() {
+            out[eos] -= 4.0;
+        }
+    }
+
+    /// Prefill a prompt into a `bucket`-padded KV cache + cosine probe, with
+    /// next-token logits at the last prompt position.
+    pub fn prefill(&self, prompt: &[i32], bucket: usize) -> Result<PrefillOut> {
+        let (nl, h, d, row) = (self.n_layer, self.n_head, self.head_dim, self.row);
+        let plen = prompt.len();
+        if plen == 0 || plen > bucket {
+            return Err(anyhow!("sim prefill: prompt len {plen} does not fit bucket {bucket}"));
+        }
+        let mut k = Tensor::zeros(&[nl, bucket, h, d]);
+        let mut v = Tensor::zeros(&[nl, bucket, h, d]);
+        let mut cos = Tensor::zeros(&[nl, bucket]);
+        for layer in 0..nl {
+            for (i, &t) in prompt.iter().enumerate() {
+                let base = (layer * bucket + i) * row;
+                for j in 0..row {
+                    k.data[base + j] = self.k_elem(t, layer, j);
+                    v.data[base + j] = self.v_elem(t, layer, j);
+                }
+                cos.data[layer * bucket + i] =
+                    self.cos_base(layer) + 0.08 * feat(t as u64, layer as u64, SALT_C);
+            }
+        }
+        let last = prompt[plen - 1];
+        let mut state = vec![0.0f32; row];
+        for layer in 0..nl {
+            let base = layer * bucket * row;
+            self.attend_layer(
+                last,
+                layer,
+                (&k.data[base..base + plen * row], &v.data[base..base + plen * row]),
+                plen,
+                &mut state,
+                None,
+            );
+        }
+        let mut logits = vec![0.0f32; self.vocab];
+        self.logits_from_state(last, plen as i32 - 1, &mut state, &mut logits);
+        Ok(PrefillOut {
+            logits: Tensor::from_vec(&[self.vocab], logits)?,
+            k,
+            v,
+            cos_sims: cos,
+        })
+    }
+
+    /// One batched decode step on tier `(b, m)` — same contract as the XLA
+    /// decode artifact: per-slot logits, the new token's K/V rows, and the
+    /// per-slot attention-mass signal for H2O.
+    pub fn decode(
+        &self,
+        tier: (usize, usize),
+        tokens: &TensorI32,
+        positions: &TensorI32,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        cache_lens: &TensorI32,
+    ) -> Result<DecodeOut> {
+        let (b, m) = tier;
+        let (nl, h, d, row) = (self.n_layer, self.n_head, self.head_dim, self.row);
+        if tokens.data.len() != b
+            || positions.data.len() != b
+            || cache_lens.data.len() != nl * b
+            || k_cache.data.len() != nl * b * m * row
+            || v_cache.data.len() != v_cache.shape.iter().product::<usize>()
+            || k_cache.data.len() != v_cache.data.len()
+        {
+            return Err(anyhow!("sim decode: shape mismatch for tier ({b}, {m})"));
+        }
+        let mut logits = vec![0.0f32; b * self.vocab];
+        let mut new_k = Tensor::zeros(&[nl, b, h, d]);
+        let mut new_v = Tensor::zeros(&[nl, b, h, d]);
+        let mut scores = vec![0.0f32; nl * b * m];
+        for i in 0..b {
+            let t = tokens.data[i];
+            let mut state = vec![0.0f32; row];
+            for layer in 0..nl {
+                let len = (cache_lens.data[layer * b + i].max(0) as usize).min(m);
+                let base = (layer * b + i) * m * row;
+                let sbase = (layer * b + i) * m;
+                self.attend_layer(
+                    t,
+                    layer,
+                    (
+                        &k_cache.data[base..base + len * row],
+                        &v_cache.data[base..base + len * row],
+                    ),
+                    len,
+                    &mut state,
+                    Some(&mut scores[sbase..sbase + m]),
+                );
+                let nbase = (layer * b + i) * row;
+                for j in 0..row {
+                    new_k.data[nbase + j] = self.k_elem(t, layer, j);
+                    new_v.data[nbase + j] = self.v_elem(t, layer, j);
+                }
+            }
+            self.logits_from_state(
+                t,
+                positions.data[i],
+                &mut state,
+                &mut logits[i * self.vocab..(i + 1) * self.vocab],
+            );
+        }
+        Ok(DecodeOut {
+            logits: Tensor::from_vec(&[b, self.vocab], logits)?,
+            new_k,
+            new_v,
+            scores: Tensor::from_vec(&[nl, b, m], scores)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SimModel {
+        SimModel::new("tiny").unwrap()
+    }
+
+    #[test]
+    fn manifest_shape_contract() {
+        let m = model().manifest();
+        assert_eq!(m.model.n_layer, 8);
+        assert_eq!(m.model.n_head * m.model.head_dim, 128);
+        assert_eq!(m.prefill_buckets("pallas"), vec![64, 128, 256, 512]);
+        assert_eq!(m.prefill_buckets("jnp"), vec![64, 128, 256, 512]);
+        assert!(m.decode_tiers("pallas").contains(&(8, 192)));
+        assert_eq!(m.decode_tiers("pallas").len(), 4 * 7);
+        assert_eq!(m.tokens.eos, 260);
+    }
+
+    #[test]
+    fn prefill_is_deterministic_and_padded() {
+        let sim = model();
+        let prompt = vec![256, 5, 9, 22, 257];
+        let a = sim.prefill(&prompt, 64).unwrap();
+        let b = sim.prefill(&prompt, 64).unwrap();
+        assert_eq!(a.logits.data, b.logits.data);
+        assert_eq!(a.k.shape, vec![8, 64, 4, 32]);
+        // padding rows beyond the prompt stay zero
+        let row = 128;
+        assert!(a.k.data[5 * row..6 * row].iter().all(|&x| x == 0.0));
+        // cosine means land in three distinct bands
+        assert!(a.cos_sims.at(&[0, 1]) < 0.35);
+        assert!(a.cos_sims.at(&[7, 1]) > 0.7);
+    }
+
+    #[test]
+    fn decode_depends_on_cache_contents() {
+        let sim = model();
+        let (b, m) = (1usize, 64usize);
+        let prompt = vec![256, 40, 41, 42, 43];
+        let pre = sim.prefill(&prompt, 64).unwrap();
+        let row = 128;
+        let mut k = Tensor::zeros(&[8, b, m, 4, 32]);
+        let mut v = Tensor::zeros(&[8, b, m, 4, 32]);
+        for layer in 0..8 {
+            let src = layer * 64 * row;
+            let dst = layer * m * row;
+            k.data[dst..dst + 5 * row].copy_from_slice(&pre.k.data[src..src + 5 * row]);
+            v.data[dst..dst + 5 * row].copy_from_slice(&pre.v.data[src..src + 5 * row]);
+        }
+        let tokens = TensorI32::from_vec(&[1], vec![7]).unwrap();
+        let positions = TensorI32::from_vec(&[1], vec![5]).unwrap();
+        let lens = TensorI32::from_vec(&[8, 1], vec![5; 8]).unwrap();
+        let full = sim.decode((b, m), &tokens, &positions, &k, &v, &lens).unwrap();
+        // Drop two cached tokens: logits must change.
+        let lens3 = TensorI32::from_vec(&[8, 1], vec![3; 8]).unwrap();
+        let cut = sim.decode((b, m), &tokens, &positions, &k, &v, &lens3).unwrap();
+        assert_ne!(full.logits.data, cut.logits.data);
+        // Scores populated only for valid slots.
+        assert!(full.scores.data[..5].iter().any(|&s| s > 0.0));
+        assert_eq!(full.scores.data[5], 0.0);
+        // New KV rows are the token's pure function — independent of cache.
+        assert_eq!(full.new_k.data, cut.new_k.data);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(SimModel::new("huge").is_err());
+        assert!(SimModel::new("").is_ok());
+    }
+}

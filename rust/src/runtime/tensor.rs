@@ -1,8 +1,9 @@
 //! Minimal host-side tensors used at the runtime boundary.
 //!
 //! The coordinator keeps all KV state in plain `Vec<f32>`-backed tensors and
-//! converts to/from `xla::Literal` only at the execute boundary; everything
-//! in between (append, evict, compact) is cheap slice manipulation.
+//! converts to/from `xla::Literal` only at the execute boundary (PJRT builds
+//! only); everything in between (append, evict, compact) is cheap slice
+//! manipulation.
 
 use anyhow::{anyhow, Result};
 
@@ -56,12 +57,14 @@ impl Tensor {
     }
 
     /// Convert to an XLA literal of this shape.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 
     /// Build from an XLA literal (must be f32).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -91,6 +94,7 @@ impl TensorI32 {
         Ok(Self { shape: shape.to_vec(), data })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)

@@ -45,6 +45,14 @@ pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> Resul
     }
 }
 
+pub fn ensure_le<T: PartialOrd + std::fmt::Debug>(a: T, b: T, ctx: &str) -> Result<(), String> {
+    if a <= b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} > {b:?}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +78,13 @@ mod tests {
         assert!(ensure_eq(1, 1, "x").is_ok());
         let e = ensure_eq(1, 2, "budgets").unwrap_err();
         assert!(e.contains("budgets"));
+    }
+
+    #[test]
+    fn ensure_le_messages() {
+        assert!(ensure_le(1, 1, "x").is_ok());
+        assert!(ensure_le(1, 2, "x").is_ok());
+        let e = ensure_le(3, 2, "cap").unwrap_err();
+        assert!(e.contains("cap"));
     }
 }

@@ -47,6 +47,8 @@ pub struct EvalResult {
     pub wall_s: f64,
     pub oom_requests: usize,
     pub rejected_requests: usize,
+    /// Requests killed by a runtime fault (FinishReason::Failed).
+    pub failed_requests: usize,
     pub latency_p50_s: f64,
     pub latency_p95_s: f64,
     /// Fraction of requests whose plan actually reallocated budget.
@@ -74,12 +76,14 @@ pub fn evaluate(engine: &mut Engine, cfg: ServeConfig, spec: &EvalSpec) -> anyho
     let mut kv_tokens = 0usize;
     let mut oom = 0usize;
     let mut rejected = 0usize;
+    let mut failed = 0usize;
     let mut lat = Histogram::new();
     let mut reallocated = 0usize;
     for (it, out) in items.iter().zip(&outs) {
         match out.finish {
             FinishReason::Oom => oom += 1,
             FinishReason::Rejected => rejected += 1,
+            FinishReason::Failed => failed += 1,
             _ => {
                 let a = answer_accuracy(&it.sample, &out.generated);
                 if a.is_finite() {
@@ -104,6 +108,7 @@ pub fn evaluate(engine: &mut Engine, cfg: ServeConfig, spec: &EvalSpec) -> anyho
         wall_s: run.wall_s,
         oom_requests: oom,
         rejected_requests: rejected,
+        failed_requests: failed,
         latency_p50_s: lat.p50(),
         latency_p95_s: lat.p95(),
         reallocated_frac: reallocated as f64 / outs.len().max(1) as f64,

@@ -1,18 +1,19 @@
-//! Integration tests over the full runtime stack (PJRT + artifacts).
+//! Integration tests over the full engine stack on the simulated runtime
+//! backend (`sim://tiny`), so they always run — no compiled artifacts
+//! needed.
 //!
-//! All scenarios run inside ONE `#[test]` over ONE `Engine`: the PJRT CPU
-//! client in xla_extension 0.5.1 is not safe to destroy and re-create within
-//! a process (SIGSEGV on the 2nd/3rd cycle), so scenarios share the runtime
-//! and swap policy via `Engine::reconfigure` — which is also the production
-//! path for policy sweeps. Skipped cleanly when `artifacts/tiny` is missing
-//! (run `make artifacts` first).
+//! All scenarios run inside ONE `#[test]` over ONE `Engine`, sharing the
+//! runtime and swapping policy via `Engine::reconfigure` — which is also the
+//! production path for policy sweeps (and, on the PJRT backend, the only
+//! safe one: the PJRT CPU client in xla_extension 0.5.1 is not safe to
+//! destroy and re-create within a process).
 
 use squeezeattention::config::{PolicyKind, ServeConfig};
 use squeezeattention::coordinator::{Engine, FinishReason, Request, RequestOutput};
 use squeezeattention::model::tokenizer;
 use squeezeattention::workload::{Task, TaskGen, TraceSpec};
 
-const ARTIFACTS: &str = "artifacts/tiny";
+const ARTIFACTS: &str = "sim://tiny";
 
 fn base_cfg() -> ServeConfig {
     ServeConfig::new(ARTIFACTS).with_budget(48)
@@ -34,11 +35,7 @@ fn trace_requests(n: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec
 
 #[test]
 fn engine_integration_suite() {
-    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
-        return;
-    }
-    let mut eng = Engine::new(base_cfg()).expect("engine boots from artifacts");
+    let mut eng = Engine::new(base_cfg()).expect("engine boots on the sim backend");
 
     scenario_batch_with_squeeze(&mut eng);
     scenario_baseline_uniform(&mut eng);
@@ -197,7 +194,6 @@ fn scenario_jnp_kernel_matches_pallas(eng: &mut Engine) {
         println!("SKIP scenario_jnp_kernel_matches_pallas (no jnp artifacts)");
         return;
     }
-    // jnp prefill bucket is 256 and decode tier (8, 192): craft a fitting job.
     let mut gen = TaskGen::new(41);
     let s = gen.sample(Task::Lookup, 200);
     let pallas_out = run(
@@ -205,8 +201,8 @@ fn scenario_jnp_kernel_matches_pallas(eng: &mut Engine) {
         base_cfg().with_budget(64),
         vec![Request::new(0, s.prompt.clone(), 8)],
     );
-    // A second engine in the same process is safe as long as the first one's
-    // client stays alive (no destroy/re-create cycle).
+    // A second engine in the same process is fine on the sim backend (and on
+    // PJRT as long as the first client stays alive — no destroy/re-create).
     let mut eng_jnp = Engine::new(base_cfg().with_budget(64).with_kernel("jnp"))
         .expect("jnp engine boots");
     let jnp_out = eng_jnp.generate_batch(vec![Request::new(0, s.prompt, 8)]);

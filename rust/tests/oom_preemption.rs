@@ -1,0 +1,116 @@
+//! OOM-preemption regression: a capacity-capped KV pool holding fewer
+//! concurrent sequences than the scheduler admits must complete ALL
+//! requests via preempt-and-requeue — nobody fails, nothing is lost or
+//! duplicated, and the pool records real OOM pressure along the way.
+//!
+//! Sizing (sim://tiny: 8 layers x 128 f32 row elems = 1024 B per
+//! token-layer): uniform budget 48 with prompt 16 admits at ~131 KB per
+//! sequence but grows toward ~400 KB (budget+1 rows x 8 layers). A 600 KB
+//! pool therefore admits several sequences and then runs out as they grow:
+//! exactly the condition preemption must resolve. One sequence always fits
+//! alone, so forward progress (oldest never preempted) guarantees
+//! completion.
+
+use std::collections::BTreeSet;
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{Engine, FinishReason, Request};
+use squeezeattention::workload::TraceSpec;
+
+const POOL_BYTES: usize = 600 * 1024;
+const N_REQUESTS: usize = 6;
+const PROMPT_LEN: usize = 16;
+const MAX_NEW: usize = 48;
+
+fn capped_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::new("sim://tiny")
+        .with_budget(48)
+        .with_squeeze(false); // uniform budgets -> predictable growth
+    cfg.max_batch = 4;
+    cfg.kv_pool_bytes = POOL_BYTES;
+    cfg
+}
+
+fn trace_requests() -> Vec<Request> {
+    TraceSpec::closed(N_REQUESTS, PROMPT_LEN, MAX_NEW, 31)
+        .generate()
+        .iter()
+        .enumerate()
+        .map(|(i, it)| Request::new(i as u64, it.sample.prompt.clone(), MAX_NEW))
+        .collect()
+}
+
+#[test]
+fn capped_pool_completes_all_requests_via_preemption() {
+    let mut eng = Engine::new(capped_cfg()).unwrap();
+    let outs = eng.generate_batch(trace_requests());
+
+    // No lost or duplicated outputs.
+    assert_eq!(outs.len(), N_REQUESTS);
+    let ids: BTreeSet<u64> = outs.iter().map(|o| o.id).collect();
+    assert_eq!(ids.len(), N_REQUESTS, "duplicate request ids in outputs");
+    assert_eq!(ids, (0..N_REQUESTS as u64).collect::<BTreeSet<u64>>());
+
+    // Every request completed — preemption, not failure, resolved the
+    // contention.
+    for out in &outs {
+        assert!(
+            matches!(out.finish, FinishReason::Eos | FinishReason::Length),
+            "request {} finished with {:?} instead of completing",
+            out.id,
+            out.finish
+        );
+        assert!(!out.generated.is_empty(), "request {} lost its output", out.id);
+    }
+
+    // The pool really was under pressure and preemptions really happened.
+    assert!(eng.pool().oom_events() > 0, "pool never hit OOM — test is under-sized");
+    let m = eng.sched_metrics();
+    assert!(m.preemptions > 0, "no preemptions despite OOM pressure");
+    assert_eq!(m.oom_failures, 0, "a request was failed instead of preempted");
+    assert!(eng.last_run.preemptions > 0);
+
+    // Accounting stayed balanced: everything was released.
+    assert_eq!(eng.pool().in_use(), 0);
+    assert!(eng.pool().peak() <= POOL_BYTES);
+}
+
+#[test]
+fn preempted_requests_produce_identical_tokens() {
+    // Preemption is restart-from-scratch, so a preempted-then-readmitted
+    // request must emit exactly what it would have in a roomy pool.
+    let mut eng = Engine::new(capped_cfg()).unwrap();
+    let capped = eng.generate_batch(trace_requests());
+
+    let mut roomy_cfg = capped_cfg();
+    roomy_cfg.kv_pool_bytes = 0; // unlimited
+    let mut roomy_eng = Engine::new(roomy_cfg).unwrap();
+    let roomy = roomy_eng.generate_batch(trace_requests());
+
+    assert!(eng.sched_metrics().preemptions > 0, "capped run never preempted");
+    for (c, r) in capped.iter().zip(&roomy) {
+        assert_eq!(c.id, r.id);
+        assert_eq!(
+            c.generated, r.generated,
+            "request {}: preemption changed the generated tokens",
+            c.id
+        );
+    }
+}
+
+#[test]
+fn preemption_disabled_reproduces_hard_oom() {
+    // With the paper-style hard-OOM mode, the same workload must fail some
+    // requests instead of completing them all.
+    let mut cfg = capped_cfg().with_preemption(false);
+    cfg.kv_pool_bytes = POOL_BYTES;
+    let mut eng = Engine::new(cfg).unwrap();
+    let outs = eng.generate_batch(trace_requests());
+    assert_eq!(outs.len(), N_REQUESTS);
+    assert!(
+        outs.iter().any(|o| o.finish == FinishReason::Oom),
+        "hard-OOM mode unexpectedly completed everything"
+    );
+    assert_eq!(eng.sched_metrics().preemptions, 0);
+    assert_eq!(eng.pool().in_use(), 0);
+}

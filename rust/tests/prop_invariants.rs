@@ -6,7 +6,7 @@ use squeezeattention::kvcache::{
     EvictionPolicy, FullCache, H2o, SequenceCache, SlidingWindow, SlotMeta, StreamingLlm,
 };
 use squeezeattention::squeeze::{allocate, kmeans_1d};
-use squeezeattention::util::prop::{check, ensure, ensure_eq};
+use squeezeattention::util::prop::{check, ensure, ensure_eq, ensure_le};
 use squeezeattention::util::{Json, Rng};
 
 fn random_meta(rng: &mut Rng, n: usize) -> Vec<SlotMeta> {
@@ -275,5 +275,146 @@ fn budget_spec_monotone_in_prompt() {
         let b2 = BudgetSpec::Fraction(f).resolve(p2, 640);
         ensure(b2 >= b1, "fraction monotone in prompt length")?;
         ensure(b1 >= 4, "floor")
+    });
+}
+
+#[test]
+fn allocator_conserves_and_respects_min_budget_random_groups() {
+    // Conservation and the min-budget floor over the full random surface:
+    // (layer_means, p, groups, b_init, min_budget) all drawn together.
+    check("allocator min budget", 300, |rng| {
+        let n = rng.range(4, 80);
+        let means: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let b_init = rng.range(4, 2048);
+        let groups = rng.range(2, 6);
+        let min_budget = rng.range(1, 64);
+        let cfg = SqueezeConfig {
+            enabled: true,
+            p: 0.05 + rng.f64() * 0.9,
+            groups,
+            min_budget,
+        };
+        let plan = allocate(&means, b_init, &cfg);
+        ensure_eq(plan.total(), n * b_init, "total budget conserved")?;
+        ensure_eq(plan.budgets.len(), n, "plan arity")?;
+        ensure(plan.budgets.iter().all(|&b| b > 0), "all budgets positive")?;
+        if plan.reallocated {
+            // When budget actually moved, every squeezed (G-last) layer must
+            // still be at or above the floor, and no boosted layer below the
+            // uniform baseline.
+            let gmax = *plan.groups.iter().max().unwrap();
+            for i in 0..n {
+                if plan.groups[i] == gmax {
+                    ensure(
+                        plan.budgets[i] >= min_budget.min(b_init),
+                        format!("G3 layer {i} got {} < floor {min_budget}", plan.budgets[i]),
+                    )?;
+                    ensure_le(plan.budgets[i], b_init, "squeezed layer above b_init")?;
+                } else {
+                    ensure(plan.budgets[i] >= b_init, format!("boosted layer {i} shrank"))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_reservation_interleavings_never_overflow_or_underflow() {
+    use squeezeattention::kvcache::{KvPool, Reservation};
+    // Randomized reserve/resize/release interleavings against a shadow
+    // model: in_use must always equal the sum of live reservations, never
+    // exceed capacity, and return to zero when everything drops.
+    check("pool reservation interleavings", 150, |rng| {
+        let cap = rng.range(10_000, 1_000_000);
+        let pool = KvPool::new(cap);
+        let mut held: Vec<Reservation> = Vec::new();
+        let mut expect: Vec<usize> = Vec::new();
+        for _ in 0..300 {
+            match rng.range(0, 3) {
+                0 => {
+                    let want = rng.range(0, cap / 2);
+                    match Reservation::new(&pool, want) {
+                        Ok(r) => {
+                            held.push(r);
+                            expect.push(want);
+                        }
+                        Err(_) => ensure(pool.in_use() + want > cap, "spurious reserve OOM")?,
+                    }
+                }
+                1 if !held.is_empty() => {
+                    let i = rng.below(held.len());
+                    let new = rng.range(0, cap / 2);
+                    match held[i].resize(new) {
+                        Ok(()) => expect[i] = new,
+                        Err(_) => {
+                            ensure(new > expect[i], "shrink must never fail")?;
+                            ensure(
+                                pool.in_use() + (new - expect[i]) > cap,
+                                "spurious resize OOM",
+                            )?;
+                        }
+                    }
+                }
+                _ if !held.is_empty() => {
+                    let i = rng.below(held.len());
+                    held.swap_remove(i);
+                    expect.swap_remove(i);
+                }
+                _ => {}
+            }
+            let sum: usize = expect.iter().sum();
+            ensure_eq(pool.in_use(), sum, "in_use == sum of live reservations")?;
+            ensure_le(pool.in_use(), cap, "capacity respected")?;
+            ensure(pool.peak() >= pool.in_use(), "peak covers in_use")?;
+        }
+        drop(held);
+        ensure_eq(pool.in_use(), 0, "all bytes released on drop")
+    });
+}
+
+#[test]
+fn eviction_bounds_every_layer_to_its_budget() {
+    // The 2-D contract: applying any sequence-wise policy per layer with
+    // that layer's own (heterogeneous) budget leaves every layer's cached
+    // tokens at min(len, budget), with payload and metadata compacted in
+    // lockstep.
+    check("eviction bounds cache", 120, |rng| {
+        let row = rng.range(1, 8);
+        let n_layer = rng.range(1, 6);
+        let mut cache = SequenceCache::new(n_layer, row);
+        let mut lens = Vec::with_capacity(n_layer);
+        for layer in 0..n_layer {
+            let n = rng.range(1, 96);
+            lens.push(n);
+            for i in 0..n {
+                let k: Vec<f32> = (0..row).map(|_| rng.f64() as f32).collect();
+                let v = k.clone();
+                cache.append(layer, &k, &v, i as u32).map_err(|e| e.to_string())?;
+            }
+            // Give H2O a realistic score distribution to rank.
+            let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+            cache.add_scores(layer, &scores);
+        }
+        for p in policies() {
+            let mut c = cache.clone();
+            for layer in 0..n_layer {
+                let budget = rng.range(1, 128);
+                let keep = p.keep(&c.layers[layer].meta, budget);
+                c.retain(layer, &keep).map_err(|e| e.to_string())?;
+                ensure_eq(
+                    c.layer_len(layer),
+                    budget.min(lens[layer]),
+                    &format!("{}: layer {layer} size", p.name()),
+                )?;
+                ensure_le(c.layer_len(layer), budget, "budget bound")?;
+                ensure_eq(
+                    c.layers[layer].k.len(),
+                    c.layer_len(layer) * row,
+                    "payload compacted with metadata",
+                )?;
+            }
+        }
+        Ok(())
     });
 }

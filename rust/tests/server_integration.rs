@@ -1,5 +1,6 @@
 //! TCP server integration: boot the router + server on an ephemeral port,
-//! drive it over a real socket with the JSON-lines protocol.
+//! drive it over a real socket with the JSON-lines protocol. Runs on the
+//! simulated backend, so it always executes.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -9,14 +10,10 @@ use squeezeattention::coordinator::{server, RoutePolicy, Router};
 use squeezeattention::util::Json;
 use squeezeattention::workload::{Task, TaskGen};
 
-const ARTIFACTS: &str = "artifacts/tiny";
+const ARTIFACTS: &str = "sim://tiny";
 
 #[test]
 fn tcp_roundtrip() {
-    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts/tiny not built (run `make artifacts`)");
-        return;
-    }
     let cfg = ServeConfig::new(ARTIFACTS).with_budget(48);
     let router = std::sync::Arc::new(Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap());
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();

@@ -1,0 +1,178 @@
+//! Offline shim of the `anyhow` crate: the API subset this workspace uses,
+//! implemented over a plain message string so the build needs no registry
+//! access. Swap for the real crate by deleting this path dependency.
+//!
+//! Covered surface:
+//! * `anyhow::Error` — `Display`/`Debug`, `{:#}` prints the context chain,
+//!   `From<E: std::error::Error>` so `?` works on std error types.
+//! * `anyhow::Result<T>` — alias with the usual default error parameter.
+//! * `anyhow!` / `bail!` — format-style constructors.
+//! * `Context` — `.context(..)` / `.with_context(..)` on `Result`, for any
+//!   error type that implements `Display` (this includes `anyhow::Error`
+//!   itself, mirroring the real crate's blanket behaviour).
+
+use std::fmt;
+
+/// A message-carrying error with an optional chain of context strings
+/// (outermost first, like the real crate's `{:#}` rendering).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into(), context: Vec::new() }
+    }
+
+    fn push_context(mut self, ctx: String) -> Self {
+        self.context.push(ctx);
+        self
+    }
+
+    /// Root-cause message (innermost), mirroring `Error::root_cause`'s role.
+    pub fn root_cause_msg(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context is the headline, like real anyhow.
+        match self.context.last() {
+            Some(outer) if !f.alternate() => write!(f, "{outer}"),
+            _ => {
+                for ctx in self.context.iter().rev() {
+                    write!(f, "{ctx}: ")?;
+                }
+                write!(f, "{}", self.msg)
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for ctx in self.context.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket `From` below coherent (same trick as real anyhow).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| wrap(e).push_context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| wrap(e).push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+fn wrap<E: fmt::Display>(e: E) -> Error {
+    // Alternate form so wrapping an existing `Error` keeps its whole chain.
+    Error::msg(format!("{e:#}"))
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(::std::format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::string::ToString::to_string(&$err))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+        let inline = 42;
+        let e2 = anyhow!("value {inline}");
+        assert_eq!(e2.to_string(), "value 42");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn context_chains_render_in_alternate() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert_eq!(format!("{e:?}"), "outer: root");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| format!("while doing {}", "x")).unwrap_err();
+        assert!(format!("{e:#}").starts_with("while doing x: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(5).context("missing").unwrap(), 5);
+    }
+}
