@@ -1,0 +1,165 @@
+//! Swap-resume vs restart-from-scratch preemption under open-loop load: a
+//! Poisson arrival trace replayed against a capacity-capped device pool,
+//! once with the host-spill tier disabled (every preemption re-prefills and
+//! discards partial output — the PR 1 semantics) and once with suspend/
+//! resume enabled (preempted sequences migrate to host memory and continue
+//! where they stopped). Reports tokens/s, preemption/swap counters, decode
+//! steps, and the queue+suspended latency quantiles, and emits
+//! `reports/BENCH_swap.json`.
+//!
+//! Runs entirely on the simulated backend (`sim://tiny`), so it needs no
+//! compiled artifacts. Arrivals are replayed in wall-clock time; the rate is
+//! high enough that the replay itself adds well under a second.
+//! `SA_QUICK=1` shrinks the trace.
+
+use std::time::{Duration, Instant};
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{Engine, FinishReason, Request};
+use squeezeattention::util::bench::Table;
+use squeezeattention::util::Json;
+use squeezeattention::workload::TraceSpec;
+
+const POOL_BYTES: usize = 600 * 1024;
+const HOST_BYTES: usize = 8 * 1024 * 1024;
+const PROMPT_LEN: usize = 16;
+const MAX_NEW: usize = 48;
+const ARRIVAL_RATE: f64 = 150.0; // requests/s — saturates the capped pool
+
+struct ArmResult {
+    name: String,
+    wall_s: f64,
+    tokens: u64,
+    completed: usize,
+    oom_failed: usize,
+    preemptions: u64,
+    swap_outs: u64,
+    swap_ins: u64,
+    restarts_avoided: u64,
+    decode_steps: u64,
+    queue_latency: Json,
+}
+
+impl ArmResult {
+    fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("tokens_per_s", Json::num(self.tokens_per_s())),
+            ("completed", Json::num(self.completed as f64)),
+            ("oom_failed", Json::num(self.oom_failed as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("swap_outs", Json::num(self.swap_outs as f64)),
+            ("swap_ins", Json::num(self.swap_ins as f64)),
+            ("restarts_avoided", Json::num(self.restarts_avoided as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("queue_latency_s", self.queue_latency.clone()),
+        ])
+    }
+}
+
+/// Replay the trace open-loop: submit each request once its arrival time
+/// passes, stepping the engine in between so arrivals join running batches.
+fn run_arm(name: &str, cfg: ServeConfig, n_requests: usize) -> anyhow::Result<ArmResult> {
+    let items = TraceSpec::closed(n_requests, PROMPT_LEN, MAX_NEW, 97)
+        .poisson(ARRIVAL_RATE)
+        .generate();
+    let mut eng = Engine::new(cfg)?;
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    let mut outs = Vec::new();
+    while next < items.len() || eng.has_work() {
+        while next < items.len() && t0.elapsed().as_secs_f64() >= items[next].arrival_s {
+            let req = Request::new(next as u64, items[next].sample.prompt.clone(), MAX_NEW);
+            if let Err(rejected) = eng.submit(req) {
+                outs.push(rejected);
+            }
+            next += 1;
+        }
+        if eng.has_work() {
+            outs.extend(eng.step()?);
+        } else if next < items.len() {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let tokens: u64 = outs.iter().map(|o| o.generated.len() as u64).sum();
+    let completed = outs
+        .iter()
+        .filter(|o| matches!(o.finish, FinishReason::Eos | FinishReason::Length))
+        .count();
+    let oom_failed = outs.iter().filter(|o| o.finish == FinishReason::Oom).count();
+    let m = eng.sched_metrics().clone();
+    let run = eng.run_stats().clone();
+    let queue_latency = eng.queue_latency().summary().to_json();
+    Ok(ArmResult {
+        name: name.to_string(),
+        wall_s,
+        tokens,
+        completed,
+        oom_failed,
+        preemptions: m.preemptions,
+        swap_outs: m.swap_outs,
+        swap_ins: m.swap_ins,
+        restarts_avoided: m.restarts_avoided,
+        decode_steps: run.decode_steps,
+        queue_latency,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("SA_QUICK").is_ok();
+    let n_requests = if quick { 8 } else { 24 };
+
+    let base = {
+        let mut cfg = ServeConfig::new("sim://tiny").with_budget(48).with_squeeze(false);
+        cfg.max_batch = 4;
+        cfg.kv_pool_bytes = POOL_BYTES;
+        cfg
+    };
+    let restart = run_arm("restart", base.clone(), n_requests)?;
+    let swap = run_arm("swap", base.with_host_spill(HOST_BYTES), n_requests)?;
+
+    let mut table = Table::new(&[
+        "arm",
+        "tok/s",
+        "preemptions",
+        "swap_ins",
+        "restarts_avoided",
+        "decode_steps",
+    ]);
+    for arm in [&restart, &swap] {
+        table.row(vec![
+            arm.name.clone(),
+            format!("{:.1}", arm.tokens_per_s()),
+            arm.preemptions.to_string(),
+            arm.swap_ins.to_string(),
+            arm.restarts_avoided.to_string(),
+            arm.decode_steps.to_string(),
+        ]);
+    }
+    println!(
+        "Poisson({ARRIVAL_RATE}/s) x {n_requests} requests on a {} KiB device pool:",
+        POOL_BYTES >> 10
+    );
+    table.print();
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("swap_vs_restart")),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("arrival_rate", Json::num(ARRIVAL_RATE)),
+        ("kv_pool_bytes", Json::num(POOL_BYTES as f64)),
+        ("host_spill_bytes", Json::num(HOST_BYTES as f64)),
+        ("restart", restart.to_json()),
+        ("swap", swap.to_json()),
+    ]);
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/BENCH_swap.json", report.to_string())?;
+    println!("wrote reports/BENCH_swap.json");
+    Ok(())
+}

@@ -87,15 +87,29 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Default max new tokens per request.
     pub max_new_tokens: usize,
-    /// Global KV pool capacity in bytes (0 = unlimited). OOM experiments set
-    /// this to emulate a fixed HBM budget.
+    /// Global device KV pool capacity in bytes (0 = unlimited). OOM
+    /// experiments set this to emulate a fixed HBM budget.
     pub kv_pool_bytes: usize,
+    /// Host-spill tier capacity in bytes for suspended sequences. 0 disables
+    /// swap entirely: preemption falls back to restart-from-scratch (the
+    /// PR 1 semantics). Any positive value caps the host tier; pass
+    /// `usize::MAX` for effectively unlimited spill. (At the `KvPool` level
+    /// a tier capacity of 0 means unlimited — the engine maps this knob's
+    /// 0-means-disabled onto that by never swapping out.)
+    pub host_spill_bytes: usize,
     /// Admission queue depth before backpressure rejects.
     pub queue_depth: usize,
-    /// On KV-pool OOM mid-decode, preempt-and-requeue the youngest running
-    /// sequence instead of failing a request (continuous-batching default).
-    /// Disable to reproduce the paper's hard-OOM table cells.
+    /// On KV-pool OOM mid-decode, preempt the youngest running sequence
+    /// instead of failing a request (continuous-batching default): suspend
+    /// it to the host tier when `host_spill_bytes > 0`, otherwise requeue it
+    /// for a restart-from-scratch. Disable to reproduce the paper's hard-OOM
+    /// table cells.
     pub preemption: bool,
+    /// Batch-forming delay: router workers wait up to this long for more
+    /// arrivals before stepping a batch smaller than the slot count, trading
+    /// a bounded first-token latency hit for higher step occupancy. 0 =
+    /// step immediately (lowest latency).
+    pub batch_wait_ms: u64,
 }
 
 impl ServeConfig {
@@ -112,8 +126,10 @@ impl ServeConfig {
             max_batch: 8,
             max_new_tokens: 64,
             kv_pool_bytes: 0,
+            host_spill_bytes: 0,
             queue_depth: 256,
             preemption: true,
+            batch_wait_ms: 0,
         }
     }
 
@@ -170,11 +186,17 @@ impl ServeConfig {
         if let Some(k) = j.get("kv_pool_bytes").and_then(|v| v.as_usize()) {
             cfg.kv_pool_bytes = k;
         }
+        if let Some(h) = j.get("host_spill_bytes").and_then(|v| v.as_usize()) {
+            cfg.host_spill_bytes = h;
+        }
         if let Some(q) = j.get("queue_depth").and_then(|v| v.as_usize()) {
             cfg.queue_depth = q;
         }
         if let Some(p) = j.get("preemption").and_then(|v| v.as_bool()) {
             cfg.preemption = p;
+        }
+        if let Some(w) = j.get("batch_wait_ms").and_then(|v| v.as_usize()) {
+            cfg.batch_wait_ms = w as u64;
         }
         Ok(cfg)
     }
@@ -204,8 +226,10 @@ impl ServeConfig {
             ("max_batch", Json::num(self.max_batch as f64)),
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("kv_pool_bytes", Json::num(self.kv_pool_bytes as f64)),
+            ("host_spill_bytes", Json::num(self.host_spill_bytes as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("preemption", Json::Bool(self.preemption)),
+            ("batch_wait_ms", Json::num(self.batch_wait_ms as f64)),
         ])
     }
 
@@ -241,6 +265,16 @@ impl ServeConfig {
 
     pub fn with_preemption(mut self, preemption: bool) -> Self {
         self.preemption = preemption;
+        self
+    }
+
+    pub fn with_host_spill(mut self, bytes: usize) -> Self {
+        self.host_spill_bytes = bytes;
+        self
+    }
+
+    pub fn with_batch_wait_ms(mut self, ms: u64) -> Self {
+        self.batch_wait_ms = ms;
         self
     }
 }
@@ -297,6 +331,24 @@ mod tests {
         // absent key keeps the default
         let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
         assert!(ServeConfig::from_json(&j).unwrap().preemption);
+    }
+
+    #[test]
+    fn swap_knobs_roundtrip_and_defaults() {
+        // Defaults: spill disabled (restart-from-scratch preemption), no
+        // batch-forming delay.
+        let cfg = ServeConfig::new("a");
+        assert_eq!(cfg.host_spill_bytes, 0);
+        assert_eq!(cfg.batch_wait_ms, 0);
+        let set = cfg.with_host_spill(1 << 20).with_batch_wait_ms(25);
+        let back = ServeConfig::from_json(&set.to_json()).unwrap();
+        assert_eq!(back.host_spill_bytes, 1 << 20);
+        assert_eq!(back.batch_wait_ms, 25);
+        // absent keys keep the defaults
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        let d = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(d.host_spill_bytes, 0);
+        assert_eq!(d.batch_wait_ms, 0);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The serving engine: a step-driven continuous-batching scheduler over the
-//! runtime's decode tiers, with SqueezeAttention layer-budget allocation and
-//! per-layer eviction.
+//! runtime's decode tiers, with SqueezeAttention layer-budget allocation,
+//! per-layer eviction, and a two-tier (device + host-spill) KV hierarchy
+//! with suspend/resume preemption.
 //!
 //! Lifecycle of a request (Algorithm 1 mapped onto the runtime):
 //!   1. **Prefill** — run the bucketed prefill artifact; collect the
@@ -19,10 +20,14 @@
 //! join and leave the running batch mid-flight:
 //!
 //! * `submit` enqueues (with `queue_depth` backpressure);
-//! * each `step` admits queued requests into free slots under KV-pool
-//!   admission control, runs one batched decode, retires finished sequences
-//!   immediately, and resolves pool OOM by preempting-and-requeueing the
-//!   youngest running sequence (see `coordinator::scheduler`);
+//! * each `step` admits into free slots — suspended sequences swap back in
+//!   first (host→device migration, no prefill), then queued requests under
+//!   KV-pool admission control — runs one batched decode, retires finished
+//!   sequences immediately, and resolves pool OOM by preempting the
+//!   youngest running sequence: with `host_spill_bytes > 0` its squeezed
+//!   cache is *suspended* to the host tier (swap-out) and later resumed
+//!   token-identically; otherwise it restarts from scratch (see
+//!   `coordinator::scheduler`);
 //! * `generate_batch` is the closed-batch compatibility wrapper: enqueue
 //!   everything, `step` until idle, sort outputs by id.
 //!
@@ -34,8 +39,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::{PolicyKind, ServeConfig};
-use crate::kvcache::{make_policy, EvictionPolicy, KvPool, Reservation, SequenceCache};
-use crate::metrics::{SchedulerMetrics, ThroughputMeter};
+use crate::kvcache::{make_policy, EvictionPolicy, KvPool, Reservation, SequenceCache, Tier};
+use crate::metrics::{Histogram, SchedulerMetrics, ThroughputMeter};
 use crate::model::sample;
 use crate::model::tokenizer::{self, check_token_map};
 use crate::runtime::{Runtime, Tensor, TensorI32};
@@ -43,7 +48,7 @@ use crate::squeeze::{allocate, BudgetPlan, CosineStats};
 use crate::util::Rng;
 
 use super::request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
-use super::scheduler::{Active, Queued, Scheduler};
+use super::scheduler::{Active, Queued, Scheduler, Suspended};
 
 /// Engine-level aggregate statistics for one run (`generate_batch` resets
 /// them; in step-driven mode they accumulate until the next reset).
@@ -52,7 +57,7 @@ pub struct EngineRunStats {
     pub decode_steps: u64,
     pub generated_tokens: u64,
     pub evictions: u64,
-    /// Sequences preempted and requeued to resolve KV-pool OOM.
+    /// Sequences preempted (suspended or requeued) to resolve KV-pool OOM.
     pub preemptions: u64,
     pub peak_pool_bytes: usize,
     pub wall_s: f64,
@@ -67,6 +72,10 @@ enum AdmitError {
     Terminal(RequestOutput),
     /// The pool is transiently full: requeue and retry after retirements.
     Retry(Queued),
+    /// The device pool is transiently full but the finished prefill is too
+    /// valuable to discard: the squeezed cache + plan were parked on the
+    /// host tier, so re-admission is a swap-in instead of a second prefill.
+    Suspend(Box<Suspended>),
 }
 
 pub struct Engine {
@@ -87,6 +96,9 @@ pub struct Engine {
     rng: Rng,
     sched: Scheduler,
     meter: ThroughputMeter,
+    /// Per-request queue latency (submit → decode slot), including time
+    /// spent suspended in the host tier.
+    queue_hist: Histogram,
     run: EngineRunStats,
     pub last_run: EngineRunStats,
 }
@@ -104,7 +116,7 @@ impl Engine {
             .filter(|&b| b <= cfg.max_batch)
             .max()
             .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
-        let pool = KvPool::new(cfg.kv_pool_bytes);
+        let pool = KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes);
         let policy = make_policy(&cfg);
         let sched = Scheduler::new(batch, cfg.queue_depth);
         Ok(Self {
@@ -120,6 +132,7 @@ impl Engine {
             rng: Rng::seed_from_u64(0x5A5A_5A5A),
             sched,
             meter: ThroughputMeter::new(),
+            queue_hist: Histogram::new(),
             run: Default::default(),
             last_run: Default::default(),
             cfg,
@@ -149,8 +162,9 @@ impl Engine {
             .max()
             .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
         self.policy = make_policy(&cfg);
-        self.pool = KvPool::new(cfg.kv_pool_bytes);
+        self.pool = KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes);
         self.sched = Scheduler::new(self.batch, cfg.queue_depth);
+        self.queue_hist = Histogram::new();
         self.cfg = cfg;
         Ok(())
     }
@@ -172,9 +186,32 @@ impl Engine {
         self.batch
     }
 
-    /// Scheduler queue/occupancy/preemption counters.
+    /// Scheduler queue/occupancy/preemption/swap counters.
     pub fn sched_metrics(&self) -> &SchedulerMetrics {
         self.sched.metrics()
+    }
+
+    /// Requests waiting for admission right now (live gauge, not the
+    /// post-step snapshot in `sched_metrics`).
+    pub fn queued_len(&self) -> usize {
+        self.sched.queue_len()
+    }
+
+    /// Sequences in decode slots right now.
+    pub fn running_len(&self) -> usize {
+        self.sched.running()
+    }
+
+    /// Sequences currently swapped out to the host tier.
+    pub fn suspended_len(&self) -> usize {
+        self.sched.suspended_len()
+    }
+
+    /// Per-request queue latency histogram: submit → decode slot, including
+    /// time spent suspended after preemption (so swap cost is observable,
+    /// not inferred from counters). Reset by `generate_batch`/`reconfigure`.
+    pub fn queue_latency(&mut self) -> &mut Histogram {
+        &mut self.queue_hist
     }
 
     /// Live run counters (cumulative since the last `generate_batch` reset;
@@ -183,7 +220,7 @@ impl Engine {
         &self.run
     }
 
-    /// True while any request is queued or running.
+    /// True while any request is queued, running, or suspended.
     pub fn has_work(&self) -> bool {
         !self.sched.is_idle()
     }
@@ -207,6 +244,13 @@ impl Engine {
         }
     }
 
+    /// Whether preempted sequences are suspended to the host tier instead of
+    /// restarted from scratch (`host_spill_bytes = 0` disables the tier and
+    /// reproduces the restart semantics).
+    fn swap_enabled(&self) -> bool {
+        self.cfg.preemption && self.cfg.host_spill_bytes > 0
+    }
+
     /// Enqueue a request for continuous batching; it will join the running
     /// batch at the next `step`. `Err` is the immediate backpressure
     /// rejection produced when the queue is at `cfg.queue_depth`.
@@ -217,9 +261,10 @@ impl Engine {
         }
     }
 
-    /// Advance the scheduler by one cycle: admit from the queue into free
-    /// slots, run one batched decode step, retire finished sequences.
-    /// Returns the requests that finished during this step.
+    /// Advance the scheduler by one cycle: admit from the suspended set and
+    /// the queue into free slots, run one batched decode step, retire
+    /// finished sequences. Returns the requests that finished during this
+    /// step.
     pub fn step(&mut self) -> Result<Vec<RequestOutput>> {
         let mut sched = std::mem::take(&mut self.sched);
         let res = self.step_inner(&mut sched);
@@ -262,6 +307,7 @@ impl Engine {
         let t0 = Instant::now();
         self.meter = ThroughputMeter::new();
         self.run = EngineRunStats::default();
+        self.queue_hist = Histogram::new();
         for req in requests {
             let _ = self.sched.enqueue(Queued { req, t_submit: t0 }, false);
         }
@@ -283,6 +329,7 @@ impl Engine {
         self.retire_phase(sched, &mut outputs);
         let occupancy = sched.running();
         if occupancy == 0 {
+            self.note_outputs(&outputs);
             return Ok(outputs);
         }
         if let Err(e) = self.decode_phase(sched, &mut outputs) {
@@ -291,6 +338,7 @@ impl Engine {
             // retired pre-decode must not be lost).
             eprintln!("decode step failed: {e:#}");
             Self::fail_in_place(sched, self.n_layer, &mut outputs);
+            self.note_outputs(&outputs);
             return Ok(outputs);
         }
         self.retire_phase(sched, &mut outputs);
@@ -299,12 +347,42 @@ impl Engine {
         // (`wall_s` is only meaningful for the generate_batch window).
         self.run.generated_tokens = self.meter.tokens();
         self.run.peak_pool_bytes = self.pool.peak();
+        self.note_outputs(&outputs);
         Ok(outputs)
     }
 
-    /// Fill free slots from the queue under KV-pool admission control.
+    /// Upper bound on retained queue-latency samples: the exact histogram
+    /// stores every sample, so a long-running step-driven engine (router
+    /// worker) must stop recording eventually rather than grow forever.
+    /// Far above anything the closed-batch and bench paths produce.
+    const QUEUE_HIST_MAX_SAMPLES: usize = 1 << 20;
+
+    /// Record per-request queue latency (queue wait + suspended time) for
+    /// every output leaving the engine this step.
+    fn note_outputs(&mut self, outputs: &[RequestOutput]) {
+        for out in outputs {
+            if self.queue_hist.len() >= Self::QUEUE_HIST_MAX_SAMPLES {
+                break;
+            }
+            self.queue_hist.record(out.timing.queue_s + out.timing.suspended_s);
+        }
+    }
+
+    /// Fill free slots: suspended sequences swap back in first (queue-front
+    /// priority — no prefill needed), then queued requests under KV-pool
+    /// admission control.
     fn admit_phase(&mut self, sched: &mut Scheduler, outputs: &mut Vec<RequestOutput>) {
         while sched.has_free_slot() {
+            if sched.peek_suspended().is_some() {
+                if self.try_resume(sched) {
+                    continue;
+                }
+                // No device headroom for the resume. Hold the queue too:
+                // admitting new work ahead of a suspended sequence would
+                // invert priority and consume the headroom it waits for.
+                sched.metrics.deferred_admissions += 1;
+                break;
+            }
             let est = match sched.queue.front() {
                 Some(q) => self.estimate_admit_bytes(&q.req),
                 None => break,
@@ -342,8 +420,58 @@ impl Engine {
                     sched.requeue_front(q);
                     break;
                 }
+                Err(AdmitError::Suspend(s)) => {
+                    // The prefill is preserved on the host tier; the next
+                    // loop iteration (or step) resumes it once device bytes
+                    // free up.
+                    sched.next_seq += 1;
+                    self.note_swap_out(sched);
+                    sched.suspend(*s);
+                }
             }
         }
+    }
+
+    /// Swap the front suspended sequence back into a decode slot: migrate
+    /// its bytes host→device, restore the snapshot, and continue decoding
+    /// from `next_pos` — no prefill, partial output kept. Returns false when
+    /// the device tier lacks headroom (caller defers).
+    fn try_resume(&mut self, sched: &mut Scheduler) -> bool {
+        let bytes = match sched.peek_suspended() {
+            Some(s) => s.host_reservation.bytes(),
+            None => return false,
+        };
+        if self.pool.capacity() > 0 {
+            // Headroom must cover the next decode step's growth too, or a
+            // barely-fitting resume is immediately re-preempted — burning a
+            // swap cycle (and a decode slot) per step with zero progress.
+            // Admission's predicted-peak check guarantees budget+1 rows per
+            // layer fit an empty pool, so this can never wedge a sequence.
+            let needed = bytes + self.n_layer * SequenceCache::token_bytes(self.row_elems);
+            let available = self.pool.capacity().saturating_sub(self.pool.in_use());
+            if needed > available {
+                return false;
+            }
+        }
+        let mut s = sched.pop_suspended().expect("peeked entry exists");
+        if s.host_reservation.migrate(Tier::Device).is_err() {
+            // The headroom vanished between check and migrate (engine is
+            // single-threaded, so this is defensive only).
+            sched.suspend(s);
+            return false;
+        }
+        sched.metrics.swap_ins += 1;
+        sched.metrics.restarts_avoided += 1;
+        sched.place(s.into_active());
+        true
+    }
+
+    /// Record one device→host migration: a preemption suspend, or a prefill
+    /// parked at admission while the device pool was transiently full.
+    fn note_swap_out(&self, sched: &mut Scheduler) {
+        sched.metrics.swap_outs += 1;
+        sched.metrics.host_bytes_peak =
+            sched.metrics.host_bytes_peak.max(self.pool.peak_of(Tier::Host));
     }
 
     /// Bytes the prompt cache will occupy right after admission (prompt
@@ -486,7 +614,38 @@ impl Engine {
 
         let reservation = match Reservation::new(&self.pool, cache.bytes()) {
             Ok(r) => r,
-            Err(_) if allow_retry => return Err(AdmitError::Retry(Queued { req, t_submit })),
+            Err(_) if allow_retry => {
+                // Transient device-pool-full. With the host tier enabled,
+                // park the finished prefill as a suspended sequence so the
+                // eventual re-admission is a swap-in, not a second prefill.
+                if self.swap_enabled() {
+                    if let Ok(host) = Reservation::on(&self.pool, Tier::Host, cache.bytes()) {
+                        let first = sample(&pre.logits.data, req.sampling, &mut self.rng);
+                        timing.first_token_s = t_submit.elapsed().as_secs_f64();
+                        let effective_max_new =
+                            self.effective_new_tokens(prompt_len, req.max_new_tokens);
+                        let peak = cache.bytes();
+                        return Err(AdmitError::Suspend(Box::new(Suspended::from_active(
+                            Active {
+                                generated: vec![first],
+                                next_pos: prompt_len,
+                                last_token: first,
+                                effective_max_new,
+                                seq,
+                                t_submit,
+                                t_admit,
+                                timing,
+                                peak_bytes: peak,
+                                req,
+                                cache,
+                                plan,
+                                reservation: host, // already host-tier
+                            },
+                        ))));
+                    }
+                }
+                return Err(AdmitError::Retry(Queued { req, t_submit }));
+            }
             Err(_) => {
                 let kv = cache.total_tokens();
                 return Err(reject(&req, timing, plan, FinishReason::Oom, kv));
@@ -514,6 +673,22 @@ impl Engine {
             plan,
             reservation,
         })
+    }
+
+    /// Preempt a running sequence to free device bytes: suspend it to the
+    /// host tier (migrate + snapshot — resume continues token-identically)
+    /// when spill is enabled and fits, otherwise requeue its request for a
+    /// restart-from-scratch (dropping the `Active` releases its device
+    /// bytes either way; on migrate only the accounting moves).
+    fn suspend_or_requeue(&mut self, sched: &mut Scheduler, mut a: Active) {
+        if self.swap_enabled() && a.reservation.migrate(Tier::Host).is_ok() {
+            self.note_swap_out(sched);
+            sched.suspend(Suspended::from_active(a));
+        } else {
+            // Host tier full or disabled: restart-from-scratch (prompt
+            // re-prefilled on re-admission, partial output discarded).
+            sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit });
+        }
     }
 
     /// One batched decode step over occupied slots, with OOM resolved by
@@ -576,26 +751,15 @@ impl Engine {
 
         let vocab = self.runtime.manifest.model.vocab;
         let needs_scores = self.policy.needs_scores();
+        let token_bytes = SequenceCache::token_bytes(self.row_elems);
 
-        // Append the new KV row to every layer, then fold H2O scores.
-        for (i, slot) in sched.slots.iter_mut().enumerate() {
-            let Some(a) = slot else { continue };
-            let pos = a.next_pos as u32;
-            for layer in 0..self.n_layer {
-                let base = (layer * b + i) * self.row_elems;
-                let k_row = &out.new_k.data[base..base + self.row_elems];
-                let v_row = &out.new_v.data[base..base + self.row_elems];
-                a.cache.append(layer, k_row, v_row, pos)?;
-                if needs_scores {
-                    let sbase = (layer * b + i) * m;
-                    let n = a.cache.layer_len(layer).min(m);
-                    a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n]);
-                }
-            }
-        }
-
-        // Pool accounting oldest-first: charge the appended rows; on OOM
-        // preempt the youngest other sequence and retry. A sequence fails
+        // Charge, append, sample, and re-compress oldest-first; on OOM
+        // preempt the youngest other sequence and retry. The new KV rows are
+        // appended only *after* the grow is charged, so a sequence preempted
+        // mid-pass still holds exactly its post-previous-step cache — the
+        // snapshot a swap-in can continue from token-identically (the decode
+        // output is a pure function of cache + token + position, so
+        // re-running this step after resume reproduces it). A sequence fails
         // with Oom only when it cannot grow with the pool otherwise empty.
         let mut order: Vec<(u64, usize)> = sched
             .slots
@@ -609,7 +773,12 @@ impl Engine {
                 continue; // preempted by an older sequence in this pass
             }
             loop {
-                let new_bytes = sched.slots[idx].as_ref().expect("checked occupied").cache.bytes();
+                let new_bytes = sched.slots[idx]
+                    .as_ref()
+                    .expect("checked occupied")
+                    .cache
+                    .bytes()
+                    + self.n_layer * token_bytes;
                 if sched.slots[idx]
                     .as_mut()
                     .expect("checked occupied")
@@ -628,14 +797,13 @@ impl Engine {
                 };
                 match victim {
                     Some(v) if v != idx => {
-                        // Preempt the youngest running sequence: requeue its
-                        // original request, then retry the failed grow.
-                        // Dropping the victim's Active releases its pool
-                        // reservation (RAII), making room.
+                        // Preempt the youngest running sequence (younger
+                        // than idx, so untouched this pass), then retry the
+                        // failed grow with the freed device bytes.
                         let va = sched.slots[v].take().expect("victim occupied");
                         sched.metrics.preemptions += 1;
                         self.run.preemptions += 1;
-                        sched.requeue_front(Queued { req: va.req, t_submit: va.t_submit });
+                        self.suspend_or_requeue(sched, va);
                     }
                     Some(_) => {
                         // This sequence IS the youngest: it yields to the
@@ -643,7 +811,7 @@ impl Engine {
                         let a = sched.slots[idx].take().expect("checked occupied");
                         sched.metrics.preemptions += 1;
                         self.run.preemptions += 1;
-                        sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit });
+                        self.suspend_or_requeue(sched, a);
                         break;
                     }
                     None => {
@@ -657,6 +825,21 @@ impl Engine {
                 }
             }
             let Some(a) = sched.slots[idx].as_mut() else { continue };
+
+            // Append the new KV row to every layer and fold H2O scores (the
+            // grow was charged above, so append cannot over-commit).
+            let pos = a.next_pos as u32;
+            for layer in 0..self.n_layer {
+                let base = (layer * b + idx) * self.row_elems;
+                let k_row = &out.new_k.data[base..base + self.row_elems];
+                let v_row = &out.new_v.data[base..base + self.row_elems];
+                a.cache.append(layer, k_row, v_row, pos)?;
+                if needs_scores {
+                    let sbase = (layer * b + idx) * m;
+                    let n = a.cache.layer_len(layer).min(m);
+                    a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n]);
+                }
+            }
 
             // Sample the next token from this slot's logits row.
             let row = &out.logits.data[idx * vocab..(idx + 1) * vocab];
@@ -709,13 +892,16 @@ impl Engine {
         sched.refresh_gauges();
     }
 
-    /// Fail every in-flight and queued request (runtime fault path — not a
-    /// memory condition, so the reason is `Failed`, not `Oom`).
+    /// Fail every in-flight, suspended, and queued request (runtime fault
+    /// path — not a memory condition, so the reason is `Failed`, not `Oom`).
     fn fail_in_place(sched: &mut Scheduler, n_layer: usize, outputs: &mut Vec<RequestOutput>) {
         for slot in sched.slots.iter_mut() {
             if let Some(a) = slot.take() {
                 outputs.push(Self::finish(a, FinishReason::Failed));
             }
+        }
+        while let Some(s) = sched.pop_suspended() {
+            outputs.push(Self::finish_suspended(s, FinishReason::Failed));
         }
         while let Some(q) = sched.pop_queue() {
             outputs.push(Self::immediate_output(&q, FinishReason::Failed, n_layer));
@@ -748,6 +934,23 @@ impl Engine {
             plan: a.plan,
             peak_kv_bytes: a.peak_bytes,
             final_kv_tokens: a.cache.total_tokens(),
+        }
+    }
+
+    /// Output for a sequence that dies while suspended (fault path): its
+    /// snapshot carries the timing and plan to report.
+    fn finish_suspended(s: Suspended, reason: FinishReason) -> RequestOutput {
+        let mut timing = s.snapshot.timing;
+        timing.suspended_s += s.t_suspend.elapsed().as_secs_f64();
+        timing.total_s = s.t_submit.elapsed().as_secs_f64();
+        RequestOutput {
+            id: s.req.id,
+            generated: vec![],
+            finish: reason,
+            timing,
+            plan: s.snapshot.plan,
+            peak_kv_bytes: s.snapshot.peak_bytes,
+            final_kv_tokens: s.snapshot.cache.total_tokens(),
         }
     }
 

@@ -17,20 +17,31 @@
 //!                │
 //!                v            admission control
 //!   ┌─────────► queue ──────(KvPool headroom + ─────► running batch
-//!   │                         BudgetPlan growth        │  one decode
-//!   │ preempt youngest                prediction)      │  step at a time
-//!   │ on pool OOM                                      v
-//!   └──────────────────────────────────────────── retire on EOS/length
-//!                                                      │
-//!                                                      v
-//!                                               RequestOutput
+//!   │                         BudgetPlan growth      ^ │  one decode
+//!   │ requeue (host tier             prediction)     │ │  step at a time
+//!   │ full/disabled:                        swap-in  │ │ swap-out on
+//!   │ restart-from-scratch)      (device reserve →   │ │ pool OOM
+//!   │                             restore snapshot,  │ v (youngest;
+//!   └─────────────── suspended ─────── no prefill) ──┘ │  device→host)
+//!                    (host tier) ◄──────────────────────┤
+//!                                                       v
+//!                                                retire on EOS/length
+//!                                                       │
+//!                                                       v
+//!                                                RequestOutput
 //! ```
 //!
 //! A sequence only fails with `FinishReason::Oom` when it cannot fit in the
-//! KV pool even with every other sequence preempted; otherwise OOM pressure
-//! is resolved by preempting the youngest running sequence and requeueing
-//! its request (restart-from-scratch). `Engine::generate_batch` remains as
-//! a closed-batch compatibility wrapper that drains the scheduler.
+//! device KV pool even with every other sequence preempted; otherwise OOM
+//! pressure is resolved by preempting the youngest running sequence. With
+//! `ServeConfig::host_spill_bytes > 0` the preempted sequence is
+//! *suspended*: its squeezed per-layer cache (plus budget plan, H2O
+//! accumulators, and decode position) migrates to the host-spill tier and
+//! later swaps back in to continue decoding token-identically — no
+//! re-prefill, no discarded output. With the host tier disabled (the
+//! default), preemption degrades to restart-from-scratch requeueing.
+//! `Engine::generate_batch` remains as a closed-batch compatibility wrapper
+//! that drains the scheduler.
 
 pub mod engine;
 pub mod request;

@@ -61,6 +61,10 @@ pub enum FinishReason {
 pub struct RequestTiming {
     /// Queue wait before prefill started (s).
     pub queue_s: f64,
+    /// Total time spent suspended (swapped out to the host tier) after
+    /// preemption, accumulated across swap cycles (s). Together with
+    /// `queue_s` this is the full not-decoding wait of a request.
+    pub suspended_s: f64,
     /// Prefill execution (s).
     pub prefill_s: f64,
     /// Squeeze overhead: cosine-stat reduction + kmeans + allocation (s).

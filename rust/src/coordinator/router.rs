@@ -11,17 +11,23 @@
 //! scheduler queue between decode steps, so a request submitted while a
 //! batch is running joins that batch at the next step instead of waiting
 //! for the whole batch to finish (continuous batching across the network
-//! path). Request ids are rewritten to a worker-local ticket while in
-//! flight, so concurrent connections may reuse ids safely.
+//! path). When `ServeConfig::batch_wait_ms > 0`, a worker forming a fresh
+//! batch from idle waits up to that long for more arrivals before its first
+//! step, so near-simultaneous requests decode together from step one
+//! (occupancy vs first-token-latency tradeoff). Request ids are rewritten
+//! to a worker-local ticket while in flight, so concurrent connections may
+//! reuse ids safely.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::ServeConfig;
+use crate::metrics::SchedulerMetrics;
 
 use super::engine::Engine;
 use super::request::{Request, RequestOutput};
@@ -29,6 +35,10 @@ use super::request::{Request, RequestOutput};
 struct WorkerHandle {
     tx: mpsc::Sender<Job>,
     inflight: Arc<AtomicUsize>,
+    /// Snapshot of the worker's scheduler metrics, refreshed after every
+    /// step (engines live on their worker threads; this is the only window
+    /// into their queue/occupancy/swap counters).
+    metrics: Arc<Mutex<SchedulerMetrics>>,
 }
 
 struct Job {
@@ -61,12 +71,14 @@ impl Router {
             let (tx, rx) = mpsc::channel::<Job>();
             let inflight = Arc::new(AtomicUsize::new(0));
             let inflight2 = inflight.clone();
+            let metrics = Arc::new(Mutex::new(SchedulerMetrics::default()));
+            let metrics2 = metrics.clone();
             let cfg = cfg.clone();
             let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
             std::thread::spawn(move || match Engine::new(cfg) {
                 Ok(engine) => {
                     let _ = ready_tx.send(Ok(()));
-                    worker_loop(engine, rx, inflight2);
+                    worker_loop(engine, rx, inflight2, metrics2);
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(format!("{e:#}")));
@@ -76,7 +88,7 @@ impl Router {
                 .recv()
                 .map_err(|_| anyhow::anyhow!("worker {w} died during startup"))?
                 .map_err(|e| anyhow::anyhow!("worker {w} failed to start: {e}"))?;
-            workers.push(WorkerHandle { tx, inflight });
+            workers.push(WorkerHandle { tx, inflight, metrics });
         }
         Ok(Self { workers, next: AtomicUsize::new(0), policy })
     }
@@ -122,6 +134,16 @@ impl Router {
     pub fn inflight(&self) -> usize {
         self.workers.iter().map(|w| w.inflight.load(Ordering::Relaxed)).sum()
     }
+
+    /// Per-worker scheduler-metrics snapshots (refreshed after each decode
+    /// step), for observability across the thread boundary: queue depth,
+    /// occupancy, preemptions, swap-outs/ins.
+    pub fn sched_metrics(&self) -> Vec<SchedulerMetrics> {
+        self.workers
+            .iter()
+            .map(|w| w.metrics.lock().map(|m| (*m).clone()).unwrap_or_default())
+            .collect()
+    }
 }
 
 /// In-flight bookkeeping for one submitted job: where to send the output and
@@ -136,12 +158,18 @@ struct Pending {
 /// scheduler queue whenever the loop is between decode steps — non-blocking
 /// while the engine has work (so new arrivals join the running batch), and a
 /// blocking `recv` only when idle.
-fn worker_loop(mut engine: Engine, rx: mpsc::Receiver<Job>, inflight: Arc<AtomicUsize>) {
+fn worker_loop(
+    mut engine: Engine,
+    rx: mpsc::Receiver<Job>,
+    inflight: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<SchedulerMetrics>>,
+) {
     let mut pending: HashMap<u64, Pending> = HashMap::new();
     let mut ticket: u64 = 0;
     loop {
         // Ingest: block only when idle; otherwise take whatever is queued.
-        if !engine.has_work() && pending.is_empty() {
+        let was_idle = !engine.has_work();
+        if was_idle && pending.is_empty() {
             match rx.recv() {
                 Ok(job) => ingest(&mut engine, job, &mut pending, &mut ticket, &inflight),
                 Err(_) => return, // router dropped — shut down
@@ -149,6 +177,27 @@ fn worker_loop(mut engine: Engine, rx: mpsc::Receiver<Job>, inflight: Arc<Atomic
         }
         while let Ok(job) = rx.try_recv() {
             ingest(&mut engine, job, &mut pending, &mut ticket, &inflight);
+        }
+
+        // Batch forming: when work just arrived at an idle engine and the
+        // batch is still smaller than the slot count, wait up to
+        // `batch_wait_ms` for more arrivals so they decode together from
+        // the first step instead of joining mid-flight.
+        let wait_ms = engine.config().batch_wait_ms;
+        if was_idle && wait_ms > 0 {
+            let deadline = Instant::now() + Duration::from_millis(wait_ms);
+            while engine.queued_len() + engine.running_len() + engine.suspended_len()
+                < engine.slot_count()
+            {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(job) => ingest(&mut engine, job, &mut pending, &mut ticket, &inflight),
+                    Err(_) => break, // timeout or disconnect: step what we have
+                }
+            }
         }
 
         // One decode step; completed requests are answered immediately.
@@ -161,6 +210,9 @@ fn worker_loop(mut engine: Engine, rx: mpsc::Receiver<Job>, inflight: Arc<Atomic
                 engine.drain()
             }
         };
+        if let Ok(mut m) = metrics.lock() {
+            *m = engine.sched_metrics().clone();
+        }
         for mut out in outputs {
             if let Some(p) = pending.remove(&out.id) {
                 out.id = p.original_id;

@@ -1,17 +1,24 @@
 //! Continuous-batching scheduler state: the admission queue, the running
-//! batch (decode slots), and the metrics that describe them.
+//! batch (decode slots), the suspended set (sequences swapped out to the
+//! host tier), and the metrics that describe them.
 //!
 //! The scheduler is a passive state machine driven by `Engine::step`; each
 //! step moves requests through
 //!
 //! ```text
 //!   submit ──> queue ──admit──> running ──retire──> finished output
-//!                ^                 │
-//!                └────requeue──────┘  (preempted on pool OOM)
+//!                ^                 │ ^
+//!      requeue   │        swap-out │ │ swap-in (resume at queue-front
+//!   (host full:  │      (preempted │ │ priority: device reserve →
+//!     restart)   │     on pool OOM)v │ restore → decode from next_pos)
+//!                └──────────── suspended
 //! ```
 //!
-//! * **Admission** pops queued requests into free slots between decode
-//!   steps, gated by a KV-pool headroom estimate (see
+//! * **Admission** fills free slots between decode steps from two sources,
+//!   in strict priority order: (1) *suspended* sequences swap back in —
+//!   their post-eviction KV snapshot migrates host→device and decoding
+//!   continues from `next_pos` with no prefill; (2) *queued* requests
+//!   prefill and join, gated by a KV-pool headroom estimate (see
 //!   `Engine::estimate_admit_bytes`) so a full pool does not trigger
 //!   wasted prefills.
 //! * **Retirement** frees a slot the moment its sequence finishes (EOS /
@@ -19,21 +26,25 @@
 //!   requests join and leave a running batch mid-flight.
 //! * **Preemption**: when a sequence cannot grow its KV reservation, the
 //!   youngest running sequence (possibly the failing one itself — it then
-//!   yields to older work) is dropped and its original request is requeued
-//!   at the front (restart-from-scratch semantics: its prompt is
-//!   re-prefilled on re-admission and partial output discarded). The oldest
-//!   sequence is never preempted, which guarantees forward progress; a
-//!   sequence only fails with `FinishReason::Oom` if it cannot fit with the
-//!   pool otherwise empty.
+//!   yields to older work) is *suspended*: its squeezed per-layer cache,
+//!   budget plan, H2O accumulators, and decode position are snapshotted and
+//!   the bytes migrate to the host-spill tier. Restart-from-scratch (the
+//!   pre-suspend semantics: requeue the bare request, re-prefill later,
+//!   discard partial output) survives only as the fallback when the host
+//!   tier is full or disabled. The oldest sequence is never preempted,
+//!   which guarantees forward progress; a sequence only fails with
+//!   `FinishReason::Oom` if it cannot fit with the pool otherwise empty.
 //!
 //! The scheduler owns no model state; `Active` carries everything a running
 //! sequence needs (its per-sequence cache, budget plan, and RAII pool
-//! reservation, so dropping an `Active` always releases its bytes).
+//! reservation, so dropping an `Active` always releases its bytes), and
+//! `Suspended` carries the same state frozen into a `SequenceSnapshot` plus
+//! the host-tier reservation that accounts for it while it waits.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::kvcache::{Reservation, SequenceCache};
+use crate::kvcache::{CacheSnapshot, Reservation, SequenceCache};
 use crate::metrics::SchedulerMetrics;
 use crate::squeeze::BudgetPlan;
 
@@ -58,6 +69,7 @@ pub(crate) struct Active {
     pub last_token: i32,
     pub effective_max_new: usize,
     /// Admission ordinal — larger = younger (preemption picks the max).
+    /// Preserved across suspend/resume so a resumed sequence keeps its age.
     pub seq: u64,
     pub t_submit: Instant,
     pub t_admit: Instant,
@@ -65,12 +77,122 @@ pub(crate) struct Active {
     pub peak_bytes: usize,
 }
 
-/// Queue + running batch + counters. Created sized to the engine's decode
-/// slot count; `Default` builds an empty zero-slot scheduler (used only to
-/// move the real one out of the engine during a step).
+/// Everything a preempted sequence needs to continue decoding exactly where
+/// it stopped: the squeezed per-layer KV (with H2O score accumulators inside
+/// the slot metadata), the layer-budget plan, the emitted tokens, and the
+/// decode position. Restoring this state and re-running the next decode step
+/// is token-identical to never having been preempted — the decode output is
+/// a pure function of (cache, last_token, next_pos).
+pub(crate) struct SequenceSnapshot {
+    pub cache: CacheSnapshot,
+    pub plan: BudgetPlan,
+    pub generated: Vec<i32>,
+    pub next_pos: usize,
+    pub last_token: i32,
+    pub effective_max_new: usize,
+    pub t_admit: Instant,
+    pub timing: RequestTiming,
+    pub peak_bytes: usize,
+}
+
+/// A sequence swapped out of the device pool: its snapshot plus the
+/// host-tier reservation accounting for the spilled bytes (RAII — dropping
+/// a `Suspended`, e.g. on a fatal engine fault, releases the host bytes).
+pub(crate) struct Suspended {
+    pub req: Request,
+    pub snapshot: SequenceSnapshot,
+    pub host_reservation: Reservation,
+    pub seq: u64,
+    pub t_submit: Instant,
+    pub t_suspend: Instant,
+}
+
+impl Suspended {
+    /// Freeze a preempted `Active` whose reservation has already been
+    /// migrated to the host tier. Inverse of [`Suspended::into_active`].
+    pub(crate) fn from_active(a: Active) -> Self {
+        let Active {
+            req,
+            cache,
+            plan,
+            reservation,
+            generated,
+            next_pos,
+            last_token,
+            effective_max_new,
+            seq,
+            t_submit,
+            t_admit,
+            timing,
+            peak_bytes,
+        } = a;
+        Suspended {
+            req,
+            snapshot: SequenceSnapshot {
+                cache: cache.snapshot(),
+                plan,
+                generated,
+                next_pos,
+                last_token,
+                effective_max_new,
+                t_admit,
+                timing,
+                peak_bytes,
+            },
+            host_reservation: reservation,
+            seq,
+            t_submit,
+            t_suspend: Instant::now(),
+        }
+    }
+
+    /// Thaw back into a running `Active` whose reservation has already been
+    /// migrated to the device tier, folding the time spent suspended into
+    /// the request's timing. The preserved `seq` keeps the sequence's age —
+    /// a resumed sequence is not "young" again for victim selection.
+    pub(crate) fn into_active(self) -> Active {
+        let Suspended { req, snapshot, host_reservation, seq, t_submit, t_suspend } = self;
+        let SequenceSnapshot {
+            cache,
+            plan,
+            generated,
+            next_pos,
+            last_token,
+            effective_max_new,
+            t_admit,
+            mut timing,
+            peak_bytes,
+        } = snapshot;
+        timing.suspended_s += t_suspend.elapsed().as_secs_f64();
+        Active {
+            req,
+            cache: cache.restore(),
+            plan,
+            reservation: host_reservation,
+            generated,
+            next_pos,
+            last_token,
+            effective_max_new,
+            seq,
+            t_submit,
+            t_admit,
+            timing,
+            peak_bytes,
+        }
+    }
+}
+
+/// Queue + running batch + suspended set + counters. Created sized to the
+/// engine's decode slot count; `Default` builds an empty zero-slot scheduler
+/// (used only to move the real one out of the engine during a step).
 pub struct Scheduler {
     pub(crate) queue: VecDeque<Queued>,
     pub(crate) slots: Vec<Option<Active>>,
+    /// Swapped-out sequences, ordered oldest-work-first (LIFO over
+    /// suspension order: preemption picks the youngest, so the last
+    /// sequence suspended is the oldest of the suspended set and resumes
+    /// first).
+    pub(crate) suspended: VecDeque<Suspended>,
     pub(crate) metrics: SchedulerMetrics,
     pub(crate) next_seq: u64,
     /// Queue backpressure threshold (0 = unbounded).
@@ -88,6 +210,7 @@ impl Scheduler {
         Self {
             queue: VecDeque::new(),
             slots: (0..slots).map(|_| None).collect(),
+            suspended: VecDeque::new(),
             metrics: SchedulerMetrics { slots, ..Default::default() },
             next_seq: 0,
             max_queue,
@@ -102,8 +225,14 @@ impl Scheduler {
         self.queue.len()
     }
 
+    pub fn suspended_len(&self) -> usize {
+        self.suspended.len()
+    }
+
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
+        self.queue.is_empty()
+            && self.suspended.is_empty()
+            && self.slots.iter().all(|s| s.is_none())
     }
 
     pub fn metrics(&self) -> &SchedulerMetrics {
@@ -126,8 +255,8 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Requeue at the front (preemption / transient admission failure) —
-    /// never subject to the backpressure cap.
+    /// Requeue at the front (restart-from-scratch preemption / transient
+    /// admission failure) — never subject to the backpressure cap.
     pub(crate) fn requeue_front(&mut self, q: Queued) {
         self.queue.push_front(q);
         self.note_queue();
@@ -137,6 +266,26 @@ impl Scheduler {
         let q = self.queue.pop_front();
         self.metrics.queue_depth = self.queue.len();
         q
+    }
+
+    /// Park a swapped-out sequence. Pushed to the *front*: preemption always
+    /// picks the youngest running sequence, so the most recently suspended
+    /// entry is the oldest work in the suspended set and must resume first
+    /// (oldest-first resume is what keeps the age order, and thus forward
+    /// progress, intact across swap cycles).
+    pub(crate) fn suspend(&mut self, s: Suspended) {
+        self.suspended.push_front(s);
+        self.metrics.suspended = self.suspended.len();
+    }
+
+    pub(crate) fn peek_suspended(&self) -> Option<&Suspended> {
+        self.suspended.front()
+    }
+
+    pub(crate) fn pop_suspended(&mut self) -> Option<Suspended> {
+        let s = self.suspended.pop_front();
+        self.metrics.suspended = self.suspended.len();
+        s
     }
 
     fn note_queue(&mut self) {
@@ -177,19 +326,20 @@ impl Scheduler {
         self.refresh_gauges();
     }
 
-    /// Refresh the occupancy/queue gauges (used by retirements and fault
-    /// paths that bypass `note_step`, so an idle engine never reports a
-    /// phantom running sequence).
+    /// Refresh the occupancy/queue/suspended gauges (used by retirements and
+    /// fault paths that bypass `note_step`, so an idle engine never reports
+    /// a phantom running sequence).
     pub(crate) fn refresh_gauges(&mut self) {
         self.metrics.running = self.running();
         self.metrics.queue_depth = self.queue.len();
+        self.metrics.suspended = self.suspended.len();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::KvPool;
+    use crate::kvcache::{KvPool, Tier};
 
     fn dummy_active(seq: u64, pool: &KvPool) -> Active {
         Active {
@@ -206,6 +356,28 @@ mod tests {
             t_admit: Instant::now(),
             timing: RequestTiming::default(),
             peak_bytes: 0,
+        }
+    }
+
+    fn dummy_suspended(seq: u64, pool: &KvPool) -> Suspended {
+        let now = Instant::now();
+        Suspended {
+            req: Request::new(seq, vec![1, 2, 3], 4),
+            snapshot: SequenceSnapshot {
+                cache: SequenceCache::new(1, 4).snapshot(),
+                plan: BudgetPlan::uniform(1, 8),
+                generated: vec![7],
+                next_pos: 3,
+                last_token: 7,
+                effective_max_new: 4,
+                t_admit: now,
+                timing: RequestTiming::default(),
+                peak_bytes: 0,
+            },
+            host_reservation: Reservation::on(pool, Tier::Host, 16).unwrap(),
+            seq,
+            t_submit: now,
+            t_suspend: now,
         }
     }
 
@@ -242,6 +414,26 @@ mod tests {
         s.slots[0] = None;
         assert_eq!(s.youngest_running(), None);
         assert!(s.is_idle());
+    }
+
+    #[test]
+    fn suspended_resume_order_is_oldest_first() {
+        let pool = KvPool::unlimited();
+        let mut s = Scheduler::new(2, 0);
+        // Preemption order: youngest first — seq 12 suspended before seq 11.
+        s.suspend(dummy_suspended(12, &pool));
+        s.suspend(dummy_suspended(11, &pool));
+        assert_eq!(s.suspended_len(), 2);
+        assert_eq!(s.metrics().suspended, 2);
+        assert!(!s.is_idle(), "suspended sequences are live work");
+        // Oldest work (seq 11, suspended last) resumes first.
+        assert_eq!(s.peek_suspended().unwrap().seq, 11);
+        assert_eq!(s.pop_suspended().unwrap().seq, 11);
+        assert_eq!(s.pop_suspended().unwrap().seq, 12);
+        assert_eq!(s.metrics().suspended, 0);
+        assert!(s.is_idle());
+        // Host bytes released when the Suspended entries dropped.
+        assert_eq!(pool.in_use_of(Tier::Host), 0);
     }
 
     #[test]

@@ -159,6 +159,16 @@ impl SequenceCache {
         Ok(())
     }
 
+    /// Freeze this cache into a host-side snapshot for swap-out. The cache
+    /// is captured as-is — post-eviction, so each layer holds at most its
+    /// budget — which is what makes suspended sequences cheap: the bytes
+    /// moved to host memory are exactly the squeezed working set. H2O score
+    /// accumulators travel inside `SlotMeta`, so a restored sequence ranks
+    /// heavy hitters identically to one that was never suspended.
+    pub fn snapshot(self) -> CacheSnapshot {
+        CacheSnapshot { layers: self.layers, row_elems: self.row_elems }
+    }
+
     /// Copy this sequence's cache into slot `b` of a padded decode batch
     /// buffer of shape `[n_layer, B, M, row_elems]` and fill `cache_lens`.
     pub fn write_into_batch(
@@ -188,6 +198,32 @@ impl SequenceCache {
             lens[layer * bsz + b] = lc.len() as i32;
         }
         Ok(())
+    }
+}
+
+/// A suspended sequence's KV state: the exact per-layer rows + metadata the
+/// cache held at swap-out. Byte-identical restoration is the contract that
+/// makes suspend/resume token-identical to uninterrupted decoding.
+#[derive(Debug, Clone)]
+pub struct CacheSnapshot {
+    layers: Vec<LayerCache>,
+    row_elems: usize,
+}
+
+impl CacheSnapshot {
+    /// Bytes this snapshot occupies (same accounting as the live cache, so
+    /// host-tier reservations charge exactly what device-tier ones did).
+    pub fn bytes(&self) -> usize {
+        self.total_tokens() * SequenceCache::token_bytes(self.row_elems)
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+
+    /// Thaw back into a live cache for swap-in.
+    pub fn restore(self) -> SequenceCache {
+        SequenceCache { layers: self.layers, row_elems: self.row_elems }
     }
 }
 
@@ -265,6 +301,26 @@ mod tests {
         let mut lens = vec![0i32; 1];
         // len == M is not allowed: the step appends at slot len.
         assert!(c.write_into_batch(&mut kb, &mut vb, &mut lens, 0).is_err());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_preserves_everything() {
+        let mut c = SequenceCache::new(2, 3);
+        c.append(0, &[1.0; 3], &[2.0; 3], 0).unwrap();
+        c.append(0, &[3.0; 3], &[4.0; 3], 1).unwrap();
+        c.append(1, &[5.0; 3], &[6.0; 3], 0).unwrap();
+        c.add_scores(0, &[0.5, 0.25]);
+        let bytes = c.bytes();
+        let k0 = c.layers[0].k.clone();
+        let meta0 = c.layers[0].meta.clone();
+        let snap = c.snapshot();
+        assert_eq!(snap.bytes(), bytes);
+        assert_eq!(snap.total_tokens(), 3);
+        let back = snap.restore();
+        assert_eq!(back.bytes(), bytes);
+        assert_eq!(back.layers[0].k, k0);
+        assert_eq!(back.layers[0].meta, meta0); // H2O scores survive
+        assert_eq!(back.layer_len(1), 1);
     }
 
     #[test]

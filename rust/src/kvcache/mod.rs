@@ -1,10 +1,11 @@
 //! KV-cache substrate: per-sequence 2-D caches (layer × token), the global
-//! byte pool (the HBM stand-in), and the sequence-wise eviction policies.
+//! two-tier byte pool (device HBM stand-in + host spill for suspended
+//! sequences), and the sequence-wise eviction policies.
 
 pub mod cache;
 pub mod eviction;
 pub mod pool;
 
-pub use cache::{LayerCache, SequenceCache, SlotMeta};
+pub use cache::{CacheSnapshot, LayerCache, SequenceCache, SlotMeta};
 pub use eviction::{make_policy, EvictionPolicy, FullCache, H2o, SlidingWindow, StreamingLlm};
-pub use pool::{KvPool, OutOfMemory, Reservation};
+pub use pool::{KvPool, OutOfMemory, Reservation, Tier};

@@ -1,17 +1,47 @@
-//! Global KV memory pool with byte-granular accounting.
+//! Two-tier KV memory pool with byte-granular accounting.
 //!
 //! Plays the role of the GPU HBM budget in the paper's Tables 3/9 and Fig. 4:
-//! every cached token is charged here, OOM = a reservation that does not fit.
-//! `capacity = 0` means unlimited (accuracy experiments); throughput/OOM
-//! experiments set a finite capacity so Full Cache hits the same wall the
-//! paper's A100s do.
+//! every cached token is charged to the **device** tier, OOM = a reservation
+//! that does not fit. The **host** tier accounts for swapped-out (suspended)
+//! sequences: a preempted sequence's post-eviction cache — already squeezed
+//! to its per-layer budgets — migrates device→host instead of being thrown
+//! away, and back host→device on resume. For either tier, `capacity = 0`
+//! means unlimited (accuracy experiments); throughput/OOM experiments set a
+//! finite device capacity so Full Cache hits the same wall the paper's A100s
+//! do.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// Returned when a reservation exceeds remaining pool capacity.
+/// Memory tier a reservation's bytes are charged to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Accelerator HBM (the paper's KV-cache budget).
+    Device,
+    /// Host (CPU) spill memory holding suspended sequences.
+    Host,
+}
+
+impl Tier {
+    fn index(self) -> usize {
+        match self {
+            Tier::Device => 0,
+            Tier::Host => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Device => "device",
+            Tier::Host => "host",
+        }
+    }
+}
+
+/// Returned when a reservation exceeds a tier's remaining capacity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OutOfMemory {
+    pub tier: Tier,
     pub requested: usize,
     pub in_use: usize,
     pub capacity: usize,
@@ -21,15 +51,37 @@ impl std::fmt::Display for OutOfMemory {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "KV pool OOM: requested {} B with {}/{} B in use",
-            self.requested, self.in_use, self.capacity
+            "KV pool OOM ({} tier): requested {} B with {}/{} B in use",
+            self.tier.name(),
+            self.requested,
+            self.in_use,
+            self.capacity
         )
     }
 }
 
 impl std::error::Error for OutOfMemory {}
 
-/// Shared KV pool. Cloning shares the underlying accounting.
+#[derive(Debug)]
+struct TierState {
+    capacity: usize, // 0 = unlimited
+    in_use: AtomicUsize,
+    peak: AtomicUsize,
+    oom_events: AtomicUsize,
+}
+
+impl TierState {
+    fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            in_use: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            oom_events: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Shared two-tier KV pool. Cloning shares the underlying accounting.
 #[derive(Debug, Clone)]
 pub struct KvPool {
     inner: Arc<Inner>,
@@ -37,70 +89,92 @@ pub struct KvPool {
 
 #[derive(Debug)]
 struct Inner {
-    capacity: usize, // 0 = unlimited
-    in_use: AtomicUsize,
-    peak: AtomicUsize,
-    oom_events: AtomicUsize,
+    tiers: [TierState; 2],
 }
 
 impl KvPool {
+    /// Device-only pool (host tier unlimited but unused unless spilled to).
     pub fn new(capacity_bytes: usize) -> Self {
+        Self::tiered(capacity_bytes, 0)
+    }
+
+    /// Pool with explicit device and host-spill capacities (0 = unlimited).
+    pub fn tiered(device_bytes: usize, host_bytes: usize) -> Self {
         Self {
             inner: Arc::new(Inner {
-                capacity: capacity_bytes,
-                in_use: AtomicUsize::new(0),
-                peak: AtomicUsize::new(0),
-                oom_events: AtomicUsize::new(0),
+                tiers: [TierState::new(device_bytes), TierState::new(host_bytes)],
             }),
         }
     }
 
     pub fn unlimited() -> Self {
-        Self::new(0)
+        Self::tiered(0, 0)
     }
 
+    fn tier(&self, tier: Tier) -> &TierState {
+        &self.inner.tiers[tier.index()]
+    }
+
+    pub fn capacity_of(&self, tier: Tier) -> usize {
+        self.tier(tier).capacity
+    }
+
+    pub fn in_use_of(&self, tier: Tier) -> usize {
+        self.tier(tier).in_use.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_of(&self, tier: Tier) -> usize {
+        self.tier(tier).peak.load(Ordering::Relaxed)
+    }
+
+    pub fn oom_events_of(&self, tier: Tier) -> usize {
+        self.tier(tier).oom_events.load(Ordering::Relaxed)
+    }
+
+    /// Device-tier capacity (back-compat shorthand).
     pub fn capacity(&self) -> usize {
-        self.inner.capacity
+        self.capacity_of(Tier::Device)
     }
 
+    /// Device-tier bytes in use.
     pub fn in_use(&self) -> usize {
-        self.inner.in_use.load(Ordering::Relaxed)
+        self.in_use_of(Tier::Device)
     }
 
+    /// Device-tier high-water mark.
     pub fn peak(&self) -> usize {
-        self.inner.peak.load(Ordering::Relaxed)
+        self.peak_of(Tier::Device)
     }
 
+    /// Device-tier OOM events.
     pub fn oom_events(&self) -> usize {
-        self.inner.oom_events.load(Ordering::Relaxed)
+        self.oom_events_of(Tier::Device)
     }
 
-    /// Reserve `bytes`; fails atomically with `OutOfMemory` when capped.
-    pub fn reserve(&self, bytes: usize) -> Result<(), OutOfMemory> {
-        if self.inner.capacity == 0 {
-            let now = self.inner.in_use.fetch_add(bytes, Ordering::Relaxed) + bytes;
-            self.inner.peak.fetch_max(now, Ordering::Relaxed);
+    /// Reserve `bytes` on `tier`; fails atomically with `OutOfMemory` when
+    /// the tier is capped and the bytes do not fit.
+    pub fn reserve_on(&self, tier: Tier, bytes: usize) -> Result<(), OutOfMemory> {
+        let t = self.tier(tier);
+        if t.capacity == 0 {
+            let now = t.in_use.fetch_add(bytes, Ordering::Relaxed) + bytes;
+            t.peak.fetch_max(now, Ordering::Relaxed);
             return Ok(());
         }
-        let mut cur = self.inner.in_use.load(Ordering::Relaxed);
+        let mut cur = t.in_use.load(Ordering::Relaxed);
         loop {
             let next = cur + bytes;
-            if next > self.inner.capacity {
-                self.inner.oom_events.fetch_add(1, Ordering::Relaxed);
+            if next > t.capacity {
+                t.oom_events.fetch_add(1, Ordering::Relaxed);
                 return Err(OutOfMemory {
+                    tier,
                     requested: bytes,
                     in_use: cur,
-                    capacity: self.inner.capacity,
+                    capacity: t.capacity,
                 });
             }
-            match self.inner.in_use.compare_exchange_weak(
-                cur,
-                next,
-                Ordering::Relaxed,
-                Ordering::Relaxed,
-            ) {
+            match t.in_use.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
                 Ok(_) => {
-                    self.inner.peak.fetch_max(next, Ordering::Relaxed);
+                    t.peak.fetch_max(next, Ordering::Relaxed);
                     return Ok(());
                 }
                 Err(actual) => cur = actual,
@@ -108,45 +182,86 @@ impl KvPool {
         }
     }
 
-    /// Release previously reserved bytes.
+    /// Release previously reserved bytes on `tier`.
+    pub fn release_on(&self, tier: Tier, bytes: usize) {
+        let prev = self.tier(tier).in_use.fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(
+            prev >= bytes,
+            "{} pool release underflow: {prev} - {bytes}",
+            tier.name()
+        );
+    }
+
+    /// Reserve on the device tier (back-compat shorthand).
+    pub fn reserve(&self, bytes: usize) -> Result<(), OutOfMemory> {
+        self.reserve_on(Tier::Device, bytes)
+    }
+
+    /// Release on the device tier (back-compat shorthand).
     pub fn release(&self, bytes: usize) {
-        let prev = self.inner.in_use.fetch_sub(bytes, Ordering::Relaxed);
-        debug_assert!(prev >= bytes, "pool release underflow: {prev} - {bytes}");
+        self.release_on(Tier::Device, bytes)
     }
 }
 
 /// RAII reservation that releases on drop and supports resizing as a
-/// sequence's cache grows (append) or shrinks (eviction).
+/// sequence's cache grows (append) or shrinks (eviction), plus migration
+/// between tiers (swap-out / swap-in of suspended sequences).
 pub struct Reservation {
     pool: KvPool,
+    tier: Tier,
     bytes: usize,
 }
 
 impl Reservation {
+    /// Device-tier reservation (the common case: a running sequence).
     pub fn new(pool: &KvPool, bytes: usize) -> Result<Self, OutOfMemory> {
-        pool.reserve(bytes)?;
-        Ok(Self { pool: pool.clone(), bytes })
+        Self::on(pool, Tier::Device, bytes)
+    }
+
+    /// Reservation on an explicit tier.
+    pub fn on(pool: &KvPool, tier: Tier, bytes: usize) -> Result<Self, OutOfMemory> {
+        pool.reserve_on(tier, bytes)?;
+        Ok(Self { pool: pool.clone(), tier, bytes })
     }
 
     pub fn bytes(&self) -> usize {
         self.bytes
     }
 
-    /// Adjust the reservation to `new_bytes` (grow may OOM; shrink cannot).
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Adjust the reservation to `new_bytes` on its current tier (grow may
+    /// OOM; shrink cannot).
     pub fn resize(&mut self, new_bytes: usize) -> Result<(), OutOfMemory> {
         if new_bytes > self.bytes {
-            self.pool.reserve(new_bytes - self.bytes)?;
+            self.pool.reserve_on(self.tier, new_bytes - self.bytes)?;
         } else {
-            self.pool.release(self.bytes - new_bytes);
+            self.pool.release_on(self.tier, self.bytes - new_bytes);
         }
         self.bytes = new_bytes;
+        Ok(())
+    }
+
+    /// Atomically move this reservation's bytes to `to`: the target tier is
+    /// charged first (failing cleanly with `OutOfMemory` and no state
+    /// change), then the source tier is released — mirroring a real copy,
+    /// where both copies exist until the source is freed.
+    pub fn migrate(&mut self, to: Tier) -> Result<(), OutOfMemory> {
+        if to == self.tier {
+            return Ok(());
+        }
+        self.pool.reserve_on(to, self.bytes)?;
+        self.pool.release_on(self.tier, self.bytes);
+        self.tier = to;
         Ok(())
     }
 }
 
 impl Drop for Reservation {
     fn drop(&mut self) {
-        self.pool.release(self.bytes);
+        self.pool.release_on(self.tier, self.bytes);
     }
 }
 
@@ -196,5 +311,65 @@ mod tests {
         assert!(p2.reserve(40).is_err());
         p2.release(70);
         assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn tiers_account_independently() {
+        let pool = KvPool::tiered(100, 50);
+        pool.reserve_on(Tier::Device, 90).unwrap();
+        pool.reserve_on(Tier::Host, 40).unwrap();
+        assert_eq!(pool.in_use_of(Tier::Device), 90);
+        assert_eq!(pool.in_use_of(Tier::Host), 40);
+        // Each tier hits its own wall.
+        assert_eq!(pool.reserve_on(Tier::Device, 20).unwrap_err().tier, Tier::Device);
+        assert_eq!(pool.reserve_on(Tier::Host, 20).unwrap_err().tier, Tier::Host);
+        assert_eq!(pool.oom_events_of(Tier::Device), 1);
+        assert_eq!(pool.oom_events_of(Tier::Host), 1);
+        pool.release_on(Tier::Device, 90);
+        pool.release_on(Tier::Host, 40);
+        assert_eq!(pool.in_use_of(Tier::Device), 0);
+        assert_eq!(pool.in_use_of(Tier::Host), 0);
+    }
+
+    #[test]
+    fn migrate_moves_bytes_between_tiers() {
+        let pool = KvPool::tiered(100, 100);
+        let mut r = Reservation::new(&pool, 60).unwrap();
+        assert_eq!(r.tier(), Tier::Device);
+        r.migrate(Tier::Host).unwrap();
+        assert_eq!(r.tier(), Tier::Host);
+        assert_eq!(pool.in_use_of(Tier::Device), 0);
+        assert_eq!(pool.in_use_of(Tier::Host), 60);
+        // migrate to the same tier is a no-op
+        r.migrate(Tier::Host).unwrap();
+        assert_eq!(pool.in_use_of(Tier::Host), 60);
+        r.migrate(Tier::Device).unwrap();
+        assert_eq!(pool.in_use_of(Tier::Device), 60);
+        assert_eq!(pool.in_use_of(Tier::Host), 0);
+        drop(r);
+        assert_eq!(pool.in_use_of(Tier::Device), 0);
+    }
+
+    #[test]
+    fn migrate_oom_leaves_state_intact() {
+        let pool = KvPool::tiered(100, 50);
+        let mut r = Reservation::new(&pool, 80).unwrap();
+        let err = r.migrate(Tier::Host).unwrap_err();
+        assert_eq!(err.tier, Tier::Host);
+        assert_eq!(r.tier(), Tier::Device);
+        assert_eq!(pool.in_use_of(Tier::Device), 80);
+        assert_eq!(pool.in_use_of(Tier::Host), 0);
+    }
+
+    #[test]
+    fn host_tier_drop_releases_host_bytes() {
+        let pool = KvPool::tiered(0, 100);
+        {
+            let _r = Reservation::on(&pool, Tier::Host, 70).unwrap();
+            assert_eq!(pool.in_use_of(Tier::Host), 70);
+            assert_eq!(pool.in_use(), 0);
+        }
+        assert_eq!(pool.in_use_of(Tier::Host), 0);
+        assert_eq!(pool.peak_of(Tier::Host), 70);
     }
 }

@@ -18,39 +18,53 @@
 //!   decode attention (which also emits the H2O signal), and the cosine
 //!   probe (`python/compile/kernels/`).
 //!
-//! ## Scheduler architecture (admission → step → retire/preempt)
+//! ## Scheduler architecture (admission → step → retire/suspend/resume)
 //!
 //! The engine no longer runs closed batches internally; it is driven one
 //! decode step at a time by `Engine::step`, over the state machine in
-//! [`coordinator::scheduler`]:
+//! [`coordinator::scheduler`] (submit → queue → running → suspended →
+//! running):
 //!
 //! 1. **Submit** — `Engine::submit` enqueues a request (backpressure at
 //!    `ServeConfig::queue_depth` produces an immediate `Rejected` output).
-//! 2. **Admit** — between decode steps, queued requests fill free decode
-//!    slots. Admission is KV-pool aware twice over: a pre-prefill headroom
-//!    estimate (`min(b_init, prompt_len)` tokens per layer) skips wasted
-//!    prefills while the pool is saturated, and the post-prefill
-//!    `BudgetPlan` predicts the sequence's peak growth — a request that
-//!    cannot fit *even alone* fails fast with `Oom`.
+//! 2. **Admit** — between decode steps, free decode slots fill from two
+//!    sources in priority order. *Suspended* sequences swap back in first:
+//!    their bytes migrate host→device and decoding continues from
+//!    `next_pos` with no prefill. Then *queued* requests prefill and join,
+//!    KV-pool aware twice over: a pre-prefill headroom estimate
+//!    (`min(b_init, prompt_len)` tokens per layer) skips wasted prefills
+//!    while the pool is saturated, and the post-prefill `BudgetPlan`
+//!    predicts the sequence's peak growth — a request that cannot fit
+//!    *even alone* fails fast with `Oom`.
 //! 3. **Step** — one batched decode over the occupied slots on the smallest
 //!    capacity tier that fits; new KV rows are appended, charged to the
 //!    pool, then each layer is re-compressed to its own budget (the paper's
 //!    2-D management).
-//! 4. **Retire / preempt** — finished sequences (EOS or length) free their
+//! 4. **Retire / suspend** — finished sequences (EOS or length) free their
 //!    slot immediately, so waiting requests join the running batch on the
 //!    next step. If a sequence cannot grow its reservation, the youngest
-//!    *other* running sequence is preempted and requeued (restart-from-
-//!    scratch) instead of failing anyone; `FinishReason::Oom` is reserved
-//!    for requests that cannot fit with the pool otherwise empty.
+//!    *other* running sequence is preempted instead of failing anyone: with
+//!    `ServeConfig::host_spill_bytes > 0` its post-eviction cache — already
+//!    squeezed to each layer's budget, so the spilled bytes are minimal by
+//!    construction — is *suspended* to the host tier together with its
+//!    budget plan, H2O accumulators, and decode position, and later resumed
+//!    token-identically; with the host tier full or disabled it is requeued
+//!    for a restart-from-scratch (re-prefill, partial output discarded).
+//!    `FinishReason::Oom` is reserved for requests that cannot fit with the
+//!    pool otherwise empty, and `preemption = false` reproduces the paper's
+//!    hard-OOM table cells.
 //!
 //! `Engine::generate_batch` survives as a thin compatibility wrapper
 //! (enqueue everything, drain the scheduler, sort by id) and is
 //! token-identical to the step-driven path under greedy sampling — the
 //! `scheduler_parity` integration test pins that equivalence. The router
 //! drives one engine per worker thread step-by-step, so requests arriving
-//! over TCP mid-batch are decoded alongside the ones already running;
-//! queue depth, batch occupancy and preemption counters are exported via
-//! [`metrics::SchedulerMetrics`].
+//! over TCP mid-batch are decoded alongside the ones already running (and,
+//! with `batch_wait_ms`, near-simultaneous arrivals form one batch from the
+//! first step); queue depth, batch occupancy, preemption and swap-out/in
+//! counters are exported via [`metrics::SchedulerMetrics`], and the
+//! suspend/resume lifecycle makes capped-pool serving cheap instead of
+//! merely survivable.
 //!
 //! Quickstart (runs on the simulated backend — no artifacts needed):
 //! ```

@@ -42,7 +42,12 @@ ENGINE FLAGS (serve/generate)
   --p F                squeeze hyperparameter p               [0.35]
   --max-batch N        decode slots                           [8]
   --kernel K           pallas|jnp                             [pallas]
-  --kv-pool-mib N      KV pool capacity (0 = unlimited)       [0]
+  --kv-pool-mib N      device KV pool capacity (0 = unlimited) [0]
+  --host-spill-mib N   host-spill tier for suspended sequences
+                       (0 = disabled: preemption restarts
+                       from scratch)                           [0]
+  --batch-wait-ms N    wait up to N ms for more arrivals
+                       before stepping a small batch           [0]
 ";
 
 fn engine_config(args: &Args) -> Result<ServeConfig> {
@@ -69,6 +74,8 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
     cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
     cfg.kernel = args.str("kernel", &cfg.kernel);
     cfg.kv_pool_bytes = args.usize("kv-pool-mib", cfg.kv_pool_bytes >> 20)? << 20;
+    cfg.host_spill_bytes = args.usize("host-spill-mib", cfg.host_spill_bytes >> 20)? << 20;
+    cfg.batch_wait_ms = args.u64("batch-wait-ms", cfg.batch_wait_ms)?;
     Ok(cfg)
 }
 

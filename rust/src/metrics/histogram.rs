@@ -1,10 +1,44 @@
 //! Simple exact-quantile latency histogram (stores samples; serving runs in
 //! this repo are small enough that exactness beats sketching).
+//!
+//! The engine keeps one of these for per-request queue latency — the time a
+//! request spent waiting for a decode slot, *including* time suspended in
+//! the host tier after a preemption (accounted from the preserved
+//! `t_submit`). `HistogramSummary` is the exportable view (bench reports,
+//! experiment logs).
+
+use crate::util::Json;
 
 #[derive(Debug, Clone, Default)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
+}
+
+/// Point-in-time quantile summary of a histogram (for reports and JSON
+/// experiment logs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistogramSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl HistogramSummary {
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", num(self.mean)),
+            ("p50", num(self.p50)),
+            ("p95", num(self.p95)),
+            ("p99", num(self.p99)),
+            ("max", num(self.max)),
+        ])
+    }
 }
 
 impl Histogram {
@@ -65,6 +99,17 @@ impl Histogram {
     pub fn max(&mut self) -> f64 {
         self.quantile(1.0)
     }
+
+    pub fn summary(&mut self) -> HistogramSummary {
+        HistogramSummary {
+            count: self.len(),
+            mean: self.mean(),
+            p50: self.p50(),
+            p95: self.p95(),
+            p99: self.p99(),
+            max: self.max(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -96,5 +141,23 @@ mod tests {
         h.record(3.0);
         assert_eq!(h.p50(), 3.0);
         assert_eq!(h.p99(), 3.0);
+    }
+
+    #[test]
+    fn summary_exports_json() {
+        let mut h = Histogram::new();
+        for i in 1..=4 {
+            h.record(i as f64);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 4.0);
+        let j = s.to_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("max").unwrap().as_f64(), Some(4.0));
+        // empty histogram: NaNs serialize as null, not invalid JSON
+        let j = Histogram::new().summary().to_json();
+        assert!(matches!(j.get("mean"), Some(Json::Null)));
     }
 }

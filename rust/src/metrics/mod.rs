@@ -6,6 +6,6 @@ mod histogram;
 mod scheduler;
 mod throughput;
 
-pub use histogram::Histogram;
+pub use histogram::{Histogram, HistogramSummary};
 pub use scheduler::SchedulerMetrics;
 pub use throughput::ThroughputMeter;

@@ -1,7 +1,9 @@
 //! Continuous-batching scheduler observability: queue depth, batch
-//! occupancy, admission/preemption/retirement counters. One instance lives
-//! inside the engine's `Scheduler` and is updated on every step; gauges
-//! (`queue_depth`, `running`) reflect the state after the most recent step,
+//! occupancy, admission/preemption/retirement counters, and the swap
+//! counters of the two-tier KV hierarchy (suspend = swap-out to host,
+//! resume = swap-in to device). One instance lives inside the engine's
+//! `Scheduler` and is updated on every step; gauges (`queue_depth`,
+//! `running`, `suspended`) reflect the state after the most recent step,
 //! counters are cumulative since the last (re)configure.
 
 #[derive(Debug, Clone, Default)]
@@ -25,8 +27,28 @@ pub struct SchedulerMetrics {
     pub admitted: u64,
     /// Admission attempts skipped because the KV pool lacked headroom.
     pub deferred_admissions: u64,
-    /// Running sequences preempted and requeued to resolve pool OOM.
+    /// Running sequences preempted (swapped out or requeued) to resolve
+    /// device-pool OOM.
     pub preemptions: u64,
+    /// Currently suspended sequences (swapped out to the host tier; gauge).
+    pub suspended: usize,
+    /// Sequences whose KV state moved to the host tier instead of being
+    /// discarded: preemption suspends (device→host migration) plus prefills
+    /// parked at admission while the device pool was transiently full — so
+    /// this may exceed `preemptions`.
+    pub swap_outs: u64,
+    /// Suspended sequences migrated host→device and resumed mid-decode
+    /// (no re-prefill, partial output kept).
+    pub swap_ins: u64,
+    /// Re-prefills avoided by serving a snapshot instead: incremented on
+    /// every swap-in, since each resume replaces what restart-from-scratch
+    /// semantics would have recomputed (equal to `swap_ins` by
+    /// construction today; kept as its own counter because it is the
+    /// quantity the swap-vs-restart bench compares, and the two can
+    /// diverge once partial/prefix resume lands).
+    pub restarts_avoided: u64,
+    /// High-water mark of host-tier (spill) bytes in use.
+    pub host_bytes_peak: usize,
     /// Requests that finished normally (EOS or length) and freed a slot.
     pub completed: u64,
     /// Requests rejected at submission (queue backpressure).

@@ -1,7 +1,10 @@
 //! OOM-preemption regression: a capacity-capped KV pool holding fewer
 //! concurrent sequences than the scheduler admits must complete ALL
-//! requests via preempt-and-requeue — nobody fails, nothing is lost or
-//! duplicated, and the pool records real OOM pressure along the way.
+//! requests via preemption — nobody fails, nothing is lost or duplicated,
+//! and the pool records real OOM pressure along the way. With the host
+//! spill tier disabled (`host_spill_bytes = 0`, the default) preemption is
+//! restart-from-scratch; with it enabled, preempted sequences suspend to
+//! host memory and resume token-identically (swap-out/swap-in).
 //!
 //! Sizing (sim://tiny: 8 layers x 128 f32 row elems = 1024 B per
 //! token-layer): uniform budget 48 with prompt 16 admits at ~131 KB per
@@ -15,6 +18,7 @@ use std::collections::BTreeSet;
 
 use squeezeattention::config::ServeConfig;
 use squeezeattention::coordinator::{Engine, FinishReason, Request};
+use squeezeattention::kvcache::Tier;
 use squeezeattention::workload::TraceSpec;
 
 const POOL_BYTES: usize = 600 * 1024;
@@ -96,6 +100,106 @@ fn preempted_requests_produce_identical_tokens() {
             c.id
         );
     }
+}
+
+#[test]
+fn restart_mode_never_swaps() {
+    // host_spill_bytes = 0 (the default) must reproduce the pre-swap
+    // restart-from-scratch semantics exactly: preemptions happen, swap
+    // counters stay zero, and the host tier is never touched.
+    let mut eng = Engine::new(capped_cfg()).unwrap();
+    let outs = eng.generate_batch(trace_requests());
+    assert!(outs.iter().all(|o| matches!(o.finish, FinishReason::Eos | FinishReason::Length)));
+    let m = eng.sched_metrics();
+    assert!(m.preemptions > 0, "workload no longer preempts — resize it");
+    assert_eq!(m.swap_outs, 0);
+    assert_eq!(m.swap_ins, 0);
+    assert_eq!(m.restarts_avoided, 0);
+    assert_eq!(m.host_bytes_peak, 0);
+    assert_eq!(eng.pool().peak_of(Tier::Host), 0);
+}
+
+#[test]
+fn host_spill_resumes_all_requests_token_identically() {
+    // The two-tier acceptance case: same capped device pool, but preempted
+    // sequences suspend to a roomy host tier and swap back in. Everything
+    // completes, restarts are avoided, and every resumed sequence's output
+    // is byte-identical to an uninterrupted (unlimited-pool) run.
+    let mut cfg = capped_cfg().with_host_spill(4 * 1024 * 1024);
+    cfg.kv_pool_bytes = POOL_BYTES;
+    let mut eng = Engine::new(cfg).unwrap();
+    let outs = eng.generate_batch(trace_requests());
+
+    assert_eq!(outs.len(), N_REQUESTS);
+    let ids: BTreeSet<u64> = outs.iter().map(|o| o.id).collect();
+    assert_eq!(ids, (0..N_REQUESTS as u64).collect::<BTreeSet<u64>>());
+    for out in &outs {
+        assert!(
+            matches!(out.finish, FinishReason::Eos | FinishReason::Length),
+            "request {} finished with {:?} instead of completing",
+            out.id,
+            out.finish
+        );
+        assert!(!out.generated.is_empty(), "request {} lost its output", out.id);
+    }
+
+    // Swap really happened: preemptions were served by suspend/resume, not
+    // restart-from-scratch.
+    let m = eng.sched_metrics();
+    assert!(eng.pool().oom_events() > 0, "device pool never hit OOM — test is under-sized");
+    assert!(m.preemptions > 0, "no preemptions despite OOM pressure");
+    assert!(m.swap_outs > 0, "preemption never swapped out");
+    assert!(m.swap_ins > 0, "no suspended sequence ever resumed");
+    assert!(m.restarts_avoided > 0, "no restart was avoided");
+    assert_eq!(m.oom_failures, 0, "a request was failed instead of suspended");
+    assert!(m.host_bytes_peak > 0, "host peak not recorded");
+    assert!(m.host_bytes_peak <= 4 * 1024 * 1024);
+
+    // Byte-identical resume: compare with an unlimited-pool run that never
+    // preempts (greedy sampling; the decode output is a pure function of
+    // the cache, so a restored snapshot must continue identically).
+    let mut roomy_cfg = capped_cfg();
+    roomy_cfg.kv_pool_bytes = 0;
+    let mut roomy_eng = Engine::new(roomy_cfg).unwrap();
+    let roomy = roomy_eng.generate_batch(trace_requests());
+    assert_eq!(roomy_eng.sched_metrics().preemptions, 0);
+    for (c, r) in outs.iter().zip(&roomy) {
+        assert_eq!(c.id, r.id);
+        assert_eq!(
+            c.generated, r.generated,
+            "request {}: suspend/resume changed the generated tokens",
+            c.id
+        );
+    }
+
+    // Both tiers drained: accounting balanced across every migration.
+    assert_eq!(eng.pool().in_use(), 0);
+    assert_eq!(eng.pool().in_use_of(Tier::Host), 0);
+    assert!(eng.pool().peak() <= POOL_BYTES);
+    assert_eq!(eng.pool().peak_of(Tier::Host), m.host_bytes_peak);
+
+    // Suspended time is observable in the queue-latency export.
+    let hist = eng.queue_latency();
+    assert_eq!(hist.len(), N_REQUESTS);
+    assert!(hist.max() >= 0.0);
+}
+
+#[test]
+fn tiny_host_tier_falls_back_to_restart() {
+    // A host tier too small for any snapshot (1 KB < the ~131 KB a
+    // sequence holds) must degrade gracefully: every preemption falls back
+    // to restart-from-scratch and the workload still completes.
+    let mut cfg = capped_cfg().with_host_spill(1024);
+    cfg.kv_pool_bytes = POOL_BYTES;
+    let mut eng = Engine::new(cfg).unwrap();
+    let outs = eng.generate_batch(trace_requests());
+    assert!(outs.iter().all(|o| matches!(o.finish, FinishReason::Eos | FinishReason::Length)));
+    let m = eng.sched_metrics();
+    assert!(m.preemptions > 0);
+    assert_eq!(m.swap_outs, 0, "a snapshot cannot fit in a 1 KB host tier");
+    assert_eq!(m.swap_ins, 0);
+    assert!(eng.pool().oom_events_of(Tier::Host) > 0, "host tier never refused a swap");
+    assert_eq!(eng.pool().in_use_of(Tier::Host), 0);
 }
 
 #[test]

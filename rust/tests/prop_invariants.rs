@@ -374,6 +374,105 @@ fn pool_reservation_interleavings_never_overflow_or_underflow() {
 }
 
 #[test]
+fn two_tier_pool_conserves_bytes_under_random_migrations() {
+    use squeezeattention::kvcache::{KvPool, Reservation, Tier};
+    // Device+host conservation under random reserve/resize/migrate/release
+    // interleavings against a shadow model: each tier's in_use must always
+    // equal the sum of the live reservations currently on that tier, no
+    // tier may exceed its capacity, a failed migrate must leave both tiers
+    // untouched, and everything drains to zero on drop.
+    check("two-tier migrations", 150, |rng| {
+        let dev_cap = rng.range(10_000, 500_000);
+        let host_cap = rng.range(10_000, 500_000);
+        let pool = KvPool::tiered(dev_cap, host_cap);
+        let cap_of = |t: Tier| if t == Tier::Device { dev_cap } else { host_cap };
+        let mut held: Vec<Reservation> = Vec::new();
+        let mut expect: Vec<(Tier, usize)> = Vec::new();
+        for _ in 0..300 {
+            match rng.range(0, 4) {
+                0 => {
+                    let tier = if rng.bool(0.5) { Tier::Device } else { Tier::Host };
+                    let want = rng.range(0, cap_of(tier) / 2);
+                    match Reservation::on(&pool, tier, want) {
+                        Ok(r) => {
+                            held.push(r);
+                            expect.push((tier, want));
+                        }
+                        Err(e) => {
+                            ensure_eq(e.tier, tier, "OOM names the failing tier")?;
+                            ensure(
+                                pool.in_use_of(tier) + want > cap_of(tier),
+                                "spurious reserve OOM",
+                            )?;
+                        }
+                    }
+                }
+                1 if !held.is_empty() => {
+                    let i = rng.below(held.len());
+                    let (tier, old) = expect[i];
+                    let new = rng.range(0, cap_of(tier) / 2);
+                    match held[i].resize(new) {
+                        Ok(()) => expect[i].1 = new,
+                        Err(_) => {
+                            ensure(new > old, "shrink must never fail")?;
+                            ensure(
+                                pool.in_use_of(tier) + (new - old) > cap_of(tier),
+                                "spurious resize OOM",
+                            )?;
+                        }
+                    }
+                }
+                2 if !held.is_empty() => {
+                    let i = rng.below(held.len());
+                    let (from, bytes) = expect[i];
+                    let to = if from == Tier::Device { Tier::Host } else { Tier::Device };
+                    let (dev_before, host_before) =
+                        (pool.in_use_of(Tier::Device), pool.in_use_of(Tier::Host));
+                    match held[i].migrate(to) {
+                        Ok(()) => {
+                            expect[i].0 = to;
+                            ensure_eq(held[i].tier(), to, "reservation tier updated")?;
+                        }
+                        Err(e) => {
+                            ensure_eq(e.tier, to, "migrate OOM names target tier")?;
+                            ensure(
+                                bytes + pool.in_use_of(to) > cap_of(to),
+                                "spurious migrate OOM",
+                            )?;
+                            ensure_eq(
+                                pool.in_use_of(Tier::Device),
+                                dev_before,
+                                "failed migrate left device unchanged",
+                            )?;
+                            ensure_eq(
+                                pool.in_use_of(Tier::Host),
+                                host_before,
+                                "failed migrate left host unchanged",
+                            )?;
+                        }
+                    }
+                }
+                _ if !held.is_empty() => {
+                    let i = rng.below(held.len());
+                    held.swap_remove(i);
+                    expect.swap_remove(i);
+                }
+                _ => {}
+            }
+            for tier in [Tier::Device, Tier::Host] {
+                let sum: usize = expect.iter().filter(|(t, _)| *t == tier).map(|(_, b)| b).sum();
+                ensure_eq(pool.in_use_of(tier), sum, "in_use == sum of live reservations")?;
+                ensure_le(pool.in_use_of(tier), cap_of(tier), "capacity respected")?;
+                ensure(pool.peak_of(tier) >= pool.in_use_of(tier), "peak covers in_use")?;
+            }
+        }
+        drop(held);
+        ensure_eq(pool.in_use_of(Tier::Device), 0, "device drained on drop")?;
+        ensure_eq(pool.in_use_of(Tier::Host), 0, "host drained on drop")
+    });
+}
+
+#[test]
 fn eviction_bounds_every_layer_to_its_budget() {
     // The 2-D contract: applying any sequence-wise policy per layer with
     // that layer's own (heterogeneous) budget leaves every layer's cached

@@ -6,7 +6,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
 use squeezeattention::config::ServeConfig;
-use squeezeattention::coordinator::{server, RoutePolicy, Router};
+use squeezeattention::coordinator::{server, Request, RoutePolicy, Router};
 use squeezeattention::util::Json;
 use squeezeattention::workload::{Task, TaskGen};
 
@@ -54,4 +54,40 @@ fn tcp_roundtrip() {
     let mut line = String::new();
     reader.read_line(&mut line).unwrap();
     assert!(Json::parse(&line).unwrap().get("error").is_some());
+}
+
+#[test]
+fn batch_wait_joins_delayed_arrival_into_same_step() {
+    // With batch_wait_ms, a worker forming a batch from idle holds its
+    // first decode step until more arrivals show up (or the deadline
+    // passes), so a request arriving shortly after the first one decodes
+    // alongside it from step one. Pinned via the worker's scheduler
+    // metrics: both sequences occupy every step, so the step count is that
+    // of a single sequence (max_new - 1; the first token comes from
+    // prefill) instead of roughly twice that for two back-to-back solo
+    // runs.
+    const MAX_NEW: usize = 24;
+    let mut cfg = ServeConfig::new(ARTIFACTS).with_budget(48).with_batch_wait_ms(3000);
+    cfg.max_batch = 2; // slot_count 2: the wait ends as soon as both arrive
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap();
+
+    let mut gen = TaskGen::new(1);
+    let sample = gen.sample(Task::Copy, 40);
+    let mk = |id: u64| Request::new(id, sample.prompt.clone(), MAX_NEW);
+    let rx1 = router.submit_async(mk(1)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let rx2 = router.submit_async(mk(2)).unwrap();
+    let o1 = rx1.recv().unwrap();
+    let o2 = rx2.recv().unwrap();
+    assert!(!o1.generated.is_empty());
+    assert_eq!(o1.generated, o2.generated, "same prompt, same greedy tokens");
+
+    let ms = router.sched_metrics();
+    let m = &ms[0];
+    assert_eq!(m.peak_occupancy, 2, "delayed arrival did not join the batch");
+    assert_eq!(
+        m.steps,
+        (MAX_NEW - 1) as u64,
+        "the two requests did not share every decode step"
+    );
 }
