@@ -7,6 +7,17 @@
 //! steps, and the queue+suspended latency quantiles, and emits
 //! `reports/BENCH_swap.json`.
 //!
+//! Swap traffic is no longer treated as free: the pool's `migrated_into`
+//! counters meter the bytes a real deployment would push over PCIe, and the
+//! simulator cost model prices them (`Cluster::swap_transfer_s` at A100
+//! PCIe 4.0 rates) into a projected wall time / throughput alongside the
+//! measured one.
+//!
+//! A second sweep arm charts the `batch_wait_ms` batch-forming knob under
+//! Poisson arrivals through the router (the knob lives in the worker loop):
+//! first-token latency (TTFT quantiles from the worker snapshot) vs mean
+//! step occupancy, the tradeoff the ROADMAP asked to chart.
+//!
 //! Runs entirely on the simulated backend (`sim://tiny`), so it needs no
 //! compiled artifacts. Arrivals are replayed in wall-clock time; the rate is
 //! high enough that the replay itself adds well under a second.
@@ -15,7 +26,9 @@
 use std::time::{Duration, Instant};
 
 use squeezeattention::config::ServeConfig;
-use squeezeattention::coordinator::{Engine, FinishReason, Request};
+use squeezeattention::coordinator::{Engine, FinishReason, Request, RoutePolicy, Router};
+use squeezeattention::kvcache::Tier;
+use squeezeattention::simulator::A100_40GB_X1;
 use squeezeattention::util::bench::Table;
 use squeezeattention::util::Json;
 use squeezeattention::workload::TraceSpec;
@@ -37,12 +50,23 @@ struct ArmResult {
     swap_ins: u64,
     restarts_avoided: u64,
     decode_steps: u64,
+    /// Bytes migrated device↔host (both directions) — the PCIe traffic a
+    /// real swap would perform.
+    swap_bytes: usize,
+    /// Projected host-link time for that traffic at A100 PCIe rates.
+    projected_swap_s: f64,
     queue_latency: Json,
 }
 
 impl ArmResult {
     fn tokens_per_s(&self) -> f64 {
         self.tokens as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Throughput after charging the projected swap-transfer time — the
+    /// honest swap-vs-restart comparison once PCIe is priced in.
+    fn projected_tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / (self.wall_s + self.projected_swap_s).max(1e-9)
     }
 
     fn to_json(&self) -> Json {
@@ -58,6 +82,9 @@ impl ArmResult {
             ("swap_ins", Json::num(self.swap_ins as f64)),
             ("restarts_avoided", Json::num(self.restarts_avoided as f64)),
             ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("swap_bytes", Json::num(self.swap_bytes as f64)),
+            ("projected_swap_s", Json::num(self.projected_swap_s)),
+            ("projected_tokens_per_s", Json::num(self.projected_tokens_per_s())),
             ("queue_latency_s", self.queue_latency.clone()),
         ])
     }
@@ -96,6 +123,9 @@ fn run_arm(name: &str, cfg: ServeConfig, n_requests: usize) -> anyhow::Result<Ar
     let oom_failed = outs.iter().filter(|o| o.finish == FinishReason::Oom).count();
     let m = eng.sched_metrics().clone();
     let run = eng.run_stats().clone();
+    let swap_bytes =
+        eng.pool().migrated_into(Tier::Host) + eng.pool().migrated_into(Tier::Device);
+    let projected_swap_s = A100_40GB_X1.swap_transfer_s(swap_bytes as f64);
     let queue_latency = eng.queue_latency().summary().to_json();
     Ok(ArmResult {
         name: name.to_string(),
@@ -108,8 +138,47 @@ fn run_arm(name: &str, cfg: ServeConfig, n_requests: usize) -> anyhow::Result<Ar
         swap_ins: m.swap_ins,
         restarts_avoided: m.restarts_avoided,
         decode_steps: run.decode_steps,
+        swap_bytes,
+        projected_swap_s,
         queue_latency,
     })
+}
+
+/// One `batch_wait_ms` sweep point: Poisson arrivals through the router (the
+/// knob lives in the worker's batch-forming loop), reporting first-token
+/// latency quantiles vs mean step occupancy.
+fn run_wait_arm(wait_ms: u64, n_requests: usize, rate: f64) -> anyhow::Result<Json> {
+    let mut cfg = ServeConfig::new("sim://tiny")
+        .with_budget(48)
+        .with_squeeze(false)
+        .with_batch_wait_ms(wait_ms);
+    cfg.max_batch = 4;
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin)?;
+    let items = TraceSpec::closed(n_requests, PROMPT_LEN, MAX_NEW, 131).poisson(rate).generate();
+    let t0 = Instant::now();
+    let mut replies = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        let dt = it.arrival_s - t0.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(dt));
+        }
+        let req = Request::new(i as u64, it.sample.prompt.clone(), MAX_NEW);
+        replies.push(router.submit_async(req)?);
+    }
+    let mut tokens = 0u64;
+    for rx in replies {
+        tokens += rx.recv()?.generated.len() as u64;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = router.snapshots().remove(0);
+    Ok(Json::obj(vec![
+        ("batch_wait_ms", Json::num(wait_ms as f64)),
+        ("tokens_per_s", Json::num(tokens as f64 / wall_s.max(1e-9))),
+        ("mean_occupancy", Json::num(snap.sched.mean_occupancy())),
+        ("batch_utilization", Json::num(snap.sched.batch_utilization())),
+        ("ttft_s", snap.ttft.to_json()),
+        ("itl_s", snap.itl.to_json()),
+    ]))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -128,26 +197,64 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&[
         "arm",
         "tok/s",
+        "proj tok/s (PCIe)",
         "preemptions",
         "swap_ins",
-        "restarts_avoided",
+        "swap_MiB",
         "decode_steps",
     ]);
     for arm in [&restart, &swap] {
         table.row(vec![
             arm.name.clone(),
             format!("{:.1}", arm.tokens_per_s()),
+            format!("{:.1}", arm.projected_tokens_per_s()),
             arm.preemptions.to_string(),
             arm.swap_ins.to_string(),
-            arm.restarts_avoided.to_string(),
+            format!("{:.2}", arm.swap_bytes as f64 / (1024.0 * 1024.0)),
             arm.decode_steps.to_string(),
         ]);
     }
     println!(
-        "Poisson({ARRIVAL_RATE}/s) x {n_requests} requests on a {} KiB device pool:",
-        POOL_BYTES >> 10
+        "Poisson({ARRIVAL_RATE}/s) x {n_requests} requests on a {} KiB device pool \
+         (swap traffic priced at {:.0} GB/s PCIe):",
+        POOL_BYTES >> 10,
+        A100_40GB_X1.pcie_bw / 1e9
     );
     table.print();
+
+    // batch_wait_ms sweep: first-token latency vs occupancy under a gentler
+    // Poisson rate (uncapped pool — the knob is about batch forming, not
+    // memory pressure).
+    let wait_points: &[u64] = if quick { &[0, 10] } else { &[0, 2, 10, 25] };
+    let wait_rate = 120.0;
+    let wait_n = if quick { 6 } else { 12 };
+    let mut wait_sweep = Vec::new();
+    let mut wait_table = Table::new(&["batch_wait_ms", "ttft_p95_ms", "mean_occupancy", "tok/s"]);
+    for &w in wait_points {
+        let point = run_wait_arm(w, wait_n, wait_rate)?;
+        wait_table.row(vec![
+            w.to_string(),
+            point
+                .get("ttft_s")
+                .and_then(|t| t.get("p95"))
+                .and_then(|v| v.as_f64())
+                .map(|v| format!("{:.2}", v * 1e3))
+                .unwrap_or_else(|| "-".into()),
+            point
+                .get("mean_occupancy")
+                .and_then(|v| v.as_f64())
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            point
+                .get("tokens_per_s")
+                .and_then(|v| v.as_f64())
+                .map(|v| format!("{v:.1}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+        wait_sweep.push(point);
+    }
+    println!("\nbatch_wait_ms sweep (Poisson({wait_rate}/s) x {wait_n} requests, 1 worker):");
+    wait_table.print();
 
     let report = Json::obj(vec![
         ("bench", Json::str("swap_vs_restart")),
@@ -155,8 +262,10 @@ fn main() -> anyhow::Result<()> {
         ("arrival_rate", Json::num(ARRIVAL_RATE)),
         ("kv_pool_bytes", Json::num(POOL_BYTES as f64)),
         ("host_spill_bytes", Json::num(HOST_BYTES as f64)),
+        ("pcie_bw_bytes_per_s", Json::num(A100_40GB_X1.pcie_bw)),
         ("restart", restart.to_json()),
         ("swap", swap.to_json()),
+        ("batch_wait_sweep", Json::Arr(wait_sweep)),
     ]);
     std::fs::create_dir_all("reports")?;
     std::fs::write("reports/BENCH_swap.json", report.to_string())?;

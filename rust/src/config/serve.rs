@@ -110,6 +110,11 @@ pub struct ServeConfig {
     /// a bounded first-token latency hit for higher step occupancy. 0 =
     /// step immediately (lowest latency).
     pub batch_wait_ms: u64,
+    /// Default per-request wall-clock deadline in milliseconds, measured
+    /// from submission and enforced at decode-step boundaries
+    /// (`FinishReason::DeadlineExceeded`, partial output kept). 0 = no
+    /// default; a request's own `deadline` always takes precedence.
+    pub request_deadline_ms: u64,
 }
 
 impl ServeConfig {
@@ -130,6 +135,7 @@ impl ServeConfig {
             queue_depth: 256,
             preemption: true,
             batch_wait_ms: 0,
+            request_deadline_ms: 0,
         }
     }
 
@@ -198,6 +204,9 @@ impl ServeConfig {
         if let Some(w) = j.get("batch_wait_ms").and_then(|v| v.as_usize()) {
             cfg.batch_wait_ms = w as u64;
         }
+        if let Some(d) = j.get("request_deadline_ms").and_then(|v| v.as_usize()) {
+            cfg.request_deadline_ms = d as u64;
+        }
         Ok(cfg)
     }
 
@@ -230,6 +239,7 @@ impl ServeConfig {
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("preemption", Json::Bool(self.preemption)),
             ("batch_wait_ms", Json::num(self.batch_wait_ms as f64)),
+            ("request_deadline_ms", Json::num(self.request_deadline_ms as f64)),
         ])
     }
 
@@ -275,6 +285,11 @@ impl ServeConfig {
 
     pub fn with_batch_wait_ms(mut self, ms: u64) -> Self {
         self.batch_wait_ms = ms;
+        self
+    }
+
+    pub fn with_request_deadline_ms(mut self, ms: u64) -> Self {
+        self.request_deadline_ms = ms;
         self
     }
 }
@@ -349,6 +364,19 @@ mod tests {
         let d = ServeConfig::from_json(&j).unwrap();
         assert_eq!(d.host_spill_bytes, 0);
         assert_eq!(d.batch_wait_ms, 0);
+    }
+
+    #[test]
+    fn request_deadline_roundtrip_and_default() {
+        // Default: no deadline.
+        let cfg = ServeConfig::new("a");
+        assert_eq!(cfg.request_deadline_ms, 0);
+        let back =
+            ServeConfig::from_json(&cfg.with_request_deadline_ms(750).to_json()).unwrap();
+        assert_eq!(back.request_deadline_ms, 750);
+        // absent key keeps the default
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().request_deadline_ms, 0);
     }
 
     #[test]

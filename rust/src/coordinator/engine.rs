@@ -31,10 +31,19 @@
 //! * `generate_batch` is the closed-batch compatibility wrapper: enqueue
 //!   everything, `step` until idle, sort outputs by id.
 //!
+//! Requests may carry lifecycle hooks (`coordinator::lifecycle`): an event
+//! sink the engine publishes into at every transition (admission, each
+//! decoded token, suspend/resume, terminal), a cancel token, and a
+//! deadline. Every step begins with a `lifecycle_phase` that retires
+//! cancelled or deadline-expired requests from the queue, the decode
+//! slots, and the suspended set — releasing their device or host
+//! reservations without finishing decode (a cancel while swapped out frees
+//! the host tier with no swap-in).
+//!
 //! The engine is synchronous; the async server (`server.rs`) drives it from
 //! a dedicated thread.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -47,6 +56,7 @@ use crate::runtime::{Runtime, Tensor, TensorI32};
 use crate::squeeze::{allocate, BudgetPlan, CosineStats};
 use crate::util::Rng;
 
+use super::lifecycle::{self, RequestEvent};
 use super::request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
 use super::scheduler::{Active, Queued, Scheduler, Suspended};
 
@@ -99,6 +109,12 @@ pub struct Engine {
     /// Per-request queue latency (submit → decode slot), including time
     /// spent suspended in the host tier.
     queue_hist: Histogram,
+    /// Time-to-first-token per request: submit → first token sampled from
+    /// the prefill logits at admission (includes queue wait).
+    ttft_hist: Histogram,
+    /// Inter-token latency: gap between consecutive sampled tokens of a
+    /// sequence, including any suspended time in between.
+    itl_hist: Histogram,
     run: EngineRunStats,
     pub last_run: EngineRunStats,
 }
@@ -133,6 +149,8 @@ impl Engine {
             sched,
             meter: ThroughputMeter::new(),
             queue_hist: Histogram::new(),
+            ttft_hist: Histogram::new(),
+            itl_hist: Histogram::new(),
             run: Default::default(),
             last_run: Default::default(),
             cfg,
@@ -165,6 +183,8 @@ impl Engine {
         self.pool = KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes);
         self.sched = Scheduler::new(self.batch, cfg.queue_depth);
         self.queue_hist = Histogram::new();
+        self.ttft_hist = Histogram::new();
+        self.itl_hist = Histogram::new();
         self.cfg = cfg;
         Ok(())
     }
@@ -214,6 +234,20 @@ impl Engine {
         &mut self.queue_hist
     }
 
+    /// Time-to-first-token histogram: submit → first token sampled (the
+    /// prefill-logits token at admission), queue wait included. Reset by
+    /// `generate_batch`/`reconfigure`.
+    pub fn ttft_latency(&mut self) -> &mut Histogram {
+        &mut self.ttft_hist
+    }
+
+    /// Inter-token-latency histogram: gap between consecutive sampled
+    /// tokens of a sequence, suspended time included. Reset by
+    /// `generate_batch`/`reconfigure`.
+    pub fn itl_latency(&mut self) -> &mut Histogram {
+        &mut self.itl_hist
+    }
+
     /// Live run counters (cumulative since the last `generate_batch` reset;
     /// `wall_s` is only populated by the `generate_batch` wrapper).
     pub fn run_stats(&self) -> &EngineRunStats {
@@ -255,7 +289,8 @@ impl Engine {
     /// batch at the next `step`. `Err` is the immediate backpressure
     /// rejection produced when the queue is at `cfg.queue_depth`.
     pub fn submit(&mut self, req: Request) -> std::result::Result<(), RequestOutput> {
-        match self.sched.enqueue(Queued { req, t_submit: Instant::now() }, true) {
+        let q = Queued { req, t_submit: Instant::now(), restarted: false };
+        match self.sched.enqueue(q, true) {
             Ok(()) => Ok(()),
             Err(q) => Err(Self::immediate_output(&q, FinishReason::Rejected, self.n_layer)),
         }
@@ -308,8 +343,10 @@ impl Engine {
         self.meter = ThroughputMeter::new();
         self.run = EngineRunStats::default();
         self.queue_hist = Histogram::new();
+        self.ttft_hist = Histogram::new();
+        self.itl_hist = Histogram::new();
         for req in requests {
-            let _ = self.sched.enqueue(Queued { req, t_submit: t0 }, false);
+            let _ = self.sched.enqueue(Queued { req, t_submit: t0, restarted: false }, false);
         }
         let mut outputs = self.drain();
         self.run.wall_s = t0.elapsed().as_secs_f64();
@@ -322,6 +359,9 @@ impl Engine {
 
     fn step_inner(&mut self, sched: &mut Scheduler) -> Result<Vec<RequestOutput>> {
         let mut outputs = Vec::new();
+        // Terminal lifecycle transitions first: cancelled or expired
+        // requests must not occupy a slot this step (nor block admission).
+        self.lifecycle_phase(sched, &mut outputs);
         self.admit_phase(sched, &mut outputs);
         // Retire sequences that are already done at admission — the prefill
         // logits sampled EOS, or max_new_tokens == 1 — before spending a
@@ -368,6 +408,96 @@ impl Engine {
         }
     }
 
+    /// Record one time-to-first-token sample (bounded like the queue hist).
+    fn note_ttft(&mut self, v: f64) {
+        if self.ttft_hist.len() < Self::QUEUE_HIST_MAX_SAMPLES {
+            self.ttft_hist.record(v);
+        }
+    }
+
+    /// Record one inter-token-latency sample (bounded like the queue hist).
+    fn note_itl(&mut self, v: f64) {
+        if self.itl_hist.len() < Self::QUEUE_HIST_MAX_SAMPLES {
+            self.itl_hist.record(v);
+        }
+    }
+
+    /// The deadline a request is serving under: its own, else the config
+    /// default (`request_deadline_ms`, 0 = none).
+    fn effective_deadline(&self, req: &Request) -> Option<Duration> {
+        req.deadline.or_else(|| {
+            (self.cfg.request_deadline_ms > 0)
+                .then(|| Duration::from_millis(self.cfg.request_deadline_ms))
+        })
+    }
+
+    /// Whether a request must leave the scheduler now: cancelled (the
+    /// explicit signal wins) or past its deadline.
+    fn lapse(&self, req: &Request, t_submit: Instant, now: Instant) -> Option<FinishReason> {
+        if req.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+            return Some(FinishReason::Cancelled);
+        }
+        if let Some(d) = self.effective_deadline(req) {
+            if now.duration_since(t_submit) >= d {
+                return Some(FinishReason::DeadlineExceeded);
+            }
+        }
+        None
+    }
+
+    fn note_lapse(sched: &mut Scheduler, reason: FinishReason) {
+        match reason {
+            FinishReason::Cancelled => sched.metrics.cancelled += 1,
+            FinishReason::DeadlineExceeded => sched.metrics.deadline_exceeded += 1,
+            _ => {}
+        }
+    }
+
+    /// Terminal lifecycle transitions decided at the step boundary:
+    /// cancelled requests and expired deadlines leave the queue, the decode
+    /// slots, and the suspended set. Dropping the slot or suspended state
+    /// releases its device/host reservation (RAII), so a cancel while
+    /// swapped out frees the host tier directly — no swap-in. Partial
+    /// generations are preserved in the outputs.
+    fn lifecycle_phase(&mut self, sched: &mut Scheduler, outputs: &mut Vec<RequestOutput>) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < sched.queue.len() {
+            match self.lapse(&sched.queue[i].req, sched.queue[i].t_submit, now) {
+                Some(reason) => {
+                    let q = sched.queue.remove(i).expect("index in bounds");
+                    Self::note_lapse(sched, reason);
+                    outputs.push(Self::immediate_output(&q, reason, self.n_layer));
+                }
+                None => i += 1,
+            }
+        }
+        for idx in 0..sched.slots.len() {
+            let lapsed = match &sched.slots[idx] {
+                Some(a) => self.lapse(&a.req, a.t_submit, now),
+                None => None,
+            };
+            if let Some(reason) = lapsed {
+                let a = sched.slots[idx].take().expect("checked occupied");
+                Self::note_lapse(sched, reason);
+                outputs.push(Self::finish(a, reason));
+            }
+        }
+        if !sched.suspended.is_empty() {
+            let suspended = std::mem::take(&mut sched.suspended);
+            for s in suspended {
+                match self.lapse(&s.req, s.t_submit, now) {
+                    Some(reason) => {
+                        Self::note_lapse(sched, reason);
+                        outputs.push(Self::finish_suspended(s, reason));
+                    }
+                    None => sched.suspended.push_back(s),
+                }
+            }
+        }
+        sched.refresh_gauges();
+    }
+
     /// Fill free slots: suspended sequences swap back in first (queue-front
     /// priority — no prefill needed), then queued requests under KV-pool
     /// admission control.
@@ -404,9 +534,27 @@ impl Engine {
             }
             let q = sched.pop_queue().expect("peeked head exists");
             let allow_retry = running > 0 && self.cfg.preemption;
+            // A restart-from-scratch requeue already delivered its first
+            // token in a previous admission: re-admitting it must not
+            // record a second TTFT sample.
+            let restarted = q.restarted;
             match self.admit(q, allow_retry, sched.next_seq) {
                 Ok(active) => {
                     sched.next_seq += 1;
+                    if !restarted {
+                        self.note_ttft(active.timing.first_token_s);
+                    }
+                    lifecycle::emit(
+                        &active.req.events,
+                        RequestEvent::Started {
+                            id: active.req.id,
+                            prompt_tokens: active.req.prompt.len(),
+                        },
+                    );
+                    lifecycle::emit(
+                        &active.req.events,
+                        RequestEvent::Token { id: active.req.id, token: active.last_token, pos: 0 },
+                    );
                     sched.place(active);
                 }
                 Err(AdmitError::Terminal(out)) => {
@@ -423,8 +571,25 @@ impl Engine {
                 Err(AdmitError::Suspend(s)) => {
                     // The prefill is preserved on the host tier; the next
                     // loop iteration (or step) resumes it once device bytes
-                    // free up.
+                    // free up. The first token was already sampled, so the
+                    // stream sees Started → Token(0) → Suspended.
                     sched.next_seq += 1;
+                    if !restarted {
+                        self.note_ttft(s.snapshot.timing.first_token_s);
+                    }
+                    lifecycle::emit(
+                        &s.req.events,
+                        RequestEvent::Started { id: s.req.id, prompt_tokens: s.req.prompt.len() },
+                    );
+                    lifecycle::emit(
+                        &s.req.events,
+                        RequestEvent::Token {
+                            id: s.req.id,
+                            token: s.snapshot.last_token,
+                            pos: 0,
+                        },
+                    );
+                    lifecycle::emit(&s.req.events, RequestEvent::Suspended { id: s.req.id });
                     self.note_swap_out(sched);
                     sched.suspend(*s);
                 }
@@ -462,7 +627,9 @@ impl Engine {
         }
         sched.metrics.swap_ins += 1;
         sched.metrics.restarts_avoided += 1;
-        sched.place(s.into_active());
+        let a = s.into_active();
+        lifecycle::emit(&a.req.events, RequestEvent::Resumed { id: a.req.id });
+        sched.place(a);
         true
     }
 
@@ -510,7 +677,7 @@ impl Engine {
         allow_retry: bool,
         seq: u64,
     ) -> std::result::Result<Active, AdmitError> {
-        let Queued { req, t_submit } = q;
+        let Queued { req, t_submit, restarted } = q;
         let t_admit = Instant::now();
         let mut timing = RequestTiming {
             queue_s: t_admit.duration_since(t_submit).as_secs_f64(),
@@ -525,7 +692,7 @@ impl Engine {
             finish: FinishReason,
             kv: usize,
         ) -> AdmitError {
-            AdmitError::Terminal(RequestOutput {
+            let out = RequestOutput {
                 id: req.id,
                 generated: vec![],
                 finish,
@@ -533,7 +700,9 @@ impl Engine {
                 plan,
                 peak_kv_bytes: 0,
                 final_kv_tokens: kv,
-            })
+            };
+            lifecycle::emit_terminal(&req.events, &out);
+            AdmitError::Terminal(out)
         }
 
         let largest = self
@@ -634,6 +803,7 @@ impl Engine {
                                 seq,
                                 t_submit,
                                 t_admit,
+                                t_last_token: Instant::now(),
                                 timing,
                                 peak_bytes: peak,
                                 req,
@@ -644,7 +814,7 @@ impl Engine {
                         ))));
                     }
                 }
-                return Err(AdmitError::Retry(Queued { req, t_submit }));
+                return Err(AdmitError::Retry(Queued { req, t_submit, restarted }));
             }
             Err(_) => {
                 let kv = cache.total_tokens();
@@ -666,6 +836,7 @@ impl Engine {
             seq,
             t_submit,
             t_admit,
+            t_last_token: Instant::now(),
             timing,
             peak_bytes: peak,
             req,
@@ -683,11 +854,12 @@ impl Engine {
     fn suspend_or_requeue(&mut self, sched: &mut Scheduler, mut a: Active) {
         if self.swap_enabled() && a.reservation.migrate(Tier::Host).is_ok() {
             self.note_swap_out(sched);
+            lifecycle::emit(&a.req.events, RequestEvent::Suspended { id: a.req.id });
             sched.suspend(Suspended::from_active(a));
         } else {
             // Host tier full or disabled: restart-from-scratch (prompt
             // re-prefilled on re-admission, partial output discarded).
-            sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit });
+            sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit, restarted: true });
         }
     }
 
@@ -848,6 +1020,14 @@ impl Engine {
             a.last_token = tok;
             a.next_pos += 1;
             self.meter.add_tokens(1);
+            let now = Instant::now();
+            let itl = now.duration_since(a.t_last_token).as_secs_f64();
+            a.t_last_token = now;
+            lifecycle::emit(
+                &a.req.events,
+                RequestEvent::Token { id: a.req.id, token: tok, pos: a.generated.len() - 1 },
+            );
+            self.note_itl(itl);
 
             // Per-layer re-compression with each layer's own budget
             // (Algorithm 1, lines 15–19).
@@ -922,11 +1102,12 @@ impl Engine {
         let mut timing = a.timing;
         timing.total_s = a.t_submit.elapsed().as_secs_f64();
         let mut generated = a.generated;
-        // Keep the raw stream on normal finishes; scorers decide about EOS.
+        // Keep the raw stream on normal finishes (cancel/deadline included);
+        // scorers decide about EOS.
         if matches!(reason, FinishReason::Oom | FinishReason::Failed) {
             generated.clear();
         }
-        RequestOutput {
+        let out = RequestOutput {
             id: a.req.id,
             generated,
             finish: reason,
@@ -934,30 +1115,41 @@ impl Engine {
             plan: a.plan,
             peak_kv_bytes: a.peak_bytes,
             final_kv_tokens: a.cache.total_tokens(),
-        }
+        };
+        lifecycle::emit_terminal(&a.req.events, &out);
+        out
     }
 
-    /// Output for a sequence that dies while suspended (fault path): its
-    /// snapshot carries the timing and plan to report.
+    /// Output for a sequence that ends while suspended (fault path, cancel,
+    /// or deadline): its snapshot carries the timing and plan to report.
+    /// Cancel/deadline keep the partial generation; faults drop it (same
+    /// contract as `finish`).
     fn finish_suspended(s: Suspended, reason: FinishReason) -> RequestOutput {
         let mut timing = s.snapshot.timing;
         timing.suspended_s += s.t_suspend.elapsed().as_secs_f64();
         timing.total_s = s.t_submit.elapsed().as_secs_f64();
-        RequestOutput {
+        let generated = if matches!(reason, FinishReason::Oom | FinishReason::Failed) {
+            vec![]
+        } else {
+            s.snapshot.generated
+        };
+        let out = RequestOutput {
             id: s.req.id,
-            generated: vec![],
+            generated,
             finish: reason,
             timing,
             plan: s.snapshot.plan,
             peak_kv_bytes: s.snapshot.peak_bytes,
             final_kv_tokens: s.snapshot.cache.total_tokens(),
-        }
+        };
+        lifecycle::emit_terminal(&s.req.events, &out);
+        out
     }
 
     /// Output for a request that never reached a decode slot.
     fn immediate_output(q: &Queued, finish: FinishReason, n_layer: usize) -> RequestOutput {
         let total = q.t_submit.elapsed().as_secs_f64();
-        RequestOutput {
+        let out = RequestOutput {
             id: q.req.id,
             generated: vec![],
             finish,
@@ -965,6 +1157,8 @@ impl Engine {
             plan: BudgetPlan::uniform(n_layer, 0),
             peak_kv_bytes: 0,
             final_kv_tokens: 0,
-        }
+        };
+        lifecycle::emit_terminal(&q.req.events, &out);
+        out
     }
 }

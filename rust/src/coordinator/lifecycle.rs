@@ -1,0 +1,314 @@
+//! Request-lifecycle subsystem: per-request event streams, cooperative
+//! cancellation, and deadlines.
+//!
+//! The engine is a synchronous step machine; this module is the seam that
+//! turns it into an *interactive* serving system. Each request may carry
+//!
+//! * an [`EventSink`] — a per-request channel the engine publishes a
+//!   [`RequestEvent`] into at every lifecycle transition (admission, each
+//!   decoded token, suspend/resume, terminal), and
+//! * a shared [`CancelToken`] — a cooperative flag checked at every step
+//!   boundary, so a disconnected or abandoned request stops decoding and
+//!   releases its device/host KV reservations mid-flight instead of burning
+//!   pool bytes until `max_new_tokens`.
+//!
+//! [`RequestHandle::attach`] wires both into a [`Request`] and returns the
+//! caller's end: the event receiver plus `cancel()`. The router attaches
+//! handles on `Router::submit_stream` and forwards events across the worker
+//! thread boundary (the sink rewrites engine-local ticket ids back to the
+//! caller's public id); the TCP server turns `Token` events into
+//! `{"id", "token", "pos"}` wire lines and cancels every in-flight handle
+//! when the client disconnects.
+//!
+//! Event-order contract per request: `Started` first, then `Token` events in
+//! generation order (`pos` 0, 1, 2, …), interleaved with `Suspended` /
+//! `Resumed` pairs while preempted, ending in exactly one terminal event
+//! (`Done`, `Cancelled`, or `Error`) carrying the final [`RequestOutput`].
+//! A restart-from-scratch preemption (host tier full or disabled) re-runs
+//! admission, so `Started` and `Token` events repeat from `pos` 0 —
+//! consumers must treat `pos` as authoritative, not append blindly.
+//! Suspend/resume never re-emits: the partial output is preserved.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use super::request::{FinishReason, Request, RequestOutput};
+
+/// One lifecycle transition of a request, published into its [`EventSink`]
+/// at the step boundary where the engine decides it.
+#[derive(Debug, Clone)]
+pub enum RequestEvent {
+    /// The request was admitted into a decode slot (prefill + squeeze done).
+    Started { id: u64, prompt_tokens: usize },
+    /// One decoded token. `pos` is the 0-based index in the generated
+    /// stream; the `pos = 0` token is sampled from the prefill logits at
+    /// admission. Authoritative on restart: a re-admitted request emits
+    /// again from `pos = 0`.
+    Token { id: u64, token: i32, pos: usize },
+    /// The sequence was swapped out to the host tier (preemption or a
+    /// prefill parked at admission). Its partial output is preserved.
+    Suspended { id: u64 },
+    /// The sequence swapped back into a decode slot and continues from
+    /// where it stopped.
+    Resumed { id: u64 },
+    /// Terminal: finished normally (EOS, length, or deadline — the output's
+    /// `finish` field distinguishes them).
+    Done(Box<RequestOutput>),
+    /// Terminal: cancelled via [`CancelToken`] (client disconnect or an
+    /// explicit `cancel()`); the output keeps the partial generation.
+    Cancelled(Box<RequestOutput>),
+    /// Terminal: the request failed (rejected, OOM, or a runtime fault).
+    Error(Box<RequestOutput>),
+}
+
+impl RequestEvent {
+    /// The request id this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            RequestEvent::Started { id, .. }
+            | RequestEvent::Token { id, .. }
+            | RequestEvent::Suspended { id }
+            | RequestEvent::Resumed { id } => *id,
+            RequestEvent::Done(o) | RequestEvent::Cancelled(o) | RequestEvent::Error(o) => o.id,
+        }
+    }
+
+    fn set_id(&mut self, new_id: u64) {
+        match self {
+            RequestEvent::Started { id, .. }
+            | RequestEvent::Token { id, .. }
+            | RequestEvent::Suspended { id }
+            | RequestEvent::Resumed { id } => *id = new_id,
+            RequestEvent::Done(o) | RequestEvent::Cancelled(o) | RequestEvent::Error(o) => {
+                o.id = new_id
+            }
+        }
+    }
+
+    /// Whether this event ends the request's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            RequestEvent::Done(_) | RequestEvent::Cancelled(_) | RequestEvent::Error(_)
+        )
+    }
+
+    /// The final output, if this is a terminal event.
+    pub fn into_output(self) -> Option<RequestOutput> {
+        match self {
+            RequestEvent::Done(o) | RequestEvent::Cancelled(o) | RequestEvent::Error(o) => {
+                Some(*o)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Cooperative cancellation flag shared between a [`RequestHandle`] and the
+/// request inside the engine. Setting it is instant and thread-safe; the
+/// engine honors it at the next step boundary, releasing the sequence's
+/// device or host reservation (a cancel while swapped out frees the host
+/// tier directly — no swap-in).
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    cancelled: AtomicBool,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+}
+
+/// The engine-side end of a request's event channel. Sends never block or
+/// fail the engine: a consumer that hung up (dropped its receiver) simply
+/// stops observing. The sink rewrites every event's id to `public_id`
+/// before sending — the router rewrites request ids to worker-local tickets
+/// in flight, and subscribers must see the id they submitted with.
+#[derive(Clone)]
+pub struct EventSink {
+    tx: mpsc::Sender<RequestEvent>,
+    public_id: u64,
+}
+
+impl std::fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "EventSink(public_id={})", self.public_id)
+    }
+}
+
+impl EventSink {
+    pub fn new(tx: mpsc::Sender<RequestEvent>, public_id: u64) -> Self {
+        Self { tx, public_id }
+    }
+
+    pub fn send(&self, mut event: RequestEvent) {
+        event.set_id(self.public_id);
+        let _ = self.tx.send(event);
+    }
+}
+
+/// Publish `event` if the request carries a sink (no-op otherwise, so the
+/// closed-batch and bench paths pay nothing).
+pub(crate) fn emit(sink: &Option<EventSink>, event: RequestEvent) {
+    if let Some(s) = sink {
+        s.send(event);
+    }
+}
+
+/// Publish the terminal event matching an output's finish reason.
+pub(crate) fn emit_terminal(sink: &Option<EventSink>, out: &RequestOutput) {
+    if let Some(s) = sink {
+        let boxed = Box::new(out.clone());
+        s.send(match out.finish {
+            FinishReason::Cancelled => RequestEvent::Cancelled(boxed),
+            FinishReason::Oom | FinishReason::Rejected | FinishReason::Failed => {
+                RequestEvent::Error(boxed)
+            }
+            FinishReason::Eos | FinishReason::Length | FinishReason::DeadlineExceeded => {
+                RequestEvent::Done(boxed)
+            }
+        });
+    }
+}
+
+/// The caller's end of a request's lifecycle: the event stream plus the
+/// cancel control. Obtained from [`RequestHandle::attach`] (direct engine
+/// use) or `Router::submit_stream`. Dropping the handle detaches the
+/// observer but does NOT cancel the request — call [`RequestHandle::cancel`]
+/// for that.
+pub struct RequestHandle {
+    id: u64,
+    events: mpsc::Receiver<RequestEvent>,
+    cancel: Arc<CancelToken>,
+}
+
+impl RequestHandle {
+    /// Wire a fresh event channel and cancel token into `req` and return
+    /// the observer handle. The handle reports events under the request's
+    /// id *at attach time* (the public id), even if the id is rewritten in
+    /// flight.
+    pub fn attach(req: &mut Request) -> RequestHandle {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(CancelToken::new());
+        req.events = Some(EventSink::new(tx, req.id));
+        req.cancel = Some(cancel.clone());
+        RequestHandle { id: req.id, events: rx, cancel }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation; the engine honors it at its next step boundary
+    /// and answers with a `Cancelled` terminal event.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// The raw event receiver (for `try_iter`/`iter` composition).
+    pub fn events(&self) -> &mpsc::Receiver<RequestEvent> {
+        &self.events
+    }
+
+    /// Block for the next event. `Err` means the stream closed without a
+    /// terminal event (engine dropped — a bug or process teardown).
+    pub fn recv(&self) -> Result<RequestEvent, mpsc::RecvError> {
+        self.events.recv()
+    }
+
+    /// Block until the terminal event and return its output, discarding
+    /// intermediate events. `None` if the stream closed without one.
+    pub fn wait(&self) -> Option<RequestOutput> {
+        while let Ok(ev) = self.events.recv() {
+            if ev.is_terminal() {
+                return ev.into_output();
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestTiming;
+    use crate::squeeze::BudgetPlan;
+
+    fn out(id: u64, finish: FinishReason) -> RequestOutput {
+        RequestOutput {
+            id,
+            generated: vec![1, 2],
+            finish,
+            timing: RequestTiming::default(),
+            plan: BudgetPlan::uniform(1, 4),
+            peak_kv_bytes: 0,
+            final_kv_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn attach_wires_sink_and_token() {
+        let mut req = Request::new(7, vec![1, 2, 3], 4);
+        let handle = RequestHandle::attach(&mut req);
+        assert_eq!(handle.id(), 7);
+        assert!(!handle.is_cancelled());
+        handle.cancel();
+        assert!(req.cancel.as_ref().unwrap().is_cancelled());
+
+        emit(&req.events, RequestEvent::Started { id: 999, prompt_tokens: 3 });
+        let ev = handle.recv().unwrap();
+        assert_eq!(ev.id(), 7, "sink must rewrite to the public id");
+        assert!(!ev.is_terminal());
+    }
+
+    #[test]
+    fn terminal_event_matches_finish_reason() {
+        let mut req = Request::new(3, vec![1], 4);
+        let handle = RequestHandle::attach(&mut req);
+        emit_terminal(&req.events, &out(3, FinishReason::Eos));
+        assert!(matches!(handle.recv().unwrap(), RequestEvent::Done(_)));
+        emit_terminal(&req.events, &out(3, FinishReason::DeadlineExceeded));
+        assert!(matches!(handle.recv().unwrap(), RequestEvent::Done(_)));
+        emit_terminal(&req.events, &out(3, FinishReason::Cancelled));
+        assert!(matches!(handle.recv().unwrap(), RequestEvent::Cancelled(_)));
+        emit_terminal(&req.events, &out(3, FinishReason::Oom));
+        let ev = handle.recv().unwrap();
+        assert!(matches!(ev, RequestEvent::Error(_)));
+        assert!(ev.is_terminal());
+        assert_eq!(ev.into_output().unwrap().finish, FinishReason::Oom);
+    }
+
+    #[test]
+    fn wait_skips_to_terminal() {
+        let mut req = Request::new(1, vec![1], 4);
+        let handle = RequestHandle::attach(&mut req);
+        emit(&req.events, RequestEvent::Token { id: 1, token: 5, pos: 0 });
+        emit(&req.events, RequestEvent::Suspended { id: 1 });
+        emit(&req.events, RequestEvent::Resumed { id: 1 });
+        emit_terminal(&req.events, &out(1, FinishReason::Length));
+        let final_out = handle.wait().unwrap();
+        assert_eq!(final_out.finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn dropped_receiver_never_errors_sender() {
+        let mut req = Request::new(1, vec![1], 4);
+        let handle = RequestHandle::attach(&mut req);
+        drop(handle);
+        emit(&req.events, RequestEvent::Token { id: 1, token: 5, pos: 0 });
+        emit_terminal(&req.events, &out(1, FinishReason::Eos)); // must not panic
+    }
+}

@@ -4,9 +4,18 @@
 //!
 //! * **server** — JSON-lines TCP front-end; pipelines every request on a
 //!   connection into the router without waiting for earlier responses.
+//!   `"stream": true` requests get one `{"id", "token", "pos"}` line per
+//!   decoded token ahead of the summary line, and a client disconnect
+//!   cancels every request still in flight on that connection.
 //! * **router** — spreads requests across engine workers (least-loaded or
 //!   round-robin); each worker drives its engine one decode step at a time,
 //!   so requests arriving mid-flight join the running batch.
+//!   `submit_stream` attaches a lifecycle handle and forwards the
+//!   per-request event stream across the worker boundary instead of
+//!   waiting on completed outputs.
+//! * **lifecycle** — per-request event channels (`RequestEvent`), the
+//!   cooperative `CancelToken`, deadlines, and the `RequestHandle` callers
+//!   observe and cancel through.
 //! * **engine** — prefill, SqueezeAttention budget allocation, per-layer
 //!   eviction, and the batched decode hot path.
 //! * **scheduler** — the continuous-batching state machine the engine
@@ -24,11 +33,13 @@
 //!   │                             restore snapshot,  │ v (youngest;
 //!   └─────────────── suspended ─────── no prefill) ──┘ │  device→host)
 //!                    (host tier) ◄──────────────────────┤
-//!                                                       v
-//!                                                retire on EOS/length
-//!                                                       │
-//!                                                       v
-//!                                                RequestOutput
+//!                         │                             v
+//!                         │                      retire on EOS/length
+//!                         │                             │
+//!                         │  cancel / deadline          v
+//!                         └──(any state; frees ──► RequestOutput
+//!                             host bytes without    (Cancelled /
+//!                             a swap-in)            DeadlineExceeded)
 //! ```
 //!
 //! A sequence only fails with `FinishReason::Oom` when it cannot fit in the
@@ -42,14 +53,22 @@
 //! default), preemption degrades to restart-from-scratch requeueing.
 //! `Engine::generate_batch` remains as a closed-batch compatibility wrapper
 //! that drains the scheduler.
+//!
+//! The lifecycle subsystem threads through every layer: the engine
+//! publishes `RequestEvent`s (Started / Token / Suspended / Resumed /
+//! Done / Cancelled / Error) at each step boundary, honors `CancelToken`s
+//! and deadlines there (`FinishReason::{Cancelled, DeadlineExceeded}`),
+//! and the server streams tokens to clients as they decode.
 
 pub mod engine;
+pub mod lifecycle;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use engine::{Engine, EngineRunStats};
+pub use lifecycle::{CancelToken, EventSink, RequestEvent, RequestHandle};
 pub use request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
-pub use router::{RoutePolicy, Router};
+pub use router::{RoutePolicy, Router, WorkerSnapshot};
 pub use scheduler::Scheduler;

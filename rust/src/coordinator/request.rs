@@ -1,7 +1,12 @@
 //! Request/response types flowing through the serving engine.
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use crate::model::Sampling;
 use crate::squeeze::BudgetPlan;
+
+use super::lifecycle::{CancelToken, EventSink};
 
 /// How the per-layer initial budget `b_init` is specified (paper §4.1: "a
 /// unified cache budget (like 4096 tokens or 20% of prompt length)").
@@ -33,11 +38,35 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub sampling: Sampling,
+    /// Wall-clock budget measured from submission; an expired request
+    /// finishes with [`FinishReason::DeadlineExceeded`] at the next step
+    /// boundary (queued, running, or suspended). `None` falls back to
+    /// `ServeConfig::request_deadline_ms` (0 there = no deadline).
+    pub deadline: Option<Duration>,
+    /// Lifecycle event stream (see `coordinator::lifecycle`); `None` (the
+    /// default) publishes nothing.
+    pub events: Option<EventSink>,
+    /// Cooperative cancellation flag, honored at step boundaries.
+    pub cancel: Option<Arc<CancelToken>>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        Self { id, prompt, max_new_tokens, sampling: Sampling::Greedy }
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: Sampling::Greedy,
+            deadline: None,
+            events: None,
+            cancel: None,
+        }
+    }
+
+    /// Set a per-request deadline (overrides the config default).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
@@ -54,6 +83,12 @@ pub enum FinishReason {
     Rejected,
     /// Runtime fault (decode/backend error) — not a memory condition.
     Failed,
+    /// Cancelled via its `CancelToken` (client disconnect or an explicit
+    /// `RequestHandle::cancel`); the partial generation is preserved.
+    Cancelled,
+    /// Exceeded its wall-clock deadline at a step boundary; the partial
+    /// generation is preserved.
+    DeadlineExceeded,
 }
 
 /// Timing breakdown of one request.

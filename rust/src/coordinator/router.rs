@@ -17,6 +17,14 @@
 //! (occupancy vs first-token-latency tradeoff). Request ids are rewritten
 //! to a worker-local ticket while in flight, so concurrent connections may
 //! reuse ids safely.
+//!
+//! `submit_stream` is the lifecycle-aware entry point: it attaches a
+//! `RequestHandle` (event stream + cancel token) to the request before
+//! routing, so token/suspend/terminal events flow from the worker's engine
+//! to the subscriber as they happen — the router forwards events rather
+//! than waiting on completed outputs, and the sink rewrites worker-local
+//! ticket ids back to the caller's. `metrics_json` exports per-worker
+//! scheduler counters and queue/TTFT/ITL latency summaries.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -27,18 +35,42 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServeConfig;
-use crate::metrics::SchedulerMetrics;
+use crate::metrics::{HistogramSummary, SchedulerMetrics};
+use crate::util::Json;
 
 use super::engine::Engine;
+use super::lifecycle::RequestHandle;
 use super::request::{Request, RequestOutput};
+
+/// Per-worker observability snapshot, refreshed after every decode step:
+/// the scheduler counters plus the engine's latency histograms (queue wait,
+/// time-to-first-token, inter-token latency) summarized for export.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerSnapshot {
+    pub sched: SchedulerMetrics,
+    pub queue_latency: HistogramSummary,
+    pub ttft: HistogramSummary,
+    pub itl: HistogramSummary,
+}
+
+impl WorkerSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheduler", self.sched.to_json()),
+            ("queue_latency_s", self.queue_latency.to_json()),
+            ("ttft_s", self.ttft.to_json()),
+            ("itl_s", self.itl.to_json()),
+        ])
+    }
+}
 
 struct WorkerHandle {
     tx: mpsc::Sender<Job>,
     inflight: Arc<AtomicUsize>,
-    /// Snapshot of the worker's scheduler metrics, refreshed after every
-    /// step (engines live on their worker threads; this is the only window
-    /// into their queue/occupancy/swap counters).
-    metrics: Arc<Mutex<SchedulerMetrics>>,
+    /// Snapshot of the worker's scheduler metrics + latency summaries,
+    /// refreshed after every step (engines live on their worker threads;
+    /// this is the only window into their counters).
+    metrics: Arc<Mutex<WorkerSnapshot>>,
 }
 
 struct Job {
@@ -71,7 +103,7 @@ impl Router {
             let (tx, rx) = mpsc::channel::<Job>();
             let inflight = Arc::new(AtomicUsize::new(0));
             let inflight2 = inflight.clone();
-            let metrics = Arc::new(Mutex::new(SchedulerMetrics::default()));
+            let metrics = Arc::new(Mutex::new(WorkerSnapshot::default()));
             let metrics2 = metrics.clone();
             let cfg = cfg.clone();
             let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
@@ -127,6 +159,27 @@ impl Router {
         Ok(rx)
     }
 
+    /// Route one request and subscribe to its lifecycle: the returned
+    /// handle carries the per-request event stream (Started, one Token per
+    /// decoded token, Suspended/Resumed, and a terminal Done/Cancelled/
+    /// Error with the final output) plus `cancel()`. Events are forwarded
+    /// out of the worker as its engine decodes — a streaming consumer
+    /// never waits for completion, and events carry the id the caller
+    /// submitted with (worker-local ticket rewriting is invisible).
+    pub fn submit_stream(&self, mut request: Request) -> Result<RequestHandle> {
+        let handle = RequestHandle::attach(&mut request);
+        let w = &self.workers[self.pick()];
+        w.inflight.fetch_add(1, Ordering::Relaxed);
+        // The worker's reply path still runs for inflight bookkeeping; the
+        // subscriber consumes the event stream instead, so the receiver is
+        // dropped here and the eventual reply send is a silent no-op.
+        let (reply, _unused) = mpsc::channel();
+        w.tx
+            .send(Job { request, reply })
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        Ok(handle)
+    }
+
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
@@ -139,10 +192,28 @@ impl Router {
     /// step), for observability across the thread boundary: queue depth,
     /// occupancy, preemptions, swap-outs/ins.
     pub fn sched_metrics(&self) -> Vec<SchedulerMetrics> {
+        self.snapshots().into_iter().map(|s| s.sched).collect()
+    }
+
+    /// Per-worker full snapshots: scheduler counters plus queue/TTFT/ITL
+    /// latency summaries.
+    pub fn snapshots(&self) -> Vec<WorkerSnapshot> {
         self.workers
             .iter()
             .map(|w| w.metrics.lock().map(|m| (*m).clone()).unwrap_or_default())
             .collect()
+    }
+
+    /// JSON metrics export: one object per worker (scheduler counters,
+    /// queue-latency / time-to-first-token / inter-token-latency summaries)
+    /// plus router-level gauges. Served over the wire protocol via a
+    /// `{"metrics": true}` control line.
+    pub fn metrics_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::arr(self.snapshots().iter().map(|s| s.to_json()))),
+            ("inflight", Json::num(self.inflight() as f64)),
+            ("n_workers", Json::num(self.n_workers() as f64)),
+        ])
     }
 }
 
@@ -162,7 +233,7 @@ fn worker_loop(
     mut engine: Engine,
     rx: mpsc::Receiver<Job>,
     inflight: Arc<AtomicUsize>,
-    metrics: Arc<Mutex<SchedulerMetrics>>,
+    metrics: Arc<Mutex<WorkerSnapshot>>,
 ) {
     let mut pending: HashMap<u64, Pending> = HashMap::new();
     let mut ticket: u64 = 0;
@@ -210,8 +281,18 @@ fn worker_loop(
                 engine.drain()
             }
         };
-        if let Ok(mut m) = metrics.lock() {
-            *m = engine.sched_metrics().clone();
+        // Snapshot counters + latency summaries for the router. Summary
+        // re-sorts a histogram only when it gained samples since the last
+        // call, and samples are capped engine-side, so this stays cheap
+        // relative to a decode step.
+        {
+            let sched = engine.sched_metrics().clone();
+            let queue_latency = engine.queue_latency().summary();
+            let ttft = engine.ttft_latency().summary();
+            let itl = engine.itl_latency().summary();
+            if let Ok(mut m) = metrics.lock() {
+                *m = WorkerSnapshot { sched, queue_latency, ttft, itl };
+            }
         }
         for mut out in outputs {
             if let Some(p) = pending.remove(&out.id) {

@@ -7,11 +7,16 @@
 //!
 //! ```text
 //!   submit ──> queue ──admit──> running ──retire──> finished output
-//!                ^                 │ ^
-//!      requeue   │        swap-out │ │ swap-in (resume at queue-front
-//!   (host full:  │      (preempted │ │ priority: device reserve →
-//!     restart)   │     on pool OOM)v │ restore → decode from next_pos)
-//!                └──────────── suspended
+//!                ^  │              │ ^         │
+//!      requeue   │  │     swap-out │ │ swap-in │ (resume at queue-front
+//!   (host full:  │  │   (preempted │ │         │  priority: device reserve →
+//!     restart)   │  │  on pool OOM)v │         │  restore → decode from
+//!                └──│────────── suspended      │  next_pos)
+//!                   │              │           │
+//!                   └── cancel / deadline ─────┴──> Cancelled /
+//!                     (every state; releases        DeadlineExceeded output
+//!                      device or host bytes,
+//!                      no swap-in needed)
 //! ```
 //!
 //! * **Admission** fills free slots between decode steps from two sources,
@@ -34,6 +39,13 @@
 //!   tier is full or disabled. The oldest sequence is never preempted,
 //!   which guarantees forward progress; a sequence only fails with
 //!   `FinishReason::Oom` if it cannot fit with the pool otherwise empty.
+//! * **Cancellation / deadlines** (`Engine::lifecycle_phase`): at every
+//!   step boundary, requests whose `CancelToken` fired or whose deadline
+//!   lapsed leave whichever state they are in — the queue, a decode slot,
+//!   or the suspended set — with `FinishReason::Cancelled` /
+//!   `DeadlineExceeded`. Dropping the state releases its reservation
+//!   (RAII), so a cancel while swapped out frees the host tier without a
+//!   swap-in.
 //!
 //! The scheduler owns no model state; `Active` carries everything a running
 //! sequence needs (its per-sequence cache, budget plan, and RAII pool
@@ -55,6 +67,11 @@ use super::request::{Request, RequestTiming};
 pub(crate) struct Queued {
     pub req: Request,
     pub t_submit: Instant,
+    /// True when this entry is a restart-from-scratch requeue of a request
+    /// that already completed an admission (and so already delivered its
+    /// first token): its re-admission must not record a second
+    /// time-to-first-token sample.
+    pub restarted: bool,
 }
 
 /// One sequence occupying a decode slot.
@@ -73,6 +90,9 @@ pub(crate) struct Active {
     pub seq: u64,
     pub t_submit: Instant,
     pub t_admit: Instant,
+    /// When this sequence's most recent token was emitted (admission counts
+    /// as the first token) — the anchor for inter-token-latency samples.
+    pub t_last_token: Instant,
     pub timing: RequestTiming,
     pub peak_bytes: usize,
 }
@@ -91,6 +111,9 @@ pub(crate) struct SequenceSnapshot {
     pub last_token: i32,
     pub effective_max_new: usize,
     pub t_admit: Instant,
+    /// Carried across the swap so resume's first inter-token-latency sample
+    /// honestly includes the suspended gap.
+    pub t_last_token: Instant,
     pub timing: RequestTiming,
     pub peak_bytes: usize,
 }
@@ -123,6 +146,7 @@ impl Suspended {
             seq,
             t_submit,
             t_admit,
+            t_last_token,
             timing,
             peak_bytes,
         } = a;
@@ -136,6 +160,7 @@ impl Suspended {
                 last_token,
                 effective_max_new,
                 t_admit,
+                t_last_token,
                 timing,
                 peak_bytes,
             },
@@ -160,6 +185,7 @@ impl Suspended {
             last_token,
             effective_max_new,
             t_admit,
+            t_last_token,
             mut timing,
             peak_bytes,
         } = snapshot;
@@ -176,6 +202,7 @@ impl Suspended {
             seq,
             t_submit,
             t_admit,
+            t_last_token,
             timing,
             peak_bytes,
         }
@@ -354,6 +381,7 @@ mod tests {
             seq,
             t_submit: Instant::now(),
             t_admit: Instant::now(),
+            t_last_token: Instant::now(),
             timing: RequestTiming::default(),
             peak_bytes: 0,
         }
@@ -371,6 +399,7 @@ mod tests {
                 last_token: 7,
                 effective_max_new: 4,
                 t_admit: now,
+                t_last_token: now,
                 timing: RequestTiming::default(),
                 peak_bytes: 0,
             },
@@ -384,7 +413,11 @@ mod tests {
     #[test]
     fn queue_cap_and_requeue_bypass() {
         let mut s = Scheduler::new(2, 2);
-        let q = |id| Queued { req: Request::new(id, vec![1], 1), t_submit: Instant::now() };
+        let q = |id| Queued {
+            req: Request::new(id, vec![1], 1),
+            t_submit: Instant::now(),
+            restarted: false,
+        };
         assert!(s.enqueue(q(0), true).is_ok());
         assert!(s.enqueue(q(1), true).is_ok());
         assert!(s.enqueue(q(2), true).is_err());

@@ -3,23 +3,53 @@
 //!
 //! Wire protocol (one JSON object per line):
 //!   -> {"id": 1, "prompt": [256, 5, 6, 257], "max_new_tokens": 32}
-//!   <- {"id": 1, "generated": [...], "finish": "eos", "total_s": 0.42}
+//!   <- {"id": 1, "generated": [...], "finish": "eos", "total_s": 0.42, ...}
+//!
+//! Optional request fields:
+//!   "stream": true      emit one {"id", "token", "pos"} line per decoded
+//!                       token as it is sampled, before the summary line.
+//!                       `pos` is the 0-based generation index and is
+//!                       authoritative: a restart-from-scratch preemption
+//!                       re-emits from pos 0 (suspend/resume never does).
+//!   "deadline_ms": N    wall-clock budget from submission; an expired
+//!                       request finishes with "finish": "deadline" at the
+//!                       next step boundary, keeping its partial output.
+//!
+//! Control lines:
+//!   -> {"metrics": true}
+//!   <- {"workers": [{scheduler, queue_latency_s, ttft_s, itl_s}, ...], ...}
 //!
 //! Every parsed line is submitted to the router *immediately* (not after the
 //! previous response), so pipelined requests stream into a worker's
 //! scheduler queue and join its running batch mid-flight. Responses are
-//! written back in request order per connection; malformed lines produce an
-//! in-order `{"error": ...}` object and the connection stays usable.
+//! written back in request order per connection — a streamed request's token
+//! lines all precede its summary line, and the summary precedes the next
+//! request's first line. Malformed lines (bad JSON, or a prompt containing
+//! a non-integer entry) produce an in-order `{"error": ...}` object and the
+//! connection stays usable.
+//!
+//! Client disconnect (a failed write) cancels every request still in flight
+//! on that connection via its lifecycle `CancelToken`, so abandoned
+//! generations release their device/host KV reservations at the next step
+//! boundary instead of decoding to `max_new_tokens`. Detection is
+//! write-driven by design: read-side EOF must NOT cancel, because a
+//! pipelining client may legally shut down its write half and keep reading
+//! responses (`printf ... | nc`). Streamed requests therefore notice a dead
+//! client within one token; a non-streamed request only notices at its
+//! summary write and may decode to completion first — clients wanting eager
+//! reclamation should set `"stream": true` or a `"deadline_ms"`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::util::Json;
 
+use super::lifecycle::{RequestEvent, RequestHandle};
 use super::request::{FinishReason, Request, RequestOutput};
 use super::router::Router;
 
@@ -30,25 +60,48 @@ fn finish_str(f: FinishReason) -> &'static str {
         FinishReason::Oom => "oom",
         FinishReason::Rejected => "rejected",
         FinishReason::Failed => "failed",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::DeadlineExceeded => "deadline",
     }
 }
 
-/// Parse one wire request line.
-pub fn parse_wire_request(line: &str) -> Result<Request> {
-    let j = Json::parse(line)?;
-    let id = j.req("id")?.as_i64().ok_or_else(|| anyhow::anyhow!("bad id"))? as u64;
-    let prompt: Vec<i32> = j
-        .req("prompt")?
-        .as_arr()
-        .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?
-        .iter()
-        .filter_map(|v| v.as_i64().map(|x| x as i32))
-        .collect();
-    let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(64);
-    Ok(Request::new(id, prompt, max_new))
+/// One parsed wire request: the engine request plus wire-only options.
+#[derive(Debug)]
+pub struct WireRequest {
+    pub request: Request,
+    /// Emit per-token lines ahead of the summary line.
+    pub stream: bool,
 }
 
-/// Encode one wire response line.
+/// Parse one wire request line. Every prompt entry must be an integer token
+/// id — a non-integer entry rejects the whole line (previously it was
+/// silently dropped, shifting the prompt).
+pub fn parse_wire_request(line: &str) -> Result<WireRequest> {
+    let j = Json::parse(line)?;
+    let id = j.req("id")?.as_i64().ok_or_else(|| anyhow::anyhow!("bad id"))? as u64;
+    let arr = j
+        .req("prompt")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let tok = v
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("prompt[{i}] is not an integer token id"))?;
+        let tok = i32::try_from(tok)
+            .map_err(|_| anyhow::anyhow!("prompt[{i}] is out of token-id range"))?;
+        prompt.push(tok);
+    }
+    let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(64);
+    let mut request = Request::new(id, prompt, max_new);
+    if let Some(ms) = j.get("deadline_ms").and_then(|v| v.as_usize()) {
+        request.deadline = Some(Duration::from_millis(ms as u64));
+    }
+    let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+    Ok(WireRequest { request, stream })
+}
+
+/// Encode one summary (terminal) response line.
 pub fn encode_wire_response(out: &RequestOutput) -> String {
     Json::obj(vec![
         ("id", Json::num(out.id as f64)),
@@ -56,6 +109,16 @@ pub fn encode_wire_response(out: &RequestOutput) -> String {
         ("finish", Json::str(finish_str(out.finish))),
         ("total_s", Json::num(out.timing.total_s)),
         ("first_token_s", Json::num(out.timing.first_token_s)),
+    ])
+    .to_string()
+}
+
+/// Encode one streamed-token line.
+pub fn encode_token_line(id: u64, token: i32, pos: usize) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("token", Json::num(token as f64)),
+        ("pos", Json::num(pos as f64)),
     ])
     .to_string()
 }
@@ -73,11 +136,15 @@ pub fn serve(listener: TcpListener, router: Arc<Router>) -> Result<()> {
     }
 }
 
-/// One in-order response slot for the writer thread: either a pending engine
-/// output or an immediate protocol error.
+/// One in-order response slot for the writer thread.
 enum PendingLine {
-    Output(mpsc::Receiver<RequestOutput>),
+    /// A submitted request: its lifecycle handle plus whether to emit
+    /// per-token lines.
+    Request { handle: RequestHandle, stream: bool },
+    /// An immediate protocol error.
     Error(String),
+    /// A pre-rendered control response (metrics snapshot).
+    Control(String),
 }
 
 fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
@@ -90,9 +157,15 @@ fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
+        if is_metrics_line(&line) {
+            if tx.send(PendingLine::Control(router.metrics_json().to_string())).is_err() {
+                break;
+            }
+            continue;
+        }
         let item = match parse_wire_request(&line) {
-            Ok(req) => match router.submit_async(req) {
-                Ok(rx_out) => PendingLine::Output(rx_out),
+            Ok(wire) => match router.submit_stream(wire.request) {
+                Ok(handle) => PendingLine::Request { handle, stream: wire.stream },
                 Err(e) => PendingLine::Error(e.to_string()),
             },
             Err(e) => PendingLine::Error(e.to_string()),
@@ -106,17 +179,60 @@ fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
     Ok(())
 }
 
+fn is_metrics_line(line: &str) -> bool {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("metrics").and_then(|v| v.as_bool()))
+        == Some(true)
+}
+
+/// Writer thread: answer pending lines in order. Once a write fails the
+/// client is gone — every remaining in-flight request is cancelled (its KV
+/// reservations are released at the engine's next step boundary) and the
+/// rest of the queue is drained without writing.
 fn write_loop(mut writer: TcpStream, rx: mpsc::Receiver<PendingLine>) {
+    let mut client_gone = false;
     for item in rx {
-        let line = match item {
-            PendingLine::Output(rx_out) => match rx_out.recv() {
-                Ok(out) => encode_wire_response(&out),
-                Err(_) => Json::obj(vec![("error", Json::str("request dropped"))]).to_string(),
-            },
-            PendingLine::Error(e) => Json::obj(vec![("error", Json::str(e))]).to_string(),
-        };
-        if writeln!(writer, "{line}").is_err() {
-            return;
+        match item {
+            PendingLine::Request { handle, stream } => {
+                if client_gone || !forward_request(&mut writer, &handle, stream) {
+                    client_gone = true;
+                    handle.cancel();
+                }
+            }
+            PendingLine::Error(e) if !client_gone => {
+                let line = Json::obj(vec![("error", Json::str(e))]).to_string();
+                client_gone = writeln!(writer, "{line}").is_err();
+            }
+            PendingLine::Control(line) if !client_gone => {
+                client_gone = writeln!(writer, "{line}").is_err();
+            }
+            PendingLine::Error(_) | PendingLine::Control(_) => {}
+        }
+    }
+}
+
+/// Forward one request's lifecycle to the socket: token lines while
+/// streaming, then the terminal summary. Returns false when the client
+/// disconnected (a write failed) — the caller cancels the request.
+fn forward_request(writer: &mut TcpStream, handle: &RequestHandle, stream: bool) -> bool {
+    loop {
+        match handle.recv() {
+            Ok(RequestEvent::Token { id, token, pos }) if stream => {
+                if writeln!(writer, "{}", encode_token_line(id, token, pos)).is_err() {
+                    return false;
+                }
+            }
+            Ok(ev) if ev.is_terminal() => {
+                let out = ev.into_output().expect("terminal event carries the output");
+                return writeln!(writer, "{}", encode_wire_response(&out)).is_ok();
+            }
+            Ok(_) => {} // Started / Suspended / Resumed / unstreamed Token
+            Err(_) => {
+                // Stream closed without a terminal event (worker teardown).
+                let line = Json::obj(vec![("error", Json::str("request dropped"))]).to_string();
+                return writeln!(writer, "{line}").is_ok();
+            }
         }
     }
 }
@@ -129,15 +245,42 @@ mod tests {
 
     #[test]
     fn wire_request_parse() {
-        let r = parse_wire_request(r#"{"id": 3, "prompt": [256, 5], "max_new_tokens": 9}"#)
+        let w = parse_wire_request(r#"{"id": 3, "prompt": [256, 5], "max_new_tokens": 9}"#)
             .unwrap();
-        assert_eq!(r.id, 3);
-        assert_eq!(r.prompt, vec![256, 5]);
-        assert_eq!(r.max_new_tokens, 9);
+        assert_eq!(w.request.id, 3);
+        assert_eq!(w.request.prompt, vec![256, 5]);
+        assert_eq!(w.request.max_new_tokens, 9);
+        assert!(!w.stream);
+        assert!(w.request.deadline.is_none());
         // default max_new
-        let r2 = parse_wire_request(r#"{"id": 1, "prompt": []}"#).unwrap();
-        assert_eq!(r2.max_new_tokens, 64);
+        let w2 = parse_wire_request(r#"{"id": 1, "prompt": []}"#).unwrap();
+        assert_eq!(w2.request.max_new_tokens, 64);
         assert!(parse_wire_request("{notjson").is_err());
+    }
+
+    #[test]
+    fn wire_request_stream_and_deadline() {
+        let w = parse_wire_request(
+            r#"{"id": 4, "prompt": [256], "stream": true, "deadline_ms": 250}"#,
+        )
+        .unwrap();
+        assert!(w.stream);
+        assert_eq!(w.request.deadline, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn wire_request_rejects_non_integer_prompt_entries() {
+        // A string entry must reject the line, not silently shift the prompt.
+        let err = parse_wire_request(r#"{"id": 1, "prompt": [256, "x", 5]}"#).unwrap_err();
+        assert!(err.to_string().contains("prompt[1]"), "{err}");
+        // Fractional token ids are not integers either.
+        assert!(parse_wire_request(r#"{"id": 1, "prompt": [1.5]}"#).is_err());
+        // null likewise.
+        assert!(parse_wire_request(r#"{"id": 1, "prompt": [null]}"#).is_err());
+        // Integers outside i32 range must be rejected, not wrapped.
+        let err = parse_wire_request(r#"{"id": 1, "prompt": [3000000000]}"#).unwrap_err();
+        assert!(err.to_string().contains("range"), "{err}");
+        assert!(parse_wire_request(r#"{"id": 1, "prompt": [-3000000000]}"#).is_err());
     }
 
     #[test]
@@ -156,5 +299,27 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
         assert_eq!(j.get("finish").unwrap().as_str(), Some("eos"));
         assert_eq!(j.get("generated").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn token_line_encodes_id_token_pos() {
+        let j = Json::parse(&encode_token_line(9, 260, 3)).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("token").unwrap().as_i64(), Some(260));
+        assert_eq!(j.get("pos").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn finish_strings_cover_lifecycle_reasons() {
+        assert_eq!(finish_str(FinishReason::Cancelled), "cancelled");
+        assert_eq!(finish_str(FinishReason::DeadlineExceeded), "deadline");
+    }
+
+    #[test]
+    fn metrics_line_detection() {
+        assert!(is_metrics_line(r#"{"metrics": true}"#));
+        assert!(!is_metrics_line(r#"{"metrics": false}"#));
+        assert!(!is_metrics_line(r#"{"id": 1, "prompt": []}"#));
+        assert!(!is_metrics_line("{garbage"));
     }
 }

@@ -8,7 +8,9 @@
 //! away, and back host→device on resume. For either tier, `capacity = 0`
 //! means unlimited (accuracy experiments); throughput/OOM experiments set a
 //! finite device capacity so Full Cache hits the same wall the paper's A100s
-//! do.
+//! do. Migrations additionally accumulate per-direction traffic counters
+//! (`migrated_into`) so the simulator cost model can price the PCIe
+//! transfers a real swap would perform.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -90,6 +92,11 @@ pub struct KvPool {
 #[derive(Debug)]
 struct Inner {
     tiers: [TierState; 2],
+    /// Cumulative bytes migrated *into* each tier (indexed like `tiers`):
+    /// `migrated[Host]` is total swap-out traffic, `migrated[Device]` total
+    /// swap-in traffic. Each models one PCIe transfer of that many bytes,
+    /// which the simulator cost model prices (`Cluster::swap_transfer_s`).
+    migrated: [AtomicUsize; 2],
 }
 
 impl KvPool {
@@ -103,6 +110,7 @@ impl KvPool {
         Self {
             inner: Arc::new(Inner {
                 tiers: [TierState::new(device_bytes), TierState::new(host_bytes)],
+                migrated: [AtomicUsize::new(0), AtomicUsize::new(0)],
             }),
         }
     }
@@ -129,6 +137,18 @@ impl KvPool {
 
     pub fn oom_events_of(&self, tier: Tier) -> usize {
         self.tier(tier).oom_events.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative bytes migrated *into* `tier` (swap traffic in that
+    /// direction: into `Host` = swap-outs, into `Device` = swap-ins).
+    pub fn migrated_into(&self, tier: Tier) -> usize {
+        self.inner.migrated[tier.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total swap traffic in bytes, both directions — what a host link
+    /// (PCIe) would actually have carried.
+    pub fn migrated_total(&self) -> usize {
+        self.migrated_into(Tier::Device) + self.migrated_into(Tier::Host)
     }
 
     /// Device-tier capacity (back-compat shorthand).
@@ -254,6 +274,7 @@ impl Reservation {
         }
         self.pool.reserve_on(to, self.bytes)?;
         self.pool.release_on(self.tier, self.bytes);
+        self.pool.inner.migrated[to.index()].fetch_add(self.bytes, Ordering::Relaxed);
         self.tier = to;
         Ok(())
     }
@@ -340,14 +361,20 @@ mod tests {
         assert_eq!(r.tier(), Tier::Host);
         assert_eq!(pool.in_use_of(Tier::Device), 0);
         assert_eq!(pool.in_use_of(Tier::Host), 60);
-        // migrate to the same tier is a no-op
+        // migrate to the same tier is a no-op (and charges no traffic)
         r.migrate(Tier::Host).unwrap();
         assert_eq!(pool.in_use_of(Tier::Host), 60);
+        assert_eq!(pool.migrated_into(Tier::Host), 60);
         r.migrate(Tier::Device).unwrap();
         assert_eq!(pool.in_use_of(Tier::Device), 60);
         assert_eq!(pool.in_use_of(Tier::Host), 0);
+        // Swap traffic accounted per direction and in total.
+        assert_eq!(pool.migrated_into(Tier::Host), 60);
+        assert_eq!(pool.migrated_into(Tier::Device), 60);
+        assert_eq!(pool.migrated_total(), 120);
         drop(r);
         assert_eq!(pool.in_use_of(Tier::Device), 0);
+        assert_eq!(pool.migrated_total(), 120, "drop is a release, not traffic");
     }
 
     #[test]
@@ -359,6 +386,7 @@ mod tests {
         assert_eq!(r.tier(), Tier::Device);
         assert_eq!(pool.in_use_of(Tier::Device), 80);
         assert_eq!(pool.in_use_of(Tier::Host), 0);
+        assert_eq!(pool.migrated_total(), 0, "failed migrate moved no bytes");
     }
 
     #[test]

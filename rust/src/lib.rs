@@ -40,7 +40,17 @@
 //!    capacity tier that fits; new KV rows are appended, charged to the
 //!    pool, then each layer is re-compressed to its own budget (the paper's
 //!    2-D management).
-//! 4. **Retire / suspend** — finished sequences (EOS or length) free their
+//! 4. **Lifecycle** — requests may carry an event sink, a cancel token,
+//!    and a deadline ([`coordinator::lifecycle`]). The engine publishes a
+//!    `RequestEvent` at every transition (admission, each decoded token,
+//!    suspend/resume, terminal) and begins every step by retiring
+//!    cancelled or deadline-expired requests from the queue, the decode
+//!    slots, and the suspended set (`FinishReason::{Cancelled,
+//!    DeadlineExceeded}`) — a cancel while swapped out frees the host tier
+//!    without a swap-in. The TCP server's `"stream": true` mode forwards
+//!    `Token` events as `{"id", "token", "pos"}` wire lines and cancels a
+//!    connection's in-flight requests when the client disconnects.
+//! 5. **Retire / suspend** — finished sequences (EOS or length) free their
 //!    slot immediately, so waiting requests join the running batch on the
 //!    next step. If a sequence cannot grow its reservation, the youngest
 //!    *other* running sequence is preempted instead of failing anyone: with
@@ -64,7 +74,10 @@
 //! first step); queue depth, batch occupancy, preemption and swap-out/in
 //! counters are exported via [`metrics::SchedulerMetrics`], and the
 //! suspend/resume lifecycle makes capped-pool serving cheap instead of
-//! merely survivable.
+//! merely survivable. Per-request time-to-first-token and
+//! inter-token-latency histograms ride along in each worker's snapshot and
+//! are exported through `Router::metrics_json` (served over the wire via a
+//! `{"metrics": true}` control line).
 //!
 //! Quickstart (runs on the simulated backend — no artifacts needed):
 //! ```

@@ -48,6 +48,21 @@ ENGINE FLAGS (serve/generate)
                        from scratch)                           [0]
   --batch-wait-ms N    wait up to N ms for more arrivals
                        before stepping a small batch           [0]
+  --request-deadline-ms N
+                       default per-request wall-clock deadline,
+                       enforced at decode-step boundaries; an
+                       expired request finishes with
+                       \"deadline\" keeping its partial output
+                       (a request's own deadline_ms overrides;
+                       0 = no deadline)                        [0]
+
+WIRE PROTOCOL (serve)
+  one JSON object per line; responses in request order per connection.
+  -> {\"id\": 1, \"prompt\": [256, 5, 257], \"max_new_tokens\": 32}
+  optional: \"stream\": true   one {\"id\",\"token\",\"pos\"} line per token
+            \"deadline_ms\": N per-request deadline
+  -> {\"metrics\": true}       per-worker scheduler + latency snapshot
+  client disconnect cancels that connection's in-flight requests.
 ";
 
 fn engine_config(args: &Args) -> Result<ServeConfig> {
@@ -76,6 +91,7 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
     cfg.kv_pool_bytes = args.usize("kv-pool-mib", cfg.kv_pool_bytes >> 20)? << 20;
     cfg.host_spill_bytes = args.usize("host-spill-mib", cfg.host_spill_bytes >> 20)? << 20;
     cfg.batch_wait_ms = args.u64("batch-wait-ms", cfg.batch_wait_ms)?;
+    cfg.request_deadline_ms = args.u64("request-deadline-ms", cfg.request_deadline_ms)?;
     Ok(cfg)
 }
 

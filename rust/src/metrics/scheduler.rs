@@ -6,6 +6,8 @@
 //! `running`, `suspended`) reflect the state after the most recent step,
 //! counters are cumulative since the last (re)configure.
 
+use crate::util::Json;
+
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerMetrics {
     /// Configured decode slots (batch capacity).
@@ -55,6 +57,12 @@ pub struct SchedulerMetrics {
     pub rejected: u64,
     /// Requests failed with OOM (could not fit even with the pool drained).
     pub oom_failures: u64,
+    /// Requests cancelled via their `CancelToken` — from the queue, a
+    /// decode slot, or the suspended set (the last frees the host tier
+    /// without a swap-in).
+    pub cancelled: u64,
+    /// Requests that exceeded their deadline at a step boundary.
+    pub deadline_exceeded: u64,
 }
 
 impl SchedulerMetrics {
@@ -75,6 +83,32 @@ impl SchedulerMetrics {
             self.mean_occupancy() / self.slots as f64
         }
     }
+
+    /// Full snapshot as JSON (the router's metrics export).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slots", Json::num(self.slots as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("queue_peak", Json::num(self.queue_peak as f64)),
+            ("running", Json::num(self.running as f64)),
+            ("peak_occupancy", Json::num(self.peak_occupancy as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("mean_occupancy", Json::num(self.mean_occupancy())),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("deferred_admissions", Json::num(self.deferred_admissions as f64)),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("suspended", Json::num(self.suspended as f64)),
+            ("swap_outs", Json::num(self.swap_outs as f64)),
+            ("swap_ins", Json::num(self.swap_ins as f64)),
+            ("restarts_avoided", Json::num(self.restarts_avoided as f64)),
+            ("host_bytes_peak", Json::num(self.host_bytes_peak as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("oom_failures", Json::num(self.oom_failures as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -90,5 +124,22 @@ mod tests {
         m.occupancy_sum = 10;
         assert!((m.mean_occupancy() - 2.5).abs() < 1e-12);
         assert!((m.batch_utilization() - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_snapshot_exports_lifecycle_counters() {
+        let m = SchedulerMetrics {
+            slots: 4,
+            cancelled: 3,
+            deadline_exceeded: 2,
+            steps: 5,
+            occupancy_sum: 10,
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("slots").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("cancelled").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("deadline_exceeded").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("mean_occupancy").unwrap().as_f64(), Some(2.0));
     }
 }

@@ -29,6 +29,11 @@ pub struct Cluster {
     /// Achievable fraction of peak bandwidth (measured A100 decode kernels
     /// typically reach 60–80%).
     pub efficiency: f64,
+    /// Host-link (PCIe) bandwidth per GPU (bytes/s) for device↔host KV
+    /// swaps. A100 PCIe 4.0 x16 peaks at 32 GB/s; ~25 GB/s is a realistic
+    /// achieved rate. Swaps of a suspended sequence traverse one GPU's
+    /// link, so this is deliberately *not* scaled by `n_gpus`.
+    pub pcie_bw: f64,
 }
 
 pub const A100_40GB_X8: Cluster = Cluster {
@@ -37,6 +42,7 @@ pub const A100_40GB_X8: Cluster = Cluster {
     hbm_bytes: 40e9,
     hbm_bw: 1.555e12,
     efficiency: 0.7,
+    pcie_bw: 25e9,
 };
 
 pub const A100_40GB_X1: Cluster = Cluster {
@@ -45,6 +51,7 @@ pub const A100_40GB_X1: Cluster = Cluster {
     hbm_bytes: 40e9,
     hbm_bw: 1.555e12,
     efficiency: 0.7,
+    pcie_bw: 25e9,
 };
 
 impl Cluster {
@@ -54,6 +61,19 @@ impl Cluster {
 
     pub fn total_bw(&self) -> f64 {
         self.hbm_bw * self.n_gpus as f64 * self.efficiency
+    }
+
+    /// Seconds the host link needs to move `bytes` of KV between device
+    /// and host memory (one direction; a full swap-out + swap-in cycle is
+    /// two transfers — pass the summed traffic). This is the cost the
+    /// two-tier pool's `migrated_into` counters meter, so swap-vs-restart
+    /// projections stop treating suspension as free.
+    pub fn swap_transfer_s(&self, bytes: f64) -> f64 {
+        if self.pcie_bw <= 0.0 {
+            0.0
+        } else {
+            bytes / self.pcie_bw
+        }
     }
 }
 
@@ -207,6 +227,23 @@ mod tests {
         // Appendix A.2: unimportant 300, important ~1544.
         assert_eq!(budgets[31], 300);
         assert!(budgets[0] == 1544 || budgets[0] == 1545);
+    }
+
+    #[test]
+    fn swap_transfer_priced_by_pcie_bw() {
+        // 1 GiB over a 25 GB/s link ≈ 43 ms — far from free next to a
+        // decode step, which is the point of pricing it.
+        let t = A100_40GB_X1.swap_transfer_s(1024.0 * 1024.0 * 1024.0);
+        assert!((t - 1073741824.0 / 25e9).abs() < 1e-12);
+        assert!(t > 0.04 && t < 0.05, "{t}");
+        // Multi-GPU clusters do not parallelize a single sequence's swap.
+        assert_eq!(
+            A100_40GB_X8.swap_transfer_s(1e9),
+            A100_40GB_X1.swap_transfer_s(1e9)
+        );
+        // Degenerate link: free (models the accounting-only sim default).
+        let free = Cluster { pcie_bw: 0.0, ..A100_40GB_X1 };
+        assert_eq!(free.swap_transfer_s(1e12), 0.0);
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Request-lifecycle subsystem integration tests (on `sim://tiny`, so they
+//! always run):
+//!
+//! * cancellation mid-decode releases the device reservation (pool `in_use`
+//!   returns to the pre-admission level) and preserves the partial output;
+//! * cancel-while-suspended frees the host tier directly — no swap-in;
+//! * deadlines are enforced at step boundaries (`DeadlineExceeded`), both
+//!   per-request and via the `request_deadline_ms` config default;
+//! * a streamed connection's token lines concatenate to exactly the
+//!   non-streamed `generated` array for the same pipelined workload;
+//! * a client disconnect cancels that connection's in-flight requests
+//!   (observed through the wire metrics snapshot);
+//! * the router forwards lifecycle events across the worker boundary under
+//!   the caller's original ids and exports TTFT/ITL histograms.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{
+    server, Engine, FinishReason, Request, RequestEvent, RequestHandle, RoutePolicy, Router,
+};
+use squeezeattention::kvcache::Tier;
+use squeezeattention::util::Json;
+use squeezeattention::workload::{Task, TaskGen, TraceSpec};
+
+const ARTIFACTS: &str = "sim://tiny";
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig::new(ARTIFACTS).with_budget(48).with_squeeze(false)
+}
+
+/// Boot a 1-worker router + TCP server on an ephemeral port.
+fn boot_server(cfg: ServeConfig) -> std::net::SocketAddr {
+    let router = Arc::new(Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server::serve(listener, router);
+    });
+    addr
+}
+
+fn json_ints(prompt: &[i32]) -> String {
+    prompt.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+}
+
+#[test]
+fn cancel_mid_decode_releases_pool_bytes() {
+    let mut eng = Engine::new(base_cfg()).unwrap();
+    let mut gen = TaskGen::new(5);
+    let sample = gen.sample(Task::Copy, 64);
+    let mut req = Request::new(0, sample.prompt.clone(), 200);
+    let handle = RequestHandle::attach(&mut req);
+    let baseline = eng.pool().in_use(); // pre-admission level
+    eng.submit(req).unwrap();
+    for _ in 0..4 {
+        let outs = eng.step().unwrap();
+        assert!(outs.is_empty(), "request finished before it could be cancelled");
+    }
+    assert!(eng.pool().in_use() > baseline, "no KV bytes held mid-decode");
+
+    handle.cancel();
+    let outs = eng.step().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::Cancelled);
+    assert!(!outs[0].generated.is_empty(), "partial output must be preserved");
+    assert!(outs[0].generated.len() < 200, "cancel did not stop decode early");
+    assert_eq!(eng.pool().in_use(), baseline, "device reservation not fully released");
+    assert!(!eng.has_work());
+    assert_eq!(eng.sched_metrics().cancelled, 1);
+
+    // Event stream: Started first, Tokens matching the partial output,
+    // Cancelled terminal last.
+    let evs: Vec<RequestEvent> = handle.events().try_iter().collect();
+    assert!(matches!(evs.first(), Some(RequestEvent::Started { .. })));
+    assert!(matches!(evs.last(), Some(RequestEvent::Cancelled(_))));
+    let toks: Vec<i32> = evs
+        .iter()
+        .filter_map(|e| match e {
+            RequestEvent::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(toks, outs[0].generated, "token events diverge from the output");
+}
+
+#[test]
+fn cancel_while_suspended_frees_host_tier_without_swap_in() {
+    // Same pressure shape as the oom_preemption suite: a 600 KiB device
+    // pool over 6 growing sequences forces suspensions to the host tier.
+    let mut cfg = base_cfg().with_host_spill(8 * 1024 * 1024);
+    cfg.max_batch = 4;
+    cfg.kv_pool_bytes = 600 * 1024;
+    let mut eng = Engine::new(cfg).unwrap();
+    let items = TraceSpec::closed(6, 16, 48, 31).generate();
+    let mut handles = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        let mut req = Request::new(i as u64, it.sample.prompt.clone(), 48);
+        handles.push(RequestHandle::attach(&mut req));
+        eng.submit(req).unwrap();
+    }
+
+    let mut outs = Vec::new();
+    let mut steps = 0;
+    while eng.suspended_len() == 0 {
+        assert!(eng.has_work(), "workload drained without ever suspending — resize it");
+        outs.extend(eng.step().unwrap());
+        steps += 1;
+        assert!(steps < 10_000, "pool pressure never suspended a sequence");
+    }
+    assert!(eng.pool().in_use_of(Tier::Host) > 0, "suspended sequence holds no host bytes");
+    let swap_ins_before = eng.sched_metrics().swap_ins;
+
+    // Cancel everything: suspended entries must release their host bytes
+    // directly, never migrating back to the device tier first.
+    for h in &handles {
+        h.cancel();
+    }
+    while eng.has_work() {
+        outs.extend(eng.step().unwrap());
+    }
+    assert_eq!(outs.len(), 6);
+    assert!(outs.iter().all(|o| matches!(
+        o.finish,
+        FinishReason::Eos | FinishReason::Length | FinishReason::Cancelled
+    )));
+    assert!(outs.iter().any(|o| o.finish == FinishReason::Cancelled));
+    let m = eng.sched_metrics();
+    assert_eq!(m.swap_ins, swap_ins_before, "cancel-while-suspended must not swap in");
+    assert!(m.cancelled > 0);
+    assert_eq!(eng.pool().in_use_of(Tier::Host), 0, "host tier not freed");
+    assert_eq!(eng.pool().in_use(), 0, "device tier not freed");
+}
+
+#[test]
+fn deadline_exceeded_at_step_boundary() {
+    let mut eng = Engine::new(base_cfg()).unwrap();
+    let mut gen = TaskGen::new(7);
+    let sample = gen.sample(Task::Copy, 48);
+    let req =
+        Request::new(0, sample.prompt.clone(), 500).with_deadline(Duration::from_millis(20));
+    eng.submit(req).unwrap();
+    let mut outs = Vec::new();
+    while eng.has_work() {
+        outs.extend(eng.step().unwrap());
+        // Give each step observable wall time so the deadline reliably
+        // lapses mid-generation regardless of host speed.
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+    assert!(!outs[0].generated.is_empty(), "deadline kept no partial output");
+    assert!(outs[0].generated.len() < 500, "deadline never fired");
+    assert_eq!(eng.sched_metrics().deadline_exceeded, 1);
+    assert_eq!(eng.pool().in_use(), 0, "deadline did not release the reservation");
+}
+
+#[test]
+fn config_default_deadline_applies_when_request_has_none() {
+    let mut eng = Engine::new(base_cfg().with_request_deadline_ms(15)).unwrap();
+    let mut gen = TaskGen::new(9);
+    let sample = gen.sample(Task::Copy, 48);
+    eng.submit(Request::new(0, sample.prompt.clone(), 500)).unwrap();
+    let mut outs = Vec::new();
+    while eng.has_work() {
+        outs.extend(eng.step().unwrap());
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::DeadlineExceeded);
+    assert_eq!(eng.sched_metrics().deadline_exceeded, 1);
+}
+
+#[test]
+fn streamed_tokens_match_non_streamed_generation() {
+    let addr = boot_server(ServeConfig::new(ARTIFACTS).with_budget(48));
+    let mut gen = TaskGen::new(11);
+    let prompts: Vec<Vec<i32>> = (0..3).map(|_| gen.sample(Task::Copy, 40).prompt).collect();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    // Pipeline the same workload twice on one connection: first streamed,
+    // then plain — all six share the worker's continuous batch.
+    for (i, p) in prompts.iter().enumerate() {
+        writeln!(
+            writer,
+            "{{\"id\": {}, \"prompt\": [{}], \"max_new_tokens\": 12, \"stream\": true}}",
+            i + 1,
+            json_ints(p)
+        )
+        .unwrap();
+    }
+    for (i, p) in prompts.iter().enumerate() {
+        writeln!(
+            writer,
+            "{{\"id\": {}, \"prompt\": [{}], \"max_new_tokens\": 12}}",
+            i + 101,
+            json_ints(p)
+        )
+        .unwrap();
+    }
+
+    let mut read_json = move || {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap()
+    };
+    let ints = |j: &Json, key: &str| -> Vec<i64> {
+        j.get(key).unwrap().as_arr().unwrap().iter().map(|v| v.as_i64().unwrap()).collect()
+    };
+
+    // Streamed requests: token lines in order, summary last, concatenation
+    // byte-identical to the summary's generated array.
+    let mut streamed: Vec<Vec<i64>> = Vec::new();
+    for expect in 1..=3i64 {
+        let mut toks: Vec<i64> = Vec::new();
+        loop {
+            let j = read_json();
+            assert_eq!(j.get("id").unwrap().as_i64(), Some(expect), "responses out of order");
+            if let Some(t) = j.get("token") {
+                assert_eq!(
+                    j.get("pos").unwrap().as_usize(),
+                    Some(toks.len()),
+                    "token pos out of order"
+                );
+                toks.push(t.as_i64().unwrap());
+            } else {
+                let generated = ints(&j, "generated");
+                assert!(!generated.is_empty());
+                assert_eq!(generated, toks, "streamed tokens != summary generated");
+                break;
+            }
+        }
+        streamed.push(toks);
+    }
+
+    // Non-streamed requests over the same prompts: byte-identical output.
+    for (i, want) in streamed.iter().enumerate() {
+        let j = read_json();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(i + 101));
+        assert!(j.get("token").is_none(), "plain request must not stream");
+        assert_eq!(&ints(&j, "generated"), want, "streamed vs non-streamed divergence");
+    }
+}
+
+#[test]
+fn client_disconnect_cancels_in_flight_requests() {
+    let addr = boot_server(ServeConfig::new(ARTIFACTS).with_budget(48));
+    let mut gen = TaskGen::new(13);
+    let prompt = gen.sample(Task::Copy, 40).prompt;
+
+    // Start a long streamed generation, read a couple of token lines to be
+    // sure it is decoding, then drop the connection.
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(
+            writer,
+            "{{\"id\": 1, \"prompt\": [{}], \"max_new_tokens\": 600, \"stream\": true}}",
+            json_ints(&prompt)
+        )
+        .unwrap();
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(Json::parse(&line).unwrap().get("token").is_some());
+        }
+    } // connection dropped here
+
+    // The server's next token write fails, which must cancel the request.
+    // Observe it through the wire metrics snapshot on a fresh connection.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(writer, "{{\"metrics\": true}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        let cancelled = j.get("workers").unwrap().as_arr().unwrap()[0]
+            .get("scheduler")
+            .unwrap()
+            .get("cancelled")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        if cancelled >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect never cancelled the in-flight request: {j}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn router_forwards_events_with_original_ids_and_exports_latency_metrics() {
+    let router = Router::spawn(base_cfg(), 1, RoutePolicy::LeastLoaded).unwrap();
+    let mut gen = TaskGen::new(17);
+    let sample = gen.sample(Task::Copy, 40);
+    let h1 = router.submit_stream(Request::new(7_000, sample.prompt.clone(), 8)).unwrap();
+    let h2 = router.submit_stream(Request::new(7_001, sample.prompt.clone(), 8)).unwrap();
+
+    fn collect(h: &RequestHandle) -> (Vec<i32>, squeezeattention::coordinator::RequestOutput) {
+        let mut toks = Vec::new();
+        loop {
+            let ev = h.recv().expect("stream must end with a terminal event");
+            assert_eq!(ev.id(), h.id(), "event escaped with a worker-local ticket id");
+            match ev {
+                RequestEvent::Token { token, pos, .. } => {
+                    assert_eq!(pos, toks.len());
+                    toks.push(token);
+                }
+                other => {
+                    if other.is_terminal() {
+                        return (toks, other.into_output().unwrap());
+                    }
+                }
+            }
+        }
+    }
+    let (t1, o1) = collect(&h1);
+    let (t2, o2) = collect(&h2);
+    assert_eq!(o1.id, 7_000);
+    assert_eq!(o2.id, 7_001);
+    assert!(matches!(o1.finish, FinishReason::Eos | FinishReason::Length));
+    assert_eq!(t1, o1.generated, "forwarded tokens diverge from the output");
+    assert_eq!(t2, o2.generated);
+    assert_eq!(o1.generated, o2.generated, "same prompt, same greedy tokens");
+
+    // The worker snapshot (refreshed post-step) must surface the TTFT and
+    // inter-token-latency histograms in the router's JSON metrics export.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let j = router.metrics_json();
+        let w = &j.get("workers").unwrap().as_arr().unwrap()[0];
+        let completed =
+            w.get("scheduler").unwrap().get("completed").unwrap().as_usize().unwrap();
+        let ttft_count = w.get("ttft_s").unwrap().get("count").unwrap().as_usize().unwrap();
+        let itl_count = w.get("itl_s").unwrap().get("count").unwrap().as_usize().unwrap();
+        if completed >= 2 && ttft_count >= 2 && itl_count > 0 {
+            assert!(w.get("queue_latency_s").is_some());
+            break;
+        }
+        assert!(Instant::now() < deadline, "metrics snapshot never caught up: {j}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
