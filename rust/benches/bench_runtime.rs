@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     bench("add_scores 160 slots x8 layers", 5, 500, || {
         let mut c = cache.clone();
         for l in 0..n_layer {
-            c.add_scores(l, &scores);
+            c.add_scores(l, &scores).unwrap();
         }
     });
 

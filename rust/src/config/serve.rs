@@ -97,6 +97,12 @@ pub struct ServeConfig {
     /// a tier capacity of 0 means unlimited — the engine maps this knob's
     /// 0-means-disabled onto that by never swapping out.)
     pub host_spill_bytes: usize,
+    /// KV page size in bytes for the paged allocator: both tiers are carved
+    /// into fixed pages of this size, and admission/growth/suspend all move
+    /// in whole pages. The engine clamps it up to at least one token row of
+    /// the loaded model so a page always covers the slots it is charged
+    /// for. Default 16 KiB.
+    pub kv_page_bytes: usize,
     /// Admission queue depth before backpressure rejects.
     pub queue_depth: usize,
     /// On KV-pool OOM mid-decode, preempt the youngest running sequence
@@ -132,6 +138,7 @@ impl ServeConfig {
             max_new_tokens: 64,
             kv_pool_bytes: 0,
             host_spill_bytes: 0,
+            kv_page_bytes: 16 * 1024,
             queue_depth: 256,
             preemption: true,
             batch_wait_ms: 0,
@@ -195,6 +202,9 @@ impl ServeConfig {
         if let Some(h) = j.get("host_spill_bytes").and_then(|v| v.as_usize()) {
             cfg.host_spill_bytes = h;
         }
+        if let Some(p) = j.get("kv_page_bytes").and_then(|v| v.as_usize()) {
+            cfg.kv_page_bytes = p;
+        }
         if let Some(q) = j.get("queue_depth").and_then(|v| v.as_usize()) {
             cfg.queue_depth = q;
         }
@@ -236,6 +246,7 @@ impl ServeConfig {
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("kv_pool_bytes", Json::num(self.kv_pool_bytes as f64)),
             ("host_spill_bytes", Json::num(self.host_spill_bytes as f64)),
+            ("kv_page_bytes", Json::num(self.kv_page_bytes as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("preemption", Json::Bool(self.preemption)),
             ("batch_wait_ms", Json::num(self.batch_wait_ms as f64)),
@@ -280,6 +291,11 @@ impl ServeConfig {
 
     pub fn with_host_spill(mut self, bytes: usize) -> Self {
         self.host_spill_bytes = bytes;
+        self
+    }
+
+    pub fn with_kv_page_bytes(mut self, bytes: usize) -> Self {
+        self.kv_page_bytes = bytes;
         self
     }
 
@@ -364,6 +380,17 @@ mod tests {
         let d = ServeConfig::from_json(&j).unwrap();
         assert_eq!(d.host_spill_bytes, 0);
         assert_eq!(d.batch_wait_ms, 0);
+    }
+
+    #[test]
+    fn kv_page_bytes_roundtrip_and_default() {
+        let cfg = ServeConfig::new("a");
+        assert_eq!(cfg.kv_page_bytes, 16 * 1024);
+        let back = ServeConfig::from_json(&cfg.with_kv_page_bytes(4096).to_json()).unwrap();
+        assert_eq!(back.kv_page_bytes, 4096);
+        // absent key keeps the default
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().kv_page_bytes, 16 * 1024);
     }
 
     #[test]

@@ -36,9 +36,16 @@
 //! decoded token, suspend/resume, terminal), a cancel token, and a
 //! deadline. Every step begins with a `lifecycle_phase` that retires
 //! cancelled or deadline-expired requests from the queue, the decode
-//! slots, and the suspended set — releasing their device or host
-//! reservations without finishing decode (a cancel while swapped out frees
-//! the host tier with no swap-in).
+//! slots, and the suspended set — releasing their device or host pages
+//! without finishing decode (a cancel while swapped out frees the host
+//! tier with no swap-in).
+//!
+//! KV bytes are charged through the paged allocator (`kvcache::paging`):
+//! every running or suspended sequence holds a `PageTable`, admission
+//! estimates and per-step growth are page-granular, and suspend/resume is
+//! a page-table edit whose migration traffic is exactly
+//! `page_bytes × pages_moved`. `--kv-page-bytes` sets the page size,
+//! clamped to at least one token row per layer.
 //!
 //! The engine is synchronous; the async server (`server.rs`) drives it from
 //! a dedicated thread.
@@ -48,7 +55,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::{PolicyKind, ServeConfig};
-use crate::kvcache::{make_policy, EvictionPolicy, KvPool, Reservation, SequenceCache, Tier};
+use crate::kvcache::{
+    make_policy, EvictionPolicy, KvPool, PageTable, PagedKvPool, SequenceCache, Tier,
+};
 use crate::metrics::{Histogram, SchedulerMetrics, ThroughputMeter};
 use crate::model::sample;
 use crate::model::tokenizer::{self, check_token_map};
@@ -92,7 +101,7 @@ pub struct Engine {
     runtime: Runtime,
     cfg: ServeConfig,
     policy: Box<dyn EvictionPolicy>,
-    pool: KvPool,
+    paged: PagedKvPool,
     batch: usize,
     n_layer: usize,
     row_elems: usize,
@@ -132,13 +141,19 @@ impl Engine {
             .filter(|&b| b <= cfg.max_batch)
             .max()
             .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
-        let pool = KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes);
+        // Pages must hold at least one token row, or a page could never
+        // cover the slot it is charged for.
+        let page_bytes = cfg.kv_page_bytes.max(SequenceCache::token_bytes(row_elems));
+        let paged = PagedKvPool::new(
+            KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes),
+            page_bytes,
+        );
         let policy = make_policy(&cfg);
         let sched = Scheduler::new(batch, cfg.queue_depth);
         Ok(Self {
             runtime,
             policy,
-            pool,
+            paged,
             batch,
             n_layer,
             row_elems,
@@ -180,7 +195,11 @@ impl Engine {
             .max()
             .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
         self.policy = make_policy(&cfg);
-        self.pool = KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes);
+        let page_bytes = cfg.kv_page_bytes.max(SequenceCache::token_bytes(self.row_elems));
+        self.paged = PagedKvPool::new(
+            KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes),
+            page_bytes,
+        );
         self.sched = Scheduler::new(self.batch, cfg.queue_depth);
         self.queue_hist = Histogram::new();
         self.ttft_hist = Histogram::new();
@@ -198,7 +217,12 @@ impl Engine {
     }
 
     pub fn pool(&self) -> &KvPool {
-        &self.pool
+        self.paged.pool()
+    }
+
+    /// The page-granular allocator layered over [`pool`](Self::pool).
+    pub fn paged_pool(&self) -> &PagedKvPool {
+        &self.paged
     }
 
     /// Decode slot count actually bound (largest artifact batch <= max_batch).
@@ -350,7 +374,7 @@ impl Engine {
         }
         let mut outputs = self.drain();
         self.run.wall_s = t0.elapsed().as_secs_f64();
-        self.run.peak_pool_bytes = self.pool.peak();
+        self.run.peak_pool_bytes = self.pool().peak();
         self.run.generated_tokens = self.meter.tokens();
         self.last_run = self.run.clone();
         outputs.sort_by_key(|o| o.id);
@@ -369,6 +393,7 @@ impl Engine {
         self.retire_phase(sched, &mut outputs);
         let occupancy = sched.running();
         if occupancy == 0 {
+            self.stamp_kv_gauges(sched);
             self.note_outputs(&outputs);
             return Ok(outputs);
         }
@@ -378,6 +403,7 @@ impl Engine {
             // retired pre-decode must not be lost).
             eprintln!("decode step failed: {e:#}");
             Self::fail_in_place(sched, self.n_layer, &mut outputs);
+            self.stamp_kv_gauges(sched);
             self.note_outputs(&outputs);
             return Ok(outputs);
         }
@@ -386,7 +412,8 @@ impl Engine {
         // Keep the live counters coherent for step-driven observers
         // (`wall_s` is only meaningful for the generate_batch window).
         self.run.generated_tokens = self.meter.tokens();
-        self.run.peak_pool_bytes = self.pool.peak();
+        self.run.peak_pool_bytes = self.pool().peak();
+        self.stamp_kv_gauges(sched);
         self.note_outputs(&outputs);
         Ok(outputs)
     }
@@ -456,7 +483,7 @@ impl Engine {
     /// Terminal lifecycle transitions decided at the step boundary:
     /// cancelled requests and expired deadlines leave the queue, the decode
     /// slots, and the suspended set. Dropping the slot or suspended state
-    /// releases its device/host reservation (RAII), so a cancel while
+    /// releases its device/host pages (RAII), so a cancel while
     /// swapped out frees the host tier directly — no swap-in. Partial
     /// generations are preserved in the outputs.
     fn lifecycle_phase(&mut self, sched: &mut Scheduler, outputs: &mut Vec<RequestOutput>) {
@@ -518,15 +545,16 @@ impl Engine {
                 None => break,
             };
             let running = sched.running();
-            if self.pool.capacity() > 0 && running > 0 {
-                // `est` upper-bounds the admission cache (Jensen: the plan's
+            if self.pool().capacity() > 0 && running > 0 {
+                // `est` approximates the admission cache (the plan's
                 // per-layer min(budget, prompt) sum never exceeds the
-                // uniform estimate), so deferring on it never starves a
-                // request that would fit — and avoids a wasted prefill per
-                // step while the pool is saturated. Terminal Oom decisions
-                // are made only by the plan-aware predicted-peak check in
-                // `admit`, once the batch has drained.
-                let available = self.pool.capacity().saturating_sub(self.pool.in_use());
+                // uniform estimate byte-wise; page rounding can nudge it
+                // either way by tail-page slack), so deferring on it avoids
+                // a wasted prefill per step while the pool is saturated.
+                // Terminal Oom decisions are made only by the plan-aware
+                // predicted-peak check in `admit`, once the batch has
+                // drained.
+                let available = self.pool().capacity().saturating_sub(self.pool().in_use());
                 if est > available {
                     sched.metrics.deferred_admissions += 1;
                     break;
@@ -583,11 +611,7 @@ impl Engine {
                     );
                     lifecycle::emit(
                         &s.req.events,
-                        RequestEvent::Token {
-                            id: s.req.id,
-                            token: s.snapshot.last_token,
-                            pos: 0,
-                        },
+                        RequestEvent::Token { id: s.req.id, token: s.snapshot.last_token, pos: 0 },
                     );
                     lifecycle::emit(&s.req.events, RequestEvent::Suspended { id: s.req.id });
                     self.note_swap_out(sched);
@@ -598,35 +622,47 @@ impl Engine {
     }
 
     /// Swap the front suspended sequence back into a decode slot: migrate
-    /// its bytes host→device, restore the snapshot, and continue decoding
+    /// its pages host→device, restore the snapshot, and continue decoding
     /// from `next_pos` — no prefill, partial output kept. Returns false when
     /// the device tier lacks headroom (caller defers).
     fn try_resume(&mut self, sched: &mut Scheduler) -> bool {
-        let bytes = match sched.peek_suspended() {
-            Some(s) => s.host_reservation.bytes(),
+        let needed = match sched.peek_suspended() {
+            Some(s) => {
+                // Headroom must cover the next decode step's page growth
+                // too, or a barely-fitting resume is immediately
+                // re-preempted — burning a swap cycle (and a decode slot)
+                // per step with zero progress. Admission's predicted-peak
+                // check guarantees budget+1 rows per layer fit an empty
+                // pool, so this can never wedge a sequence.
+                let n = s.snapshot.cache.n_layer();
+                let mut lens = Vec::with_capacity(n);
+                for layer in 0..n {
+                    lens.push(s.snapshot.cache.layer_len(layer) + 1);
+                }
+                s.table.migratable_bytes(Tier::Device) + s.table.grow_bytes_for(&lens)
+            }
             None => return false,
         };
-        if self.pool.capacity() > 0 {
-            // Headroom must cover the next decode step's growth too, or a
-            // barely-fitting resume is immediately re-preempted — burning a
-            // swap cycle (and a decode slot) per step with zero progress.
-            // Admission's predicted-peak check guarantees budget+1 rows per
-            // layer fit an empty pool, so this can never wedge a sequence.
-            let needed = bytes + self.n_layer * SequenceCache::token_bytes(self.row_elems);
-            let available = self.pool.capacity().saturating_sub(self.pool.in_use());
+        if self.pool().capacity() > 0 {
+            let available = self.pool().capacity().saturating_sub(self.pool().in_use());
             if needed > available {
                 return false;
             }
         }
         let mut s = sched.pop_suspended().expect("peeked entry exists");
-        if s.host_reservation.migrate(Tier::Device).is_err() {
-            // The headroom vanished between check and migrate (engine is
-            // single-threaded, so this is defensive only).
-            sched.suspend(s);
-            return false;
+        match s.table.migrate(Tier::Device) {
+            Ok(pages) => {
+                sched.metrics.swap_ins += 1;
+                sched.metrics.restarts_avoided += 1;
+                sched.metrics.pages_swapped_in += pages as u64;
+            }
+            Err(_) => {
+                // The headroom vanished between check and migrate (engine is
+                // single-threaded, so this is defensive only).
+                sched.suspend(s);
+                return false;
+            }
         }
-        sched.metrics.swap_ins += 1;
-        sched.metrics.restarts_avoided += 1;
         let a = s.into_active();
         lifecycle::emit(&a.req.events, RequestEvent::Resumed { id: a.req.id });
         sched.place(a);
@@ -638,18 +674,51 @@ impl Engine {
     fn note_swap_out(&self, sched: &mut Scheduler) {
         sched.metrics.swap_outs += 1;
         sched.metrics.host_bytes_peak =
-            sched.metrics.host_bytes_peak.max(self.pool.peak_of(Tier::Host));
+            sched.metrics.host_bytes_peak.max(self.pool().peak_of(Tier::Host));
+    }
+
+    /// Refresh the paged-KV gauges exported with the scheduler metrics:
+    /// allocated vs used bytes per tier (the gap is tail-page
+    /// fragmentation), shared/COW page counts, and absorbed accounting
+    /// faults.
+    fn stamp_kv_gauges(&self, sched: &mut Scheduler) {
+        let token_bytes = SequenceCache::token_bytes(self.row_elems);
+        let mut dev_used = 0;
+        for a in sched.slots.iter().flatten() {
+            dev_used += a.cache.bytes();
+        }
+        let mut host_used = 0;
+        for s in &sched.suspended {
+            host_used += s.snapshot.cache.total_tokens() * token_bytes;
+        }
+        sched.metrics.kv_alloc_bytes = self.paged.allocated_bytes_of(Tier::Device);
+        sched.metrics.kv_used_bytes = dev_used;
+        sched.metrics.host_alloc_bytes = self.paged.allocated_bytes_of(Tier::Host);
+        sched.metrics.host_used_bytes = host_used;
+        sched.metrics.shared_pages = self.paged.shared_pages();
+        sched.metrics.cow_copies = self.paged.cow_copies() as u64;
+        sched.metrics.accounting_errors = self.pool().accounting_errors() as u64;
+    }
+
+    /// Token rows (slots) per KV page for this model's row width.
+    fn slots_per_page(&self) -> usize {
+        (self.paged.page_bytes() / SequenceCache::token_bytes(self.row_elems)).max(1)
+    }
+
+    /// Pages needed to hold `tokens` rows of one layer.
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.slots_per_page())
     }
 
     /// Bytes the prompt cache will occupy right after admission (prompt
     /// compression applied), estimated without running prefill: per layer at
-    /// most `min(b_init, prompt_len)` tokens. Squeeze reallocation conserves
-    /// the per-layer total, so the uniform estimate is exact up to
-    /// min-budget floors.
+    /// most `min(b_init, prompt_len)` tokens, rounded up to whole pages.
+    /// Squeeze reallocation conserves the per-layer total, so the uniform
+    /// estimate is exact up to min-budget floors and tail-page slack.
     fn estimate_admit_bytes(&self, req: &Request) -> usize {
         let prompt_len = req.prompt.len();
         let b_init = self.budget_spec().resolve(prompt_len, self.max_seq);
-        self.n_layer * b_init.min(prompt_len) * SequenceCache::token_bytes(self.row_elems)
+        self.n_layer * self.pages_for(b_init.min(prompt_len)) * self.paged.page_bytes()
     }
 
     /// New tokens a request can actually generate: `max_new_tokens` clamped
@@ -662,11 +731,14 @@ impl Engine {
 
     /// Peak bytes a sequence can reach under its budget plan: each layer
     /// grows to at most budget+1 rows (append-then-evict overshoot), never
-    /// beyond the final sequence length.
+    /// beyond the final sequence length, rounded up to whole pages.
     fn predicted_peak_bytes(&self, plan: &BudgetPlan, prompt_len: usize, max_new: usize) -> usize {
         let final_len = prompt_len + self.effective_new_tokens(prompt_len, max_new);
-        let tokens: usize = plan.budgets.iter().map(|&b| (b + 1).min(final_len)).sum();
-        tokens * SequenceCache::token_bytes(self.row_elems)
+        let mut pages = 0;
+        for &b in &plan.budgets {
+            pages += self.pages_for((b + 1).min(final_len));
+        }
+        pages * self.paged.page_bytes()
     }
 
     /// Prefill + squeeze + prompt compression. Returns the slot state, or
@@ -773,27 +845,29 @@ impl Engine {
         // Plan-aware growth prediction: a capped pool that cannot hold this
         // sequence even alone means it can never finish — fail fast rather
         // than preempt the world and still OOM.
-        if self.pool.capacity() > 0
+        if self.pool().capacity() > 0
             && self.predicted_peak_bytes(&plan, prompt_len, req.max_new_tokens)
-                > self.pool.capacity()
+                > self.pool().capacity()
         {
             let kv = cache.total_tokens();
             return Err(reject(&req, timing, plan, FinishReason::Oom, kv));
         }
 
-        let reservation = match Reservation::new(&self.pool, cache.bytes()) {
-            Ok(r) => r,
+        let table = match PageTable::for_cache(&self.paged, Tier::Device, &cache) {
+            Ok(t) => t,
             Err(_) if allow_retry => {
                 // Transient device-pool-full. With the host tier enabled,
                 // park the finished prefill as a suspended sequence so the
                 // eventual re-admission is a swap-in, not a second prefill.
+                // The pages are born on the host tier, so the park charges
+                // no migration traffic.
                 if self.swap_enabled() {
-                    if let Ok(host) = Reservation::on(&self.pool, Tier::Host, cache.bytes()) {
+                    if let Ok(host) = PageTable::for_cache(&self.paged, Tier::Host, &cache) {
                         let first = sample(&pre.logits.data, req.sampling, &mut self.rng);
                         timing.first_token_s = t_submit.elapsed().as_secs_f64();
                         let effective_max_new =
                             self.effective_new_tokens(prompt_len, req.max_new_tokens);
-                        let peak = cache.bytes();
+                        let peak = host.bytes();
                         return Err(AdmitError::Suspend(Box::new(Suspended::from_active(
                             Active {
                                 generated: vec![first],
@@ -809,7 +883,7 @@ impl Engine {
                                 req,
                                 cache,
                                 plan,
-                                reservation: host, // already host-tier
+                                table: host, // already host-tier pages
                             },
                         ))));
                     }
@@ -827,7 +901,7 @@ impl Engine {
         timing.first_token_s = t_submit.elapsed().as_secs_f64();
 
         let effective_max_new = self.effective_new_tokens(prompt_len, req.max_new_tokens);
-        let peak = cache.bytes();
+        let peak = table.bytes();
         Ok(Active {
             generated: vec![first],
             next_pos: prompt_len,
@@ -842,25 +916,29 @@ impl Engine {
             req,
             cache,
             plan,
-            reservation,
+            table,
         })
     }
 
     /// Preempt a running sequence to free device bytes: suspend it to the
-    /// host tier (migrate + snapshot — resume continues token-identically)
-    /// when spill is enabled and fits, otherwise requeue its request for a
-    /// restart-from-scratch (dropping the `Active` releases its device
-    /// bytes either way; on migrate only the accounting moves).
+    /// host tier (page-table migrate + snapshot — resume continues
+    /// token-identically) when spill is enabled and fits, otherwise requeue
+    /// its request for a restart-from-scratch (dropping the `Active`
+    /// releases its pages either way; on migrate only page-table entries
+    /// move).
     fn suspend_or_requeue(&mut self, sched: &mut Scheduler, mut a: Active) {
-        if self.swap_enabled() && a.reservation.migrate(Tier::Host).is_ok() {
-            self.note_swap_out(sched);
-            lifecycle::emit(&a.req.events, RequestEvent::Suspended { id: a.req.id });
-            sched.suspend(Suspended::from_active(a));
-        } else {
-            // Host tier full or disabled: restart-from-scratch (prompt
-            // re-prefilled on re-admission, partial output discarded).
-            sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit, restarted: true });
+        if self.swap_enabled() {
+            if let Ok(pages) = a.table.migrate(Tier::Host) {
+                sched.metrics.pages_swapped_out += pages as u64;
+                self.note_swap_out(sched);
+                lifecycle::emit(&a.req.events, RequestEvent::Suspended { id: a.req.id });
+                sched.suspend(Suspended::from_active(a));
+                return;
+            }
         }
+        // Host tier full or disabled: restart-from-scratch (prompt
+        // re-prefilled on re-admission, partial output discarded).
+        sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit, restarted: true });
     }
 
     /// One batched decode step over occupied slots, with OOM resolved by
@@ -923,7 +1001,6 @@ impl Engine {
 
         let vocab = self.runtime.manifest.model.vocab;
         let needs_scores = self.policy.needs_scores();
-        let token_bytes = SequenceCache::token_bytes(self.row_elems);
 
         // Charge, append, sample, and re-compress oldest-first; on OOM
         // preempt the youngest other sequence and retry. The new KV rows are
@@ -945,21 +1022,28 @@ impl Engine {
                 continue; // preempted by an older sequence in this pass
             }
             loop {
-                let new_bytes = sched.slots[idx]
-                    .as_ref()
-                    .expect("checked occupied")
-                    .cache
-                    .bytes()
-                    + self.n_layer * token_bytes;
+                // One more row per layer this step; `grow` charges only the
+                // layers whose new row crosses a page boundary.
+                let (old_lens, new_lens) = {
+                    let a = sched.slots[idx].as_ref().expect("checked occupied");
+                    let mut old = Vec::with_capacity(self.n_layer);
+                    let mut new = Vec::with_capacity(self.n_layer);
+                    for layer in 0..self.n_layer {
+                        let len = a.cache.layer_len(layer);
+                        old.push(len);
+                        new.push(len + 1);
+                    }
+                    (old, new)
+                };
                 if sched.slots[idx]
                     .as_mut()
                     .expect("checked occupied")
-                    .reservation
-                    .resize(new_bytes)
+                    .table
+                    .grow(&old_lens, &new_lens)
                     .is_ok()
                 {
                     let a = sched.slots[idx].as_mut().expect("checked occupied");
-                    a.peak_bytes = a.peak_bytes.max(new_bytes);
+                    a.peak_bytes = a.peak_bytes.max(a.table.bytes());
                     break;
                 }
                 let victim = if self.cfg.preemption && sched.running() > 1 {
@@ -1009,7 +1093,7 @@ impl Engine {
                 if needs_scores {
                     let sbase = (layer * b + idx) * m;
                     let n = a.cache.layer_len(layer).min(m);
-                    a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n]);
+                    a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n])?;
                 }
             }
 
@@ -1042,7 +1126,13 @@ impl Engine {
             }
             let shrunk = a.cache.bytes();
             if shrunk != grown {
-                let _ = a.reservation.resize(shrunk);
+                let mut lens = Vec::with_capacity(self.n_layer);
+                for layer in 0..self.n_layer {
+                    lens.push(a.cache.layer_len(layer));
+                }
+                // Engine tables are never shared, so shrink cannot COW
+                // (and therefore cannot fail).
+                let _ = a.table.shrink(&lens);
             }
         }
         Ok(())

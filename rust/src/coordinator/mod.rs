@@ -17,7 +17,12 @@
 //!   cooperative `CancelToken`, deadlines, and the `RequestHandle` callers
 //!   observe and cancel through.
 //! * **engine** — prefill, SqueezeAttention budget allocation, per-layer
-//!   eviction, and the batched decode hot path.
+//!   eviction, and the batched decode hot path. KV bytes are owned through
+//!   per-sequence page tables over the paged pool
+//!   (`kvcache::{PageTable, PagedKvPool}`): admission and per-step growth
+//!   allocate whole fixed-size pages (`--kv-page-bytes`), eviction returns
+//!   whole pages, and suspend/resume is a page-table retag that moves only
+//!   private (refcount-1) pages between tiers.
 //! * **scheduler** — the continuous-batching state machine the engine
 //!   steps:
 //!
@@ -49,8 +54,11 @@
 //! *suspended*: its squeezed per-layer cache (plus budget plan, H2O
 //! accumulators, and decode position) migrates to the host-spill tier and
 //! later swaps back in to continue decoding token-identically — no
-//! re-prefill, no discarded output. With the host tier disabled (the
-//! default), preemption degrades to restart-from-scratch requeueing.
+//! re-prefill, no discarded output. Migration is page-granular: the
+//! sequence's page table is re-tagged to the other tier, PCIe traffic is
+//! charged as `page_bytes × pages_moved`, and pages shared with another
+//! sequence stay put. With the host tier disabled (the default),
+//! preemption degrades to restart-from-scratch requeueing.
 //! `Engine::generate_batch` remains as a closed-batch compatibility wrapper
 //! that drains the scheduler.
 //!

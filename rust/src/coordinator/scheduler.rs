@@ -48,15 +48,16 @@
 //!   swap-in.
 //!
 //! The scheduler owns no model state; `Active` carries everything a running
-//! sequence needs (its per-sequence cache, budget plan, and RAII pool
-//! reservation, so dropping an `Active` always releases its bytes), and
+//! sequence needs (its per-sequence cache, budget plan, and RAII page
+//! table, so dropping an `Active` always releases its pages), and
 //! `Suspended` carries the same state frozen into a `SequenceSnapshot` plus
-//! the host-tier reservation that accounts for it while it waits.
+//! the page table — migrated to the host tier — that accounts for it while
+//! it waits. Suspend/resume moves page-table entries, never byte blobs.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::kvcache::{CacheSnapshot, Reservation, SequenceCache};
+use crate::kvcache::{CacheSnapshot, PageTable, SequenceCache};
 use crate::metrics::SchedulerMetrics;
 use crate::squeeze::BudgetPlan;
 
@@ -79,7 +80,10 @@ pub(crate) struct Active {
     pub req: Request,
     pub cache: SequenceCache,
     pub plan: BudgetPlan,
-    pub reservation: Reservation,
+    /// Page-granular accounting for `cache`: every layer's slots mapped
+    /// onto ref-counted pages of the engine's `PagedKvPool` (RAII — drop
+    /// releases the pages).
+    pub table: PageTable,
     pub generated: Vec<i32>,
     /// Absolute position of the *next* token to decode.
     pub next_pos: usize,
@@ -118,27 +122,28 @@ pub(crate) struct SequenceSnapshot {
     pub peak_bytes: usize,
 }
 
-/// A sequence swapped out of the device pool: its snapshot plus the
-/// host-tier reservation accounting for the spilled bytes (RAII — dropping
-/// a `Suspended`, e.g. on a fatal engine fault, releases the host bytes).
+/// A sequence swapped out of the device pool: its snapshot plus its page
+/// table, already migrated to the host tier, accounting for the spilled
+/// pages (RAII — dropping a `Suspended`, e.g. on a fatal engine fault,
+/// releases the host pages).
 pub(crate) struct Suspended {
     pub req: Request,
     pub snapshot: SequenceSnapshot,
-    pub host_reservation: Reservation,
+    pub table: PageTable,
     pub seq: u64,
     pub t_submit: Instant,
     pub t_suspend: Instant,
 }
 
 impl Suspended {
-    /// Freeze a preempted `Active` whose reservation has already been
+    /// Freeze a preempted `Active` whose page table has already been
     /// migrated to the host tier. Inverse of [`Suspended::into_active`].
     pub(crate) fn from_active(a: Active) -> Self {
         let Active {
             req,
             cache,
             plan,
-            reservation,
+            table,
             generated,
             next_pos,
             last_token,
@@ -164,19 +169,19 @@ impl Suspended {
                 timing,
                 peak_bytes,
             },
-            host_reservation: reservation,
+            table,
             seq,
             t_submit,
             t_suspend: Instant::now(),
         }
     }
 
-    /// Thaw back into a running `Active` whose reservation has already been
+    /// Thaw back into a running `Active` whose page table has already been
     /// migrated to the device tier, folding the time spent suspended into
     /// the request's timing. The preserved `seq` keeps the sequence's age —
     /// a resumed sequence is not "young" again for victim selection.
     pub(crate) fn into_active(self) -> Active {
-        let Suspended { req, snapshot, host_reservation, seq, t_submit, t_suspend } = self;
+        let Suspended { req, snapshot, table, seq, t_submit, t_suspend } = self;
         let SequenceSnapshot {
             cache,
             plan,
@@ -194,7 +199,7 @@ impl Suspended {
             req,
             cache: cache.restore(),
             plan,
-            reservation: host_reservation,
+            table,
             generated,
             next_pos,
             last_token,
@@ -366,14 +371,20 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::{KvPool, Tier};
+    use crate::kvcache::{KvPool, PagedKvPool, Tier};
 
-    fn dummy_active(seq: u64, pool: &KvPool) -> Active {
+    /// 64-byte pages over an unlimited pool; token_bytes below is 32, so
+    /// two slots fit one page.
+    fn paged() -> PagedKvPool {
+        PagedKvPool::new(KvPool::unlimited(), 64)
+    }
+
+    fn dummy_active(seq: u64, pool: &PagedKvPool) -> Active {
         Active {
             req: Request::new(seq, vec![1, 2, 3], 4),
             cache: SequenceCache::new(1, 4),
             plan: BudgetPlan::uniform(1, 8),
-            reservation: Reservation::new(pool, 0).unwrap(),
+            table: PageTable::new(pool, Tier::Device, 1, 32),
             generated: vec![],
             next_pos: 3,
             last_token: 1,
@@ -387,8 +398,11 @@ mod tests {
         }
     }
 
-    fn dummy_suspended(seq: u64, pool: &KvPool) -> Suspended {
+    fn dummy_suspended(seq: u64, pool: &PagedKvPool) -> Suspended {
         let now = Instant::now();
+        // One host page charged, as a real swapped-out sequence would hold.
+        let mut table = PageTable::new(pool, Tier::Host, 1, 32);
+        table.grow(&[0], &[1]).unwrap();
         Suspended {
             req: Request::new(seq, vec![1, 2, 3], 4),
             snapshot: SequenceSnapshot {
@@ -403,7 +417,7 @@ mod tests {
                 timing: RequestTiming::default(),
                 peak_bytes: 0,
             },
-            host_reservation: Reservation::on(pool, Tier::Host, 16).unwrap(),
+            table,
             seq,
             t_submit: now,
             t_suspend: now,
@@ -431,7 +445,7 @@ mod tests {
 
     #[test]
     fn place_and_youngest_selection() {
-        let pool = KvPool::unlimited();
+        let pool = paged();
         let mut s = Scheduler::new(3, 0);
         s.place(dummy_active(10, &pool));
         s.place(dummy_active(11, &pool));
@@ -451,7 +465,7 @@ mod tests {
 
     #[test]
     fn suspended_resume_order_is_oldest_first() {
-        let pool = KvPool::unlimited();
+        let pool = paged();
         let mut s = Scheduler::new(2, 0);
         // Preemption order: youngest first — seq 12 suspended before seq 11.
         s.suspend(dummy_suspended(12, &pool));
@@ -465,8 +479,8 @@ mod tests {
         assert_eq!(s.pop_suspended().unwrap().seq, 12);
         assert_eq!(s.metrics().suspended, 0);
         assert!(s.is_idle());
-        // Host bytes released when the Suspended entries dropped.
-        assert_eq!(pool.in_use_of(Tier::Host), 0);
+        // Host pages released when the Suspended entries dropped.
+        assert_eq!(pool.pool().in_use_of(Tier::Host), 0);
     }
 
     #[test]

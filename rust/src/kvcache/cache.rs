@@ -119,12 +119,23 @@ impl SequenceCache {
     }
 
     /// Accumulate decode attention mass into slot scores of `layer`.
-    /// `scores[i]` corresponds to slot `i`; extra entries (padding) ignored.
-    pub fn add_scores(&mut self, layer: usize, scores: &[f32]) {
+    /// `scores[i]` corresponds to slot `i`; extra entries (padding) are
+    /// ignored, but a slice *shorter* than the slot count is a hard error —
+    /// silently leaving newer slots unscored would skew H2O heavy-hitter
+    /// ranking toward old tokens.
+    pub fn add_scores(&mut self, layer: usize, scores: &[f32]) -> Result<()> {
         let lc = &mut self.layers[layer];
+        if scores.len() < lc.meta.len() {
+            return Err(anyhow!(
+                "layer {layer}: {} scores for {} slots — newer slots would go unscored",
+                scores.len(),
+                lc.meta.len()
+            ));
+        }
         for (slot, &s) in lc.meta.iter_mut().zip(scores.iter()) {
             slot.score += s as f64;
         }
+        Ok(())
     }
 
     /// Keep exactly the slots in `keep` (sorted ascending, in-range, unique)
@@ -180,7 +191,12 @@ impl SequenceCache {
     ) -> Result<()> {
         let (n_layer, bsz, m) = (k_buf.shape[0], k_buf.shape[1], k_buf.shape[2]);
         let row = self.row_elems;
-        debug_assert_eq!(k_buf.shape[3] * k_buf.shape.get(4).copied().unwrap_or(1), row);
+        let buf_row = k_buf.shape[3] * k_buf.shape.get(4).copied().unwrap_or(1);
+        if buf_row != row {
+            // A mis-shaped buffer would copy rows at wrong offsets and feed
+            // the kernel scrambled KV — hard error, not a debug assert.
+            return Err(anyhow!("batch buffer row width {buf_row} != cache row width {row}"));
+        }
         if self.n_layer() != n_layer || b >= bsz {
             return Err(anyhow!("batch buffer mismatch"));
         }
@@ -221,6 +237,20 @@ impl CacheSnapshot {
         self.layers.iter().map(|l| l.len()).sum()
     }
 
+    pub fn n_layer(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Slots held by `layer` — page-indexed resume needs per-layer lengths
+    /// to rebuild the page table and size the exact first-append headroom.
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.layers[layer].len()
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
     /// Thaw back into a live cache for swap-in.
     pub fn restore(self) -> SequenceCache {
         SequenceCache { layers: self.layers, row_elems: self.row_elems }
@@ -255,10 +285,39 @@ mod tests {
         let mut c = SequenceCache::new(1, 4);
         c.append(0, &[1.0; 4], &[2.0; 4], 0).unwrap();
         c.append(0, &[3.0; 4], &[4.0; 4], 1).unwrap();
-        c.add_scores(0, &[0.25, 0.75, 99.0]); // padding entry ignored
+        c.add_scores(0, &[0.25, 0.75, 99.0]).unwrap(); // padding entry ignored
         assert_eq!(c.layers[0].meta[0].score, 0.25);
         assert_eq!(c.layers[0].meta[1].score, 0.75);
         assert!(c.append(0, &[0.0; 3], &[0.0; 3], 2).is_err());
+    }
+
+    #[test]
+    fn add_scores_rejects_short_slice() {
+        // Regression: a short slice used to be silently zipped, leaving the
+        // newest slots unscored and skewing H2O ranking. Now a hard error,
+        // and no partial accumulation happens.
+        let mut c = SequenceCache::new(1, 4);
+        for i in 0..3 {
+            c.append(0, &[0.0; 4], &[0.0; 4], i).unwrap();
+        }
+        assert!(c.add_scores(0, &[0.5, 0.5]).is_err());
+        assert!(c.layers[0].meta.iter().all(|m| m.score == 0.0));
+        // Exact-length and padded slices still work.
+        c.add_scores(0, &[0.1, 0.2, 0.3]).unwrap();
+        c.add_scores(0, &[0.1, 0.2, 0.3, 9.0]).unwrap();
+        assert!((c.layers[0].meta[2].score - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn write_into_batch_rejects_wrong_row_width() {
+        // Regression: the row-width check was a debug_assert, so release
+        // builds copied rows at wrong offsets. Now a hard error.
+        let (k, v) = mk_prefill(2, 4, 1, 2);
+        let c = SequenceCache::from_prefill(&k, &v, 3).unwrap();
+        let mut kb = Tensor::zeros(&[2, 2, 6, 1, 3]); // row width 3 != 2
+        let mut vb = Tensor::zeros(&[2, 2, 6, 1, 3]);
+        let mut lens = vec![0i32; 4];
+        assert!(c.write_into_batch(&mut kb, &mut vb, &mut lens, 1).is_err());
     }
 
     #[test]
@@ -309,13 +368,17 @@ mod tests {
         c.append(0, &[1.0; 3], &[2.0; 3], 0).unwrap();
         c.append(0, &[3.0; 3], &[4.0; 3], 1).unwrap();
         c.append(1, &[5.0; 3], &[6.0; 3], 0).unwrap();
-        c.add_scores(0, &[0.5, 0.25]);
+        c.add_scores(0, &[0.5, 0.25]).unwrap();
         let bytes = c.bytes();
         let k0 = c.layers[0].k.clone();
         let meta0 = c.layers[0].meta.clone();
         let snap = c.snapshot();
         assert_eq!(snap.bytes(), bytes);
         assert_eq!(snap.total_tokens(), 3);
+        assert_eq!(snap.n_layer(), 2);
+        assert_eq!(snap.layer_len(0), 2);
+        assert_eq!(snap.layer_len(1), 1);
+        assert_eq!(snap.row_elems(), 3);
         let back = snap.restore();
         assert_eq!(back.bytes(), bytes);
         assert_eq!(back.layers[0].k, k0);

@@ -1,11 +1,15 @@
 //! KV-cache substrate: per-sequence 2-D caches (layer × token), the global
 //! two-tier byte pool (device HBM stand-in + host spill for suspended
-//! sequences), and the sequence-wise eviction policies.
+//! sequences), the page-granular allocator that quantizes both tiers into
+//! ref-counted pages (copy-on-write prefix sharing, page-table migration),
+//! and the sequence-wise eviction policies.
 
 pub mod cache;
 pub mod eviction;
+pub mod paging;
 pub mod pool;
 
 pub use cache::{CacheSnapshot, LayerCache, SequenceCache, SlotMeta};
 pub use eviction::{make_policy, EvictionPolicy, FullCache, H2o, SlidingWindow, StreamingLlm};
+pub use paging::{PageId, PageTable, PagedKvPool};
 pub use pool::{KvPool, OutOfMemory, Reservation, Tier};

@@ -1,0 +1,694 @@
+//! Paged KV allocator: fixed-size, ref-counted pages behind per-sequence
+//! page tables, with copy-on-write prefix sharing.
+//!
+//! SqueezeAttention's layer-wise budgets make per-layer KV lengths
+//! deliberately uneven, so byte-granular contiguous reservations fragment
+//! and every preemption swaps the whole blob. This module quantizes the
+//! two-tier [`KvPool`](super::KvPool) into pages (vLLM-style blocks):
+//!
+//! * [`PagedKvPool`] wraps a `KvPool` and owns the page registry — every
+//!   live page has a [`PageId`], a tier, and a refcount. Allocating a page
+//!   charges `page_bytes` to its tier; freeing the last reference releases
+//!   them. The underlying `KvPool` stays the single source of byte
+//!   accounting (and of OOM), so all existing conservation invariants keep
+//!   holding.
+//! * [`PageTable`] maps one sequence's (layer, slot-range) pairs onto
+//!   pages: layer `l`, slots `[i*spp, (i+1)*spp)` live in the i-th page of
+//!   that layer (`spp` = slots per page). Growth and eviction move the
+//!   table in whole-page steps; suspend/resume ([`PageTable::migrate`]) is
+//!   a page-table edit that charges PCIe traffic for exactly the pages
+//!   that change tier.
+//! * `share_prefix` lets a second sequence reference the *full* pages of a
+//!   prompt prefix by bumping refcounts — the shared bytes are charged
+//!   once. Copy-on-write triggers on the first divergent write: appending
+//!   into, or evicting/compacting, a shared page first re-homes that range
+//!   onto a fresh private page (`cow_copies` counts these).
+//!
+//! The payload rows themselves still live in `SequenceCache` vectors (the
+//! sim runtime is host-memory); the page table is the accounting and
+//! placement layer a real block allocator would index into device HBM.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::cache::SequenceCache;
+use super::pool::{KvPool, OutOfMemory, Tier};
+
+/// Opaque handle to one fixed-size page in a [`PagedKvPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageId(u64);
+
+#[derive(Debug)]
+struct PageState {
+    tier: Tier,
+    refs: usize,
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    next_id: u64,
+    pages: HashMap<u64, PageState>,
+    /// Live pages per tier (indexed Device=0, Host=1).
+    tier_pages: [usize; 2],
+    /// Gauge: pages currently referenced by more than one table.
+    shared_pages: usize,
+    /// Cumulative copy-on-write privatizations.
+    cow_copies: usize,
+    /// Cumulative pages ever allocated / fully freed.
+    pages_allocated: usize,
+    pages_freed: usize,
+}
+
+fn tier_idx(t: Tier) -> usize {
+    match t {
+        Tier::Device => 0,
+        Tier::Host => 1,
+    }
+}
+
+#[derive(Debug)]
+struct PagedInner {
+    pool: KvPool,
+    page_bytes: usize,
+    reg: Mutex<Registry>,
+}
+
+/// Page-granular allocator over a two-tier [`KvPool`]. Cloning shares the
+/// registry and the underlying byte accounting.
+#[derive(Debug, Clone)]
+pub struct PagedKvPool {
+    inner: Arc<PagedInner>,
+}
+
+impl PagedKvPool {
+    /// Wrap `pool`, carving reservations into `page_bytes`-sized pages
+    /// (clamped to at least 1 byte).
+    pub fn new(pool: KvPool, page_bytes: usize) -> Self {
+        Self {
+            inner: Arc::new(PagedInner {
+                pool,
+                page_bytes: page_bytes.max(1),
+                reg: Mutex::new(Registry::default()),
+            }),
+        }
+    }
+
+    /// The underlying byte-accounted pool (capacities, in-use, peaks, OOM
+    /// and migration-traffic counters all live there).
+    pub fn pool(&self) -> &KvPool {
+        &self.inner.pool
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.inner.page_bytes
+    }
+
+    fn reg(&self) -> MutexGuard<'_, Registry> {
+        self.inner.reg.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Allocate `n` fresh pages on `tier` (refcount 1 each). Atomic: on
+    /// OOM nothing is charged and no page is created.
+    pub fn alloc_pages(&self, tier: Tier, n: usize) -> Result<Vec<PageId>, OutOfMemory> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let bytes = n.checked_mul(self.inner.page_bytes).ok_or(OutOfMemory {
+            tier,
+            requested: usize::MAX,
+            in_use: self.inner.pool.in_use_of(tier),
+            capacity: self.inner.pool.capacity_of(tier),
+        })?;
+        self.inner.pool.reserve_on(tier, bytes)?;
+        let mut reg = self.reg();
+        let mut ids = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = reg.next_id;
+            reg.next_id += 1;
+            reg.pages.insert(id, PageState { tier, refs: 1 });
+            ids.push(PageId(id));
+        }
+        reg.tier_pages[tier_idx(tier)] += n;
+        reg.pages_allocated += n;
+        Ok(ids)
+    }
+
+    /// Add one reference to `id` (prefix sharing). Panics on a dangling id
+    /// — that is a table-logic bug, not a runtime condition.
+    pub fn retain_page(&self, id: PageId) {
+        let mut reg = self.reg();
+        let page = reg.pages.get_mut(&id.0).expect("retain of freed page");
+        page.refs += 1;
+        if page.refs == 2 {
+            reg.shared_pages += 1;
+        }
+    }
+
+    /// Drop one reference to `id`; frees the page (releasing its bytes)
+    /// when the last reference goes. Returns true iff the page was freed.
+    pub fn release_page(&self, id: PageId) -> bool {
+        let mut reg = self.reg();
+        let Some(page) = reg.pages.get_mut(&id.0) else {
+            // Double-free of a page id: count it through the pool's
+            // accounting-error counter rather than corrupting the registry.
+            self.inner.pool.note_accounting_error(Tier::Device);
+            return false;
+        };
+        page.refs -= 1;
+        match page.refs {
+            1 => {
+                reg.shared_pages -= 1;
+                false
+            }
+            0 => {
+                let tier = page.tier;
+                reg.pages.remove(&id.0);
+                reg.tier_pages[tier_idx(tier)] -= 1;
+                reg.pages_freed += 1;
+                drop(reg);
+                self.inner.pool.release_on(tier, self.inner.page_bytes);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Move every page in `ids` whose refcount is 1 to `to`; shared pages
+    /// stay put (another table still addresses them on their tier).
+    /// Atomic: the target tier is charged for all moving pages first, so on
+    /// OOM nothing changes. Returns the number of pages that physically
+    /// moved; migration traffic of `pages_moved * page_bytes` is recorded
+    /// on the underlying pool.
+    pub fn migrate_pages(&self, ids: &[PageId], to: Tier) -> Result<usize, OutOfMemory> {
+        let mut reg = self.reg();
+        let mut moving: Vec<u64> = Vec::new();
+        for id in ids {
+            if let Some(p) = reg.pages.get(&id.0) {
+                if p.refs == 1 && p.tier != to {
+                    moving.push(id.0);
+                }
+            }
+        }
+        if moving.is_empty() {
+            return Ok(0);
+        }
+        let bytes = moving.len() * self.inner.page_bytes;
+        self.inner.pool.reserve_on(to, bytes)?;
+        for id in &moving {
+            let page = reg.pages.get_mut(id).expect("filtered above");
+            let from = page.tier;
+            page.tier = to;
+            reg.tier_pages[tier_idx(from)] -= 1;
+            reg.tier_pages[tier_idx(to)] += 1;
+            self.inner.pool.release_on(from, self.inner.page_bytes);
+        }
+        self.inner.pool.note_migrated(to, bytes);
+        Ok(moving.len())
+    }
+
+    fn note_cow(&self) {
+        self.reg().cow_copies += 1;
+    }
+
+    /// Current refcount of `id`, or None if freed. (Prop-test observability.)
+    pub fn refs_of(&self, id: PageId) -> Option<usize> {
+        self.reg().pages.get(&id.0).map(|p| p.refs)
+    }
+
+    /// Tier `id` currently lives on, or None if freed.
+    pub fn tier_of(&self, id: PageId) -> Option<Tier> {
+        self.reg().pages.get(&id.0).map(|p| p.tier)
+    }
+
+    /// Live (not yet freed) pages across both tiers.
+    pub fn live_pages(&self) -> usize {
+        self.reg().pages.len()
+    }
+
+    /// Live pages on `tier`.
+    pub fn live_pages_of(&self, tier: Tier) -> usize {
+        self.reg().tier_pages[tier_idx(tier)]
+    }
+
+    /// Bytes currently allocated (page-granular) on `tier`.
+    pub fn allocated_bytes_of(&self, tier: Tier) -> usize {
+        self.live_pages_of(tier) * self.inner.page_bytes
+    }
+
+    /// Gauge: pages referenced by ≥ 2 tables right now.
+    pub fn shared_pages(&self) -> usize {
+        self.reg().shared_pages
+    }
+
+    /// Cumulative copy-on-write privatizations.
+    pub fn cow_copies(&self) -> usize {
+        self.reg().cow_copies
+    }
+
+    /// Cumulative pages ever allocated.
+    pub fn pages_allocated(&self) -> usize {
+        self.reg().pages_allocated
+    }
+
+    /// Cumulative pages fully freed.
+    pub fn pages_freed(&self) -> usize {
+        self.reg().pages_freed
+    }
+}
+
+/// One sequence's mapping of (layer, slot-range) → pages. Layer `l`'s
+/// slots `[i*spp, (i+1)*spp)` live in `layer_pages(l)[i]`. Dropping the
+/// table releases every reference it holds.
+#[derive(Debug)]
+pub struct PageTable {
+    pool: PagedKvPool,
+    /// Home tier: where new pages are allocated and where `migrate` last
+    /// landed the table.
+    tier: Tier,
+    slots_per_page: usize,
+    layers: Vec<Vec<PageId>>,
+}
+
+impl PageTable {
+    /// Empty table for `n_layer` layers whose slots are `token_bytes` wide.
+    /// `slots_per_page = page_bytes / token_bytes` (at least 1 — callers
+    /// should size pages ≥ one token or pages under-charge).
+    pub fn new(pool: &PagedKvPool, tier: Tier, n_layer: usize, token_bytes: usize) -> Self {
+        let spp = (pool.page_bytes() / token_bytes.max(1)).max(1);
+        Self {
+            pool: pool.clone(),
+            tier,
+            slots_per_page: spp,
+            layers: vec![Vec::new(); n_layer],
+        }
+    }
+
+    /// Table covering every layer of `cache`, allocated on `tier`.
+    pub fn for_cache(
+        pool: &PagedKvPool,
+        tier: Tier,
+        cache: &SequenceCache,
+    ) -> Result<Self, OutOfMemory> {
+        let token_bytes = SequenceCache::token_bytes(cache.row_elems);
+        let mut table = Self::new(pool, tier, cache.n_layer(), token_bytes);
+        let lens: Vec<usize> = (0..cache.n_layer()).map(|l| cache.layer_len(l)).collect();
+        let zeros = vec![0; lens.len()];
+        table.grow(&zeros, &lens)?;
+        Ok(table)
+    }
+
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    pub fn slots_per_page(&self) -> usize {
+        self.slots_per_page
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.pool.page_bytes()
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Pages needed to hold `len` slots.
+    pub fn pages_for(&self, len: usize) -> usize {
+        len.div_ceil(self.slots_per_page)
+    }
+
+    /// Pages mapped by `layer`.
+    pub fn layer_pages(&self, layer: usize) -> &[PageId] {
+        &self.layers[layer]
+    }
+
+    /// Total pages mapped across layers.
+    pub fn mapped_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+
+    /// Bytes this table charges its pool: `mapped_pages * page_bytes`.
+    /// (Shared pages are charged to the pool once but appear in every
+    /// sharing table's `bytes()` — the pool, not the table, is the source
+    /// of truth for tier usage.)
+    pub fn bytes(&self) -> usize {
+        self.mapped_pages() * self.pool.page_bytes()
+    }
+
+    /// Bytes a `grow` to `lens` would newly allocate (page deficits only;
+    /// COW copies — absent for unshared tables — not included).
+    pub fn grow_bytes_for(&self, lens: &[usize]) -> usize {
+        let mut pages = 0;
+        for (l, mapped) in self.layers.iter().enumerate() {
+            let len = lens.get(l).copied().unwrap_or(0);
+            pages += self.pages_for(len).saturating_sub(mapped.len());
+        }
+        pages * self.pool.page_bytes()
+    }
+
+    /// Grow the table so layer `l` covers `lens[l]` slots, given it
+    /// currently holds `old_lens[l]`. New pages are allocated on the home
+    /// tier; any already-mapped **shared** page the new slots `[old, new)`
+    /// would write into is first privatized (copy-on-write). Atomic: all
+    /// new pages are reserved in one step, so on OOM the table is
+    /// unchanged. Returns pages newly allocated (growth + COW copies).
+    pub fn grow(&mut self, old_lens: &[usize], lens: &[usize]) -> Result<usize, OutOfMemory> {
+        let spp = self.slots_per_page;
+        let mut privatize: Vec<(usize, usize)> = Vec::new(); // (layer, page idx)
+        let mut deficits: Vec<usize> = vec![0; self.layers.len()];
+        for (l, pages) in self.layers.iter().enumerate() {
+            let old = old_lens.get(l).copied().unwrap_or(0);
+            let new = lens.get(l).copied().unwrap_or(0);
+            if new <= old {
+                continue;
+            }
+            deficits[l] = self.pages_for(new).saturating_sub(pages.len());
+            // Already-mapped pages the write range [old, new) touches.
+            let first = old / spp;
+            let last = (new - 1) / spp;
+            for idx in first..=last.min(pages.len().saturating_sub(1)) {
+                if idx < pages.len() && self.pool.refs_of(pages[idx]).unwrap_or(1) > 1 {
+                    privatize.push((l, idx));
+                }
+            }
+        }
+        let total = privatize.len() + deficits.iter().sum::<usize>();
+        if total == 0 {
+            return Ok(0);
+        }
+        let mut fresh = self.pool.alloc_pages(self.tier, total)?.into_iter();
+        for (l, idx) in privatize {
+            let new_id = fresh.next().expect("allocated above");
+            let old_id = std::mem::replace(&mut self.layers[l][idx], new_id);
+            self.pool.release_page(old_id);
+            self.pool.note_cow();
+        }
+        for (l, deficit) in deficits.iter().enumerate() {
+            for _ in 0..*deficit {
+                let id = fresh.next().expect("allocated above");
+                self.layers[l].push(id);
+            }
+        }
+        Ok(total)
+    }
+
+    /// Shrink the table so layer `l` maps exactly `pages_for(lens[l])`
+    /// pages: excess pages are unmapped (freed when this was the last
+    /// reference), and retained **shared** pages are privatized — eviction
+    /// compacts the payload in place, a divergent write the other sharer
+    /// must not observe. Returns pages unmapped. Only the (engine-unused)
+    /// COW path can fail; the unmapping itself is infallible and is
+    /// completed first.
+    pub fn shrink(&mut self, lens: &[usize]) -> Result<usize, OutOfMemory> {
+        let mut unmapped = 0;
+        let mut privatize: Vec<(usize, usize)> = Vec::new();
+        for (l, pages) in self.layers.iter_mut().enumerate() {
+            let keep = lens.get(l).copied().unwrap_or(0).div_ceil(self.slots_per_page);
+            while pages.len() > keep {
+                let id = pages.pop().expect("len checked");
+                self.pool.release_page(id);
+                unmapped += 1;
+            }
+        }
+        for (l, pages) in self.layers.iter().enumerate() {
+            for (idx, &id) in pages.iter().enumerate() {
+                if self.pool.refs_of(id).unwrap_or(1) > 1 {
+                    privatize.push((l, idx));
+                }
+            }
+        }
+        if !privatize.is_empty() {
+            let mut fresh = self.pool.alloc_pages(self.tier, privatize.len())?.into_iter();
+            for (l, idx) in privatize {
+                let new_id = fresh.next().expect("allocated above");
+                let old_id = std::mem::replace(&mut self.layers[l][idx], new_id);
+                self.pool.release_page(old_id);
+                self.pool.note_cow();
+            }
+        }
+        Ok(unmapped)
+    }
+
+    /// Fork a table for a second sequence sharing this table's prompt
+    /// prefix: the **full** pages of the first `prefix_len` slots of every
+    /// layer are referenced (refcount bump — no new bytes charged); the
+    /// partial tail page, if any, is not shared. Returns the new table on
+    /// the same home tier; grow it to the new sequence's lengths next.
+    pub fn share_prefix(&self, prefix_len: usize) -> PageTable {
+        let full = prefix_len / self.slots_per_page;
+        let mut layers: Vec<Vec<PageId>> = Vec::with_capacity(self.layers.len());
+        for pages in &self.layers {
+            let mut shared = Vec::new();
+            for &id in &pages[..full.min(pages.len())] {
+                self.pool.retain_page(id);
+                shared.push(id);
+            }
+            layers.push(shared);
+        }
+        PageTable {
+            pool: self.pool.clone(),
+            tier: self.tier,
+            slots_per_page: self.slots_per_page,
+            layers,
+        }
+    }
+
+    /// Bytes that would physically move on `migrate` (unshared pages only).
+    pub fn migratable_bytes(&self, to: Tier) -> usize {
+        let mut pages = 0;
+        for &id in self.layers.iter().flatten() {
+            if self.pool.refs_of(id) == Some(1) && self.pool.tier_of(id) != Some(to) {
+                pages += 1;
+            }
+        }
+        pages * self.pool.page_bytes()
+    }
+
+    /// Suspend/resume as a page-table edit: move every unshared page to
+    /// `to` (shared pages stay put), charging migration traffic of exactly
+    /// `page_bytes * pages_moved`. Atomic on OOM. Returns pages moved.
+    pub fn migrate(&mut self, to: Tier) -> Result<usize, OutOfMemory> {
+        let ids: Vec<PageId> = self.layers.iter().flatten().copied().collect();
+        let moved = self.pool.migrate_pages(&ids, to)?;
+        self.tier = to;
+        Ok(moved)
+    }
+}
+
+impl Drop for PageTable {
+    fn drop(&mut self) {
+        for pages in &self.layers {
+            for &id in pages {
+                self.pool.release_page(id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paged(device: usize, host: usize, page_bytes: usize) -> PagedKvPool {
+        PagedKvPool::new(KvPool::tiered(device, host), page_bytes)
+    }
+
+    /// 4 slots per page: token_bytes 16, page_bytes 64.
+    fn table(pool: &PagedKvPool, n_layer: usize) -> PageTable {
+        PageTable::new(pool, Tier::Device, n_layer, 16)
+    }
+
+    #[test]
+    fn grow_and_shrink_in_page_steps() {
+        let pool = paged(0, 0, 64);
+        let mut t = table(&pool, 2);
+        assert_eq!(t.slots_per_page(), 4);
+        // 1 slot on each layer -> one page each.
+        assert_eq!(t.grow(&[0, 0], &[1, 1]).unwrap(), 2);
+        assert_eq!(t.bytes(), 128);
+        assert_eq!(pool.pool().in_use(), 128);
+        // Growing within the page allocates nothing.
+        assert_eq!(t.grow(&[1, 1], &[4, 2]).unwrap(), 0);
+        // Crossing the boundary allocates exactly the deficit.
+        assert_eq!(t.grow(&[4, 2], &[5, 9]).unwrap(), 1 + 2);
+        assert_eq!(t.layer_pages(0).len(), 2);
+        assert_eq!(t.layer_pages(1).len(), 3);
+        // Shrink frees whole pages only.
+        assert_eq!(t.shrink(&[5, 3]).unwrap(), 2);
+        assert_eq!(t.mapped_pages(), 3);
+        assert_eq!(pool.pool().in_use(), 3 * 64);
+        drop(t);
+        assert_eq!(pool.pool().in_use(), 0);
+        assert_eq!(pool.live_pages(), 0);
+        assert_eq!(pool.pages_allocated(), pool.pages_freed());
+    }
+
+    #[test]
+    fn grow_oom_is_atomic() {
+        let pool = paged(2 * 64, 0, 64);
+        let mut t = table(&pool, 1);
+        t.grow(&[0], &[4]).unwrap();
+        // Needs 2 more pages, only 1 fits: nothing must change.
+        assert!(t.grow(&[4], &[12]).is_err());
+        assert_eq!(t.mapped_pages(), 1);
+        assert_eq!(pool.pool().in_use(), 64);
+        assert_eq!(pool.pool().oom_events(), 1);
+        // The single-page grow still succeeds afterwards.
+        t.grow(&[4], &[5]).unwrap();
+        assert_eq!(t.mapped_pages(), 2);
+    }
+
+    #[test]
+    fn share_prefix_charges_shared_pages_once() {
+        let pool = paged(0, 0, 64);
+        let mut a = table(&pool, 2);
+        a.grow(&[0, 0], &[10, 10]).unwrap(); // 3 pages/layer (slots 0..10)
+        let base = pool.pool().in_use();
+        assert_eq!(base, 6 * 64);
+
+        // Share the 8-slot prefix: 2 full pages per layer, charged once.
+        let mut b = a.share_prefix(8);
+        assert_eq!(b.mapped_pages(), 4);
+        assert_eq!(pool.pool().in_use(), base, "sharing must not charge new bytes");
+        assert_eq!(pool.shared_pages(), 4);
+        for l in 0..2 {
+            assert_eq!(a.layer_pages(l)[..2], b.layer_pages(l)[..2]);
+            for &id in &b.layer_pages(l)[..2] {
+                assert_eq!(pool.refs_of(id), Some(2));
+            }
+        }
+
+        // b grows past the shared prefix: fresh private pages only.
+        b.grow(&[8, 8], &[10, 10]).unwrap();
+        assert_eq!(pool.pool().in_use(), base + 2 * 64);
+        assert_eq!(pool.cow_copies(), 0, "append past full shared pages needs no COW");
+
+        // Dropping b releases only b's references.
+        drop(b);
+        assert_eq!(pool.pool().in_use(), base);
+        assert_eq!(pool.shared_pages(), 0);
+        drop(a);
+        assert_eq!(pool.pool().in_use(), 0);
+    }
+
+    #[test]
+    fn eviction_in_shared_page_privatizes() {
+        let pool = paged(0, 0, 64);
+        let mut a = table(&pool, 1);
+        a.grow(&[0], &[8]).unwrap(); // 2 full pages
+        let b = a.share_prefix(8);
+        assert_eq!(pool.shared_pages(), 2);
+        let shared_ids: Vec<PageId> = a.layer_pages(0).to_vec();
+
+        // a evicts down to 3 slots: page 1 unmapped, page 0 retained but
+        // compaction rewrites it -> COW privatize.
+        assert_eq!(a.shrink(&[3]).unwrap(), 1);
+        assert_eq!(pool.cow_copies(), 1);
+        assert_ne!(a.layer_pages(0)[0], shared_ids[0], "retained shared page must be re-homed");
+        // b still holds both original pages, now unshared.
+        assert_eq!(pool.refs_of(shared_ids[0]), Some(1));
+        assert_eq!(pool.refs_of(shared_ids[1]), Some(1));
+        assert_eq!(pool.shared_pages(), 0);
+        // Bytes: b's 2 pages + a's 1 private copy.
+        assert_eq!(pool.pool().in_use(), 3 * 64);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.pool().in_use(), 0);
+    }
+
+    #[test]
+    fn append_into_shared_partial_page_privatizes() {
+        // share_prefix only shares full pages, but a table can also end up
+        // appending into a shared page after the sharer grew it — exercise
+        // the grow-side COW directly by sharing then shrinking the source.
+        let pool = paged(0, 0, 64);
+        let mut a = table(&pool, 1);
+        a.grow(&[0], &[8]).unwrap();
+        let mut b = a.share_prefix(8);
+        let shared = b.layer_pages(0)[1];
+        // b evicts to 6 slots: both pages retained + shared -> both COW.
+        b.shrink(&[6]).unwrap();
+        assert_eq!(pool.cow_copies(), 2);
+        assert_eq!(pool.shared_pages(), 0);
+        // ...then appends within its now-private page 1: no further COW.
+        b.grow(&[6], &[7]).unwrap();
+        assert_eq!(pool.cow_copies(), 2);
+        assert_eq!(pool.refs_of(shared), Some(1), "a's copy is private again");
+        drop(a);
+        drop(b);
+        assert_eq!(pool.live_pages(), 0);
+    }
+
+    #[test]
+    fn migrate_moves_only_unshared_pages_and_charges_exact_traffic() {
+        let pool = paged(0, 0, 64);
+        let mut a = table(&pool, 2);
+        a.grow(&[0, 0], &[8, 8]).unwrap(); // 4 pages
+        let b = a.share_prefix(4); // 1 page/layer shared
+        assert_eq!(pool.shared_pages(), 2);
+
+        // a suspends to host: only its 2 unshared pages move.
+        assert_eq!(a.migratable_bytes(Tier::Host), 2 * 64);
+        let moved = a.migrate(Tier::Host).unwrap();
+        assert_eq!(moved, 2);
+        // Traffic charged = page_bytes * pages_moved, nothing more.
+        assert_eq!(pool.pool().migrated_into(Tier::Host), 2 * 64);
+        assert_eq!(pool.pool().in_use_of(Tier::Host), 2 * 64);
+        assert_eq!(pool.pool().in_use_of(Tier::Device), 4 * 64, "b's pages + shared pages stay");
+        // Shared pages stayed on device.
+        for l in 0..2 {
+            assert_eq!(pool.tier_of(a.layer_pages(l)[0]), Some(Tier::Device));
+            assert_eq!(pool.tier_of(a.layer_pages(l)[1]), Some(Tier::Host));
+        }
+
+        // Resume: the same 2 pages move back.
+        let back = a.migrate(Tier::Device).unwrap();
+        assert_eq!(back, 2);
+        assert_eq!(pool.pool().migrated_into(Tier::Device), 2 * 64);
+        assert_eq!(pool.pool().in_use_of(Tier::Host), 0);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.pool().in_use(), 0);
+    }
+
+    #[test]
+    fn migrate_oom_changes_nothing() {
+        let pool = paged(0, 64, 64); // host fits one page
+        let mut t = table(&pool, 1);
+        t.grow(&[0], &[8]).unwrap(); // 2 pages
+        let err = t.migrate(Tier::Host).unwrap_err();
+        assert_eq!(err.tier, Tier::Host);
+        assert_eq!(t.tier(), Tier::Device);
+        assert_eq!(pool.pool().in_use_of(Tier::Device), 2 * 64);
+        assert_eq!(pool.pool().in_use_of(Tier::Host), 0);
+        assert_eq!(pool.pool().migrated_total(), 0);
+    }
+
+    #[test]
+    fn for_cache_quantizes_per_layer_lengths() {
+        let pool = paged(0, 0, 64);
+        // row_elems 2 -> token_bytes 16 -> 4 slots/page.
+        let mut cache = SequenceCache::new(3, 2);
+        for l in 0..3 {
+            for i in 0..(l * 3 + 1) {
+                cache.append(l, &[0.0; 2], &[0.0; 2], i as u32).unwrap();
+            }
+        }
+        // Lens 1, 4, 7 -> 1 + 1 + 2 pages.
+        let t = PageTable::for_cache(&pool, Tier::Device, &cache).unwrap();
+        assert_eq!(t.layer_pages(0).len(), 1);
+        assert_eq!(t.layer_pages(1).len(), 1);
+        assert_eq!(t.layer_pages(2).len(), 2);
+        assert_eq!(t.bytes(), 4 * 64);
+        assert_eq!(t.grow_bytes_for(&[5, 5, 8]), 2 * 64);
+        assert_eq!(pool.allocated_bytes_of(Tier::Device), 4 * 64);
+    }
+
+    #[test]
+    fn tiny_pages_clamp_to_one_slot() {
+        let pool = paged(0, 0, 8); // page smaller than a 16-byte token
+        let t = PageTable::new(&pool, Tier::Device, 1, 16);
+        assert_eq!(t.slots_per_page(), 1);
+    }
+}

@@ -11,6 +11,11 @@
 //! do. Migrations additionally accumulate per-direction traffic counters
 //! (`migrated_into`) so the simulator cost model can price the PCIe
 //! transfers a real swap would perform.
+//!
+//! This module is the byte-accounting substrate; the serving engine charges
+//! it through the page-granular allocator in [`super::paging`], which maps
+//! each sequence's per-layer slot ranges onto ref-counted fixed-size pages
+//! (copy-on-write prefix sharing, page-table-only migration).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -70,6 +75,10 @@ struct TierState {
     in_use: AtomicUsize,
     peak: AtomicUsize,
     oom_events: AtomicUsize,
+    /// Release-underflow events (double-release / release-without-reserve).
+    /// The release saturates at 0 instead of wrapping, and this counter
+    /// makes the bug observable through metrics.
+    accounting_errors: AtomicUsize,
 }
 
 impl TierState {
@@ -79,6 +88,7 @@ impl TierState {
             in_use: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
             oom_events: AtomicUsize::new(0),
+            accounting_errors: AtomicUsize::new(0),
         }
     }
 }
@@ -139,6 +149,16 @@ impl KvPool {
         self.tier(tier).oom_events.load(Ordering::Relaxed)
     }
 
+    /// Release-underflow events recorded on `tier` (see `release_on`).
+    pub fn accounting_errors_of(&self, tier: Tier) -> usize {
+        self.tier(tier).accounting_errors.load(Ordering::Relaxed)
+    }
+
+    /// Total release-underflow events across both tiers.
+    pub fn accounting_errors(&self) -> usize {
+        self.accounting_errors_of(Tier::Device) + self.accounting_errors_of(Tier::Host)
+    }
+
     /// Cumulative bytes migrated *into* `tier` (swap traffic in that
     /// direction: into `Host` = swap-outs, into `Device` = swap-ins).
     pub fn migrated_into(&self, tier: Tier) -> usize {
@@ -172,26 +192,43 @@ impl KvPool {
     }
 
     /// Reserve `bytes` on `tier`; fails atomically with `OutOfMemory` when
-    /// the tier is capped and the bytes do not fit.
+    /// the tier is capped and the bytes do not fit. All arithmetic is
+    /// checked: a request so large that `in_use + bytes` would wrap `usize`
+    /// is an OOM, never a wrap-around that corrupts accounting.
     pub fn reserve_on(&self, tier: Tier, bytes: usize) -> Result<(), OutOfMemory> {
         let t = self.tier(tier);
         if t.capacity == 0 {
-            let now = t.in_use.fetch_add(bytes, Ordering::Relaxed) + bytes;
-            t.peak.fetch_max(now, Ordering::Relaxed);
-            return Ok(());
+            // Unlimited tier: still refuse an overflowing add — a wrapped
+            // `in_use` would report near-zero usage with the pool full.
+            let updated = t
+                .in_use
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| cur.checked_add(bytes));
+            return match updated {
+                Ok(prev) => {
+                    t.peak.fetch_max(prev + bytes, Ordering::Relaxed);
+                    Ok(())
+                }
+                Err(cur) => {
+                    t.oom_events.fetch_add(1, Ordering::Relaxed);
+                    Err(OutOfMemory { tier, requested: bytes, in_use: cur, capacity: 0 })
+                }
+            };
         }
         let mut cur = t.in_use.load(Ordering::Relaxed);
         loop {
-            let next = cur + bytes;
-            if next > t.capacity {
-                t.oom_events.fetch_add(1, Ordering::Relaxed);
-                return Err(OutOfMemory {
-                    tier,
-                    requested: bytes,
-                    in_use: cur,
-                    capacity: t.capacity,
-                });
-            }
+            let next = match cur.checked_add(bytes) {
+                Some(next) if next <= t.capacity => next,
+                _ => {
+                    // Overflow or over-capacity: both mean "does not fit".
+                    t.oom_events.fetch_add(1, Ordering::Relaxed);
+                    return Err(OutOfMemory {
+                        tier,
+                        requested: bytes,
+                        in_use: cur,
+                        capacity: t.capacity,
+                    });
+                }
+            };
             match t.in_use.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
                 Ok(_) => {
                     t.peak.fetch_max(next, Ordering::Relaxed);
@@ -202,14 +239,35 @@ impl KvPool {
         }
     }
 
-    /// Release previously reserved bytes on `tier`.
+    /// Release previously reserved bytes on `tier`. A release larger than
+    /// the current `in_use` (double-release or release-without-reserve)
+    /// saturates at 0 instead of wrapping to ~`usize::MAX` — which would
+    /// permanently brick admission — and bumps `accounting_errors` so the
+    /// bug stays observable through metrics.
     pub fn release_on(&self, tier: Tier, bytes: usize) {
-        let prev = self.tier(tier).in_use.fetch_sub(bytes, Ordering::Relaxed);
-        debug_assert!(
-            prev >= bytes,
-            "{} pool release underflow: {prev} - {bytes}",
-            tier.name()
-        );
+        let t = self.tier(tier);
+        let res = t.in_use.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+            Some(cur.saturating_sub(bytes))
+        });
+        if let Ok(prev) = res {
+            if prev < bytes {
+                t.accounting_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record an accounting fault detected by a caller (e.g. the paged
+    /// allocator seeing a double-freed page id) on `tier`'s error counter.
+    pub(crate) fn note_accounting_error(&self, tier: Tier) {
+        self.tier(tier).accounting_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `bytes` of migration traffic into `to` (one PCIe transfer of
+    /// that many bytes). Used by `Reservation::migrate` and by the paged
+    /// allocator, which moves page-table entries and charges only the pages
+    /// that physically change tier.
+    pub(crate) fn note_migrated(&self, to: Tier, bytes: usize) {
+        self.inner.migrated[to.index()].fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Reserve on the device tier (back-compat shorthand).
@@ -274,7 +332,7 @@ impl Reservation {
         }
         self.pool.reserve_on(to, self.bytes)?;
         self.pool.release_on(self.tier, self.bytes);
-        self.pool.inner.migrated[to.index()].fetch_add(self.bytes, Ordering::Relaxed);
+        self.pool.note_migrated(to, self.bytes);
         self.tier = to;
         Ok(())
     }
@@ -387,6 +445,49 @@ mod tests {
         assert_eq!(pool.in_use_of(Tier::Device), 80);
         assert_eq!(pool.in_use_of(Tier::Host), 0);
         assert_eq!(pool.migrated_total(), 0, "failed migrate moved no bytes");
+    }
+
+    #[test]
+    fn reserve_near_usize_max_is_oom_not_wraparound() {
+        // Regression: `in_use + bytes` used to wrap, pass the capacity
+        // check, and corrupt accounting. It must be a clean OOM.
+        let pool = KvPool::new(100);
+        pool.reserve(60).unwrap();
+        let err = pool.reserve(usize::MAX - 10).unwrap_err();
+        assert_eq!(err.requested, usize::MAX - 10);
+        assert_eq!(err.in_use, 60);
+        assert_eq!(pool.in_use(), 60, "failed reserve must not change in_use");
+        assert_eq!(pool.oom_events(), 1);
+        // Same on the unlimited path: fetch_add used to wrap silently.
+        let unlimited = KvPool::unlimited();
+        unlimited.reserve(usize::MAX / 2).unwrap();
+        assert!(unlimited.reserve(usize::MAX / 2 + 2).is_err());
+        assert_eq!(unlimited.in_use(), usize::MAX / 2);
+        assert_eq!(unlimited.oom_events(), 1);
+    }
+
+    #[test]
+    fn double_release_saturates_and_counts() {
+        // Regression: release used to `fetch_sub` unchecked, so a release-
+        // build double-release wrapped `in_use` to ~usize::MAX and bricked
+        // all future admission. It must saturate at 0 and be counted.
+        let pool = KvPool::new(100);
+        pool.reserve(40).unwrap();
+        pool.release(40);
+        pool.release(40); // double release
+        assert_eq!(pool.in_use(), 0, "underflow must saturate, not wrap");
+        assert_eq!(pool.accounting_errors(), 1);
+        assert_eq!(pool.accounting_errors_of(Tier::Device), 1);
+        // The pool still admits new work afterwards.
+        pool.reserve(90).unwrap();
+        assert_eq!(pool.in_use(), 90);
+        pool.release(90);
+        // Partial underflow (release more than held) also saturates.
+        pool.reserve(10).unwrap();
+        pool.release_on(Tier::Device, 25);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.accounting_errors(), 2);
+        assert_eq!(pool.accounting_errors_of(Tier::Host), 0);
     }
 
     #[test]

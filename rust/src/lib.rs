@@ -5,10 +5,12 @@
 //! Rust + JAX + Pallas serving stack:
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: a step-driven
-//!   continuous-batching scheduler, KV-cache pool, sequence-wise eviction
-//!   policies (Sliding Window / StreamingLLM / H2O), and the paper's
-//!   layer-wise budget allocator driven by the cosine-similarity importance
-//!   probe.
+//!   continuous-batching scheduler, a paged two-tier KV-cache pool
+//!   (fixed-size ref-counted pages with copy-on-write prefix sharing,
+//!   [`kvcache::PageTable`] / [`kvcache::PagedKvPool`]), sequence-wise
+//!   eviction policies (Sliding Window / StreamingLLM / H2O), and the
+//!   paper's layer-wise budget allocator driven by the cosine-similarity
+//!   importance probe.
 //! * **Layer 2** — a JAX transformer AOT-lowered to HLO-text artifacts
 //!   (`python/compile/model.py`), executed via PJRT (`runtime`, behind the
 //!   `pjrt` feature). The default build runs a deterministic simulated
@@ -63,6 +65,20 @@
 //!    `FinishReason::Oom` is reserved for requests that cannot fit with the
 //!    pool otherwise empty, and `preemption = false` reproduces the paper's
 //!    hard-OOM table cells.
+//!
+//! ## Paged KV allocation
+//!
+//! Both pool tiers are carved into fixed-size pages
+//! (`ServeConfig::kv_page_bytes`, `--kv-page-bytes`, clamped up to one
+//! token row). Every sequence holds a per-layer [`kvcache::PageTable`]
+//! mapping slot ranges to ref-counted page ids; admission, per-step growth
+//! and eviction shrink all move in whole-page quanta, so pool accounting
+//! is page-quantized and the metrics snapshot exports allocated-vs-used
+//! bytes per tier (fragmentation) alongside shared-page and copy-on-write
+//! gauges. Suspend/resume is a page-table edit: only private
+//! (refcount-1) pages migrate across the PCIe boundary, and a prefix
+//! shared between tables via `PageTable::share_prefix` is charged to the
+//! pool exactly once until a divergent write privatizes it.
 //!
 //! `Engine::generate_batch` survives as a thin compatibility wrapper
 //! (enqueue everything, drain the scheduler, sort by id) and is

@@ -46,6 +46,8 @@ ENGINE FLAGS (serve/generate)
   --host-spill-mib N   host-spill tier for suspended sequences
                        (0 = disabled: preemption restarts
                        from scratch)                           [0]
+  --kv-page-bytes N    KV page size for the paged allocator
+                       (clamped up to one token row)           [16384]
   --batch-wait-ms N    wait up to N ms for more arrivals
                        before stepping a small batch           [0]
   --request-deadline-ms N
@@ -90,6 +92,7 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
     cfg.kernel = args.str("kernel", &cfg.kernel);
     cfg.kv_pool_bytes = args.usize("kv-pool-mib", cfg.kv_pool_bytes >> 20)? << 20;
     cfg.host_spill_bytes = args.usize("host-spill-mib", cfg.host_spill_bytes >> 20)? << 20;
+    cfg.kv_page_bytes = args.usize("kv-page-bytes", cfg.kv_page_bytes)?;
     cfg.batch_wait_ms = args.u64("batch-wait-ms", cfg.batch_wait_ms)?;
     cfg.request_deadline_ms = args.u64("request-deadline-ms", cfg.request_deadline_ms)?;
     Ok(cfg)

@@ -51,6 +51,34 @@ pub struct SchedulerMetrics {
     pub restarts_avoided: u64,
     /// High-water mark of host-tier (spill) bytes in use.
     pub host_bytes_peak: usize,
+    /// Pages physically moved device→host by suspend migrations. The
+    /// pool's `migrated_into(Host)` traffic equals
+    /// `pages_swapped_out * page_bytes` exactly — swaps move page-table
+    /// entries, not byte blobs.
+    pub pages_swapped_out: u64,
+    /// Pages physically moved host→device by resume migrations (same
+    /// traffic identity against `migrated_into(Device)`).
+    pub pages_swapped_in: u64,
+    /// Device-tier bytes allocated by the paged KV pool (gauge,
+    /// page-granular).
+    pub kv_alloc_bytes: usize,
+    /// Device-tier bytes actually holding KV rows (gauge). The difference
+    /// against `kv_alloc_bytes` is internal fragmentation: tail-page slack
+    /// the fixed page size strands.
+    pub kv_used_bytes: usize,
+    /// Host-tier bytes allocated by the paged KV pool (gauge).
+    pub host_alloc_bytes: usize,
+    /// Host-tier bytes actually holding suspended KV rows (gauge).
+    pub host_used_bytes: usize,
+    /// Pages currently referenced by more than one sequence (prefix
+    /// sharing; gauge).
+    pub shared_pages: usize,
+    /// Cumulative copy-on-write page privatizations (first divergent write
+    /// to a shared page).
+    pub cow_copies: u64,
+    /// Pool accounting faults detected and absorbed (release underflow /
+    /// double-free of a page). Nonzero means a bookkeeping bug was caught.
+    pub accounting_errors: u64,
     /// Requests that finished normally (EOS or length) and freed a slot.
     pub completed: u64,
     /// Requests rejected at submission (queue backpressure).
@@ -102,6 +130,15 @@ impl SchedulerMetrics {
             ("swap_ins", Json::num(self.swap_ins as f64)),
             ("restarts_avoided", Json::num(self.restarts_avoided as f64)),
             ("host_bytes_peak", Json::num(self.host_bytes_peak as f64)),
+            ("pages_swapped_out", Json::num(self.pages_swapped_out as f64)),
+            ("pages_swapped_in", Json::num(self.pages_swapped_in as f64)),
+            ("kv_alloc_bytes", Json::num(self.kv_alloc_bytes as f64)),
+            ("kv_used_bytes", Json::num(self.kv_used_bytes as f64)),
+            ("host_alloc_bytes", Json::num(self.host_alloc_bytes as f64)),
+            ("host_used_bytes", Json::num(self.host_used_bytes as f64)),
+            ("shared_pages", Json::num(self.shared_pages as f64)),
+            ("cow_copies", Json::num(self.cow_copies as f64)),
+            ("accounting_errors", Json::num(self.accounting_errors as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("rejected", Json::num(self.rejected as f64)),
             ("oom_failures", Json::num(self.oom_failures as f64)),
@@ -141,5 +178,31 @@ mod tests {
         assert_eq!(j.get("cancelled").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("deadline_exceeded").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("mean_occupancy").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn json_snapshot_exports_paging_gauges() {
+        let m = SchedulerMetrics {
+            pages_swapped_out: 5,
+            pages_swapped_in: 3,
+            kv_alloc_bytes: 4096,
+            kv_used_bytes: 3000,
+            host_alloc_bytes: 2048,
+            host_used_bytes: 1024,
+            shared_pages: 2,
+            cow_copies: 1,
+            accounting_errors: 0,
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("pages_swapped_out").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("pages_swapped_in").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("kv_alloc_bytes").unwrap().as_usize(), Some(4096));
+        assert_eq!(j.get("kv_used_bytes").unwrap().as_usize(), Some(3000));
+        assert_eq!(j.get("host_alloc_bytes").unwrap().as_usize(), Some(2048));
+        assert_eq!(j.get("host_used_bytes").unwrap().as_usize(), Some(1024));
+        assert_eq!(j.get("shared_pages").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("cow_copies").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("accounting_errors").unwrap().as_usize(), Some(0));
     }
 }

@@ -101,6 +101,37 @@ impl KvPolicy {
         }
     }
 
+    /// KV bytes a sequence holding `tokens` tokens charges a *paged*
+    /// allocator: each layer's cached tokens are rounded up to whole pages
+    /// of `page_bytes` (clamped to at least one `token_bytes` row, like the
+    /// engine does). The gap against the byte-exact
+    /// `cached_tokens_per_layer` product is tail-page fragmentation — the
+    /// quantity the serving engine's `kv_alloc_bytes` vs `kv_used_bytes`
+    /// gauges expose.
+    pub fn paged_kv_bytes(
+        &self,
+        tokens: usize,
+        n_layer: usize,
+        token_bytes: usize,
+        page_bytes: usize,
+    ) -> f64 {
+        let pb = page_bytes.max(token_bytes.max(1));
+        let spp = (pb / token_bytes.max(1)).max(1);
+        let layer_bytes = |cached: usize| cached.div_ceil(spp) * pb;
+        match self {
+            KvPolicy::Full => (n_layer * layer_bytes(tokens)) as f64,
+            KvPolicy::Uniform { budget } => (n_layer * layer_bytes(tokens.min(*budget))) as f64,
+            KvPolicy::PerLayer { budgets } => {
+                assert_eq!(budgets.len(), n_layer);
+                let mut total = 0usize;
+                for &b in budgets {
+                    total += layer_bytes(tokens.min(b));
+                }
+                total as f64
+            }
+        }
+    }
+
     /// Paper-style Squeeze budgets: `n_layer` layers, `unimportant` of them
     /// squeezed to `p × b_init`, the rest boosted so the total is conserved.
     pub fn squeeze(n_layer: usize, unimportant: usize, b_init: usize, p: f64) -> Self {
@@ -227,6 +258,25 @@ mod tests {
         // Appendix A.2: unimportant 300, important ~1544.
         assert_eq!(budgets[31], 300);
         assert!(budgets[0] == 1544 || budgets[0] == 1545);
+    }
+
+    #[test]
+    fn paged_bytes_round_up_to_whole_pages() {
+        let token = 1024; // sim://tiny row: 128 elems × 2 tensors × 4 bytes
+        let page = 16 * 1024; // 16 slots per page
+        let p = KvPolicy::Uniform { budget: 48 };
+        // 48 cached tokens -> exactly 3 pages per layer.
+        assert_eq!(p.paged_kv_bytes(100, 8, token, page), (8 * 3 * page) as f64);
+        // 17 cached tokens -> 2 pages per layer (one slot into the second).
+        assert_eq!(p.paged_kv_bytes(17, 1, token, page), (2 * page) as f64);
+        // Byte-exact accounting is a lower bound (fragmentation is the gap).
+        let exact = p.cached_tokens_per_layer(17, 1) * token as f64;
+        assert!(p.paged_kv_bytes(17, 1, token, page) >= exact);
+        // Per-layer budgets quantize layer by layer, not on the mean.
+        let pl = KvPolicy::PerLayer { budgets: vec![1, 31] };
+        assert_eq!(pl.paged_kv_bytes(100, 2, token, page), (3 * page) as f64);
+        // Degenerate page sizes clamp up to one token row.
+        assert_eq!(pl.paged_kv_bytes(1, 2, token, 8), (2 * token) as f64);
     }
 
     #[test]

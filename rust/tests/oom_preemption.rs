@@ -203,6 +203,56 @@ fn tiny_host_tier_falls_back_to_restart() {
 }
 
 #[test]
+fn paged_swap_traffic_is_page_granular_and_token_identical() {
+    // The paged-allocator acceptance case: with 4 KiB pages (4 tokens per
+    // page at sim://tiny's 1 KiB token rows), suspend/resume must (a) keep
+    // greedy decode token-identical to an uninterrupted unlimited-pool run,
+    // and (b) charge migration traffic of exactly page_bytes × pages moved
+    // in both directions — swaps move page-table entries, not byte blobs.
+    // (Admission parks, which create pages directly on the host tier, add
+    // to `swap_outs` but move nothing, so they must not show up here.)
+    const PAGE: usize = 4096;
+    let mut cfg = capped_cfg().with_host_spill(4 * 1024 * 1024).with_kv_page_bytes(PAGE);
+    cfg.kv_pool_bytes = POOL_BYTES;
+    let mut eng = Engine::new(cfg).unwrap();
+    let outs = eng.generate_batch(trace_requests());
+    assert!(outs.iter().all(|o| matches!(o.finish, FinishReason::Eos | FinishReason::Length)));
+
+    let m = eng.sched_metrics().clone();
+    assert!(m.swap_outs > 0 && m.swap_ins > 0, "workload no longer swaps — resize it");
+    assert!(m.pages_swapped_out > 0 && m.pages_swapped_in > 0);
+    assert_eq!(
+        eng.pool().migrated_into(Tier::Host),
+        m.pages_swapped_out as usize * PAGE,
+        "host-bound traffic must be page_bytes x pages_moved"
+    );
+    assert_eq!(
+        eng.pool().migrated_into(Tier::Device),
+        m.pages_swapped_in as usize * PAGE,
+        "device-bound traffic must be page_bytes x pages_moved"
+    );
+
+    // Gauges drained with the pool, and no accounting fault was absorbed.
+    assert_eq!(m.kv_alloc_bytes, 0);
+    assert_eq!(m.host_alloc_bytes, 0);
+    assert_eq!(m.accounting_errors, 0);
+    assert_eq!(eng.pool().in_use(), 0);
+    assert_eq!(eng.paged_pool().live_pages(), 0);
+
+    // Greedy decode over the paged pool matches the unpaged-style baseline
+    // (unlimited pool, default page size, no preemption) token for token.
+    let mut roomy_cfg = capped_cfg();
+    roomy_cfg.kv_pool_bytes = 0;
+    let mut roomy_eng = Engine::new(roomy_cfg).unwrap();
+    let roomy = roomy_eng.generate_batch(trace_requests());
+    assert_eq!(roomy_eng.sched_metrics().preemptions, 0);
+    for (c, r) in outs.iter().zip(&roomy) {
+        assert_eq!(c.id, r.id);
+        assert_eq!(c.generated, r.generated, "request {}: paging changed the tokens", c.id);
+    }
+}
+
+#[test]
 fn preemption_disabled_reproduces_hard_oom() {
     // With the paper-style hard-OOM mode, the same workload must fail some
     // requests instead of completing them all.

@@ -473,6 +473,117 @@ fn two_tier_pool_conserves_bytes_under_random_migrations() {
 }
 
 #[test]
+fn page_table_interleavings_conserve_refcounts_and_bytes() {
+    use squeezeattention::kvcache::{KvPool, PageId, PageTable, PagedKvPool, Tier};
+    use std::collections::HashMap;
+    // Random grow/shrink/share/migrate/drop interleavings over a set of
+    // page tables against a shadow model: every live page's refcount must
+    // equal the number of tables referencing it, each tier's in_use must be
+    // exactly page_bytes × (live pages on that tier), nothing may leak or
+    // double-free, and the registry must drain to zero when the last table
+    // drops.
+    check("page table interleavings", 80, |rng| {
+        let token_bytes = 16;
+        let page_bytes = token_bytes * rng.range(1, 6); // 1..5 slots/page
+        let pool = PagedKvPool::new(KvPool::unlimited(), page_bytes);
+        let mut tables: Vec<PageTable> = Vec::new();
+        let mut lens: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..80 {
+            match rng.range(0, 6) {
+                0 => {
+                    if tables.len() < 6 {
+                        let n_layer = rng.range(1, 4);
+                        tables.push(PageTable::new(&pool, Tier::Device, n_layer, token_bytes));
+                        lens.push(vec![0; n_layer]);
+                    }
+                }
+                1 if !tables.is_empty() => {
+                    let i = rng.below(tables.len());
+                    let old = lens[i].clone();
+                    let new: Vec<usize> = old.iter().map(|&l| l + rng.range(0, 12)).collect();
+                    tables[i].grow(&old, &new).map_err(|e| e.to_string())?;
+                    lens[i] = new;
+                }
+                2 if !tables.is_empty() => {
+                    // Shrink: excess pages unmap; retained shared pages COW.
+                    let i = rng.below(tables.len());
+                    let new: Vec<usize> = lens[i].iter().map(|&l| rng.range(0, l + 1)).collect();
+                    tables[i].shrink(&new).map_err(|e| e.to_string())?;
+                    lens[i] = new;
+                }
+                3 if !tables.is_empty() && tables.len() < 6 => {
+                    // Fork a prefix-sharing table (full pages only).
+                    let i = rng.below(tables.len());
+                    let maxp = lens[i].iter().copied().max().unwrap_or(0);
+                    let prefix = rng.range(0, maxp + 1);
+                    let spp = tables[i].slots_per_page();
+                    let fork = tables[i].share_prefix(prefix);
+                    let forked: Vec<usize> =
+                        (0..fork.n_layer()).map(|l| fork.layer_pages(l).len() * spp).collect();
+                    tables.push(fork);
+                    lens.push(forked);
+                }
+                4 if !tables.is_empty() => {
+                    // Suspend/resume: unshared pages change tier, ids stay.
+                    let i = rng.below(tables.len());
+                    let to = if rng.bool(0.5) { Tier::Device } else { Tier::Host };
+                    let before: Vec<PageId> = (0..tables[i].n_layer())
+                        .flat_map(|l| tables[i].layer_pages(l).to_vec())
+                        .collect();
+                    tables[i].migrate(to).map_err(|e| e.to_string())?;
+                    let after: Vec<PageId> = (0..tables[i].n_layer())
+                        .flat_map(|l| tables[i].layer_pages(l).to_vec())
+                        .collect();
+                    ensure_eq(before, after, "migrate must not remap pages")?;
+                }
+                _ if !tables.is_empty() => {
+                    let i = rng.below(tables.len());
+                    tables.swap_remove(i);
+                    lens.swap_remove(i);
+                }
+                _ => {}
+            }
+            // Shadow refcounts from the tables themselves.
+            let mut refs: HashMap<PageId, usize> = HashMap::new();
+            for t in &tables {
+                for l in 0..t.n_layer() {
+                    for &id in t.layer_pages(l) {
+                        *refs.entry(id).or_insert(0) += 1;
+                    }
+                }
+            }
+            ensure_eq(pool.live_pages(), refs.len(), "live pages == referenced pages")?;
+            let mut by_tier = [0usize; 2];
+            for (&id, &n) in &refs {
+                ensure_eq(pool.refs_of(id), Some(n), "refcount == referencing tables")?;
+                match pool.tier_of(id) {
+                    Some(Tier::Device) => by_tier[0] += 1,
+                    Some(Tier::Host) => by_tier[1] += 1,
+                    None => return Err("referenced page has no tier".into()),
+                }
+            }
+            let expected_shared = refs.values().filter(|&&n| n > 1).count();
+            ensure_eq(pool.shared_pages(), expected_shared, "shared-page gauge")?;
+            ensure_eq(
+                pool.pool().in_use_of(Tier::Device),
+                by_tier[0] * page_bytes,
+                "device bytes == device pages × page_bytes",
+            )?;
+            ensure_eq(
+                pool.pool().in_use_of(Tier::Host),
+                by_tier[1] * page_bytes,
+                "host bytes == host pages × page_bytes",
+            )?;
+        }
+        drop(tables);
+        ensure_eq(pool.live_pages(), 0, "no leaked pages")?;
+        ensure_eq(pool.pool().in_use(), 0, "all bytes released")?;
+        ensure_eq(pool.pages_allocated(), pool.pages_freed(), "alloc/free balance")?;
+        ensure_eq(pool.pool().accounting_errors(), 0, "no double-frees detected")
+    });
+}
+
+#[test]
 fn eviction_bounds_every_layer_to_its_budget() {
     // The 2-D contract: applying any sequence-wise policy per layer with
     // that layer's own (heterogeneous) budget leaves every layer's cached
@@ -493,7 +604,7 @@ fn eviction_bounds_every_layer_to_its_budget() {
             }
             // Give H2O a realistic score distribution to rank.
             let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
-            cache.add_scores(layer, &scores);
+            cache.add_scores(layer, &scores).map_err(|e| e.to_string())?;
         }
         for p in policies() {
             let mut c = cache.clone();
