@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Commit a bench report file to the long-lived `bench-reports` branch so the
+# per-commit JSON survives artifact expiry. Called by CI on pushes to main:
+#
+#   .github/publish-bench-report.sh reports/BENCH_swap.json
+#
+# The branch is seeded from main on first use. Concurrent bench jobs both
+# publish here, so the push retries on top of whatever landed first.
+set -euo pipefail
+
+report="$1"
+[ -f "$report" ] || { echo "missing $report" >&2; exit 1; }
+
+tmp="$(mktemp -d)"
+cp "$report" "$tmp/"
+
+git config user.name "github-actions[bot]"
+git config user.email "github-actions[bot]@users.noreply.github.com"
+
+if git fetch origin bench-reports 2>/dev/null; then
+    git checkout -B bench-reports origin/bench-reports
+else
+    git checkout -B bench-reports
+fi
+
+mkdir -p reports
+cp "$tmp/$(basename "$report")" "$report"
+git add "$report"
+if git commit -m "Update $(basename "$report") from ${GITHUB_SHA:-local}"; then
+    for _ in 1 2 3; do
+        if git push origin bench-reports; then
+            exit 0
+        fi
+        git fetch origin bench-reports
+        git rebase origin/bench-reports
+    done
+    echo "failed to push bench-reports after retries" >&2
+    exit 1
+else
+    echo "report unchanged; nothing to publish"
+fi

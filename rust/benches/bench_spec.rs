@@ -1,0 +1,156 @@
+//! Speculative decoding sweep: the same closed batch decoded at
+//! `draft_k ∈ {0, 2, 4, 8}` (0 = speculation disabled, the plain one-token
+//! decode path). For each arm we report wall time, generated tokens,
+//! decode/draft model calls, and the speculation counters — acceptance rate,
+//! accepted-tokens-per-engine-step (the headline: > 1 means a verify pass is
+//! landing more than one committed token), and mean rollback depth — and
+//! emit `reports/BENCH_spec.json`.
+//!
+//! The sim backend prices a decode step by its batch matmul shape, not by
+//! how many tokens the step commits, so accepted-per-step is the structural
+//! speedup a real deployment would bank (minus the draft model's own cost,
+//! which the `decode_steps` column makes visible: draft and verify passes
+//! both count).
+//!
+//! Runs entirely on the simulated backend (`sim://tiny` target,
+//! `sim://tiny-draft` drafter), so it needs no compiled artifacts.
+//! `SA_QUICK=1` shrinks the workload.
+
+use std::time::Instant;
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{Engine, FinishReason, Request};
+use squeezeattention::util::bench::Table;
+use squeezeattention::util::Json;
+use squeezeattention::workload::TraceSpec;
+
+const PROMPT_LEN: usize = 80;
+const MAX_NEW: usize = 32;
+
+struct ArmResult {
+    draft_k: usize,
+    wall_s: f64,
+    tokens: u64,
+    completed: usize,
+    decode_steps: u64,
+    spec_steps: u64,
+    acceptance_rate: f64,
+    accepted_per_step: f64,
+    rollback_depth: f64,
+}
+
+impl ArmResult {
+    fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("draft_k", Json::num(self.draft_k as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("tokens_per_s", Json::num(self.tokens_per_s())),
+            ("completed", Json::num(self.completed as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("spec_steps", Json::num(self.spec_steps as f64)),
+            ("acceptance_rate", Json::num(self.acceptance_rate)),
+            ("accepted_per_step", Json::num(self.accepted_per_step)),
+            ("rollback_depth", Json::num(self.rollback_depth)),
+        ])
+    }
+}
+
+/// Decode one closed batch at the given draft depth (0 disables speculation).
+fn run_arm(draft_k: usize, n_requests: usize) -> anyhow::Result<ArmResult> {
+    let cfg = ServeConfig::new("sim://tiny").with_budget(48).with_spec_k(draft_k);
+    let items = TraceSpec::closed(n_requests, PROMPT_LEN, MAX_NEW, 53).generate();
+    let reqs: Vec<Request> = items
+        .iter()
+        .enumerate()
+        .map(|(i, it)| Request::new(i as u64, it.sample.prompt.clone(), MAX_NEW))
+        .collect();
+    let mut eng = Engine::new(cfg)?;
+    let t0 = Instant::now();
+    let outs = eng.generate_batch(reqs);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let tokens: u64 = outs.iter().map(|o| o.generated.len() as u64).sum();
+    let completed = outs
+        .iter()
+        .filter(|o| matches!(o.finish, FinishReason::Eos | FinishReason::Length))
+        .count();
+    let m = eng.sched_metrics().clone();
+    let run = eng.run_stats().clone();
+    Ok(ArmResult {
+        draft_k,
+        wall_s,
+        tokens,
+        completed,
+        decode_steps: run.decode_steps,
+        spec_steps: m.spec_steps,
+        acceptance_rate: m.spec_acceptance_rate(),
+        accepted_per_step: m.spec_accepted_per_step(),
+        rollback_depth: m.spec_rollback_depth(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("SA_QUICK").is_ok();
+    let n_requests = if quick { 8 } else { 24 };
+
+    let mut arms = Vec::new();
+    for &k in &[0usize, 2, 4, 8] {
+        arms.push(run_arm(k, n_requests)?);
+    }
+
+    let mut table = Table::new(&[
+        "draft_k",
+        "tok/s",
+        "accept_rate",
+        "accepted/step",
+        "rollback/step",
+        "decode_steps",
+    ]);
+    for arm in &arms {
+        table.row(vec![
+            arm.draft_k.to_string(),
+            format!("{:.1}", arm.tokens_per_s()),
+            format!("{:.3}", arm.acceptance_rate),
+            format!("{:.2}", arm.accepted_per_step),
+            format!("{:.2}", arm.rollback_depth),
+            arm.decode_steps.to_string(),
+        ]);
+    }
+    println!(
+        "speculative decode sweep: {n_requests} requests x {MAX_NEW} new tokens \
+         (prompt {PROMPT_LEN}, sim://tiny + sim://tiny-draft):"
+    );
+    table.print();
+
+    // The point of the exercise: every speculative arm must land more than
+    // one committed token per engine step, and the baseline arm must not
+    // touch the speculation path at all.
+    for arm in &arms {
+        if arm.draft_k == 0 {
+            assert_eq!(arm.spec_steps, 0, "draft_k=0 must run the plain decode path");
+        } else {
+            assert!(
+                arm.accepted_per_step > 1.0,
+                "draft_k={} accepted only {:.2} tokens/step",
+                arm.draft_k,
+                arm.accepted_per_step
+            );
+        }
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("spec_decode_sweep")),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("prompt_len", Json::num(PROMPT_LEN as f64)),
+        ("max_new", Json::num(MAX_NEW as f64)),
+        ("arms", Json::Arr(arms.iter().map(|a| a.to_json()).collect())),
+    ]);
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/BENCH_spec.json", report.to_string())?;
+    println!("wrote reports/BENCH_spec.json");
+    Ok(())
+}

@@ -64,6 +64,24 @@ impl Default for SqueezeConfig {
     }
 }
 
+/// Speculative-decoding settings (draft-then-verify decode bursts).
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    /// Master switch. Off = one token per decode step (the baseline path).
+    pub enabled: bool,
+    /// Tokens the draft model proposes per sequence per burst. A burst
+    /// commits between 1 (all drafts rejected — the target's own sample
+    /// still lands) and `draft_k + 1` tokens (all drafts accepted plus the
+    /// bonus token from the final verify step).
+    pub draft_k: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self { enabled: false, draft_k: 4 }
+    }
+}
+
 /// Engine-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -83,6 +101,8 @@ pub struct ServeConfig {
     /// H2O: fraction of the budget reserved for the recency window.
     pub h2o_recent_frac: f64,
     pub squeeze: SqueezeConfig,
+    /// Speculative decoding (draft model + batched verification).
+    pub spec: SpecConfig,
     /// Max concurrent decode slots (bound to the largest artifact tier <= this).
     pub max_batch: usize,
     /// Default max new tokens per request.
@@ -134,6 +154,7 @@ impl ServeConfig {
             sinks: 4,
             h2o_recent_frac: 0.5,
             squeeze: SqueezeConfig::default(),
+            spec: SpecConfig::default(),
             max_batch: 8,
             max_new_tokens: 64,
             kv_pool_bytes: 0,
@@ -190,6 +211,14 @@ impl ServeConfig {
                 cfg.squeeze.min_budget = m;
             }
         }
+        if let Some(sp) = j.get("spec") {
+            if let Some(e) = sp.get("enabled").and_then(|v| v.as_bool()) {
+                cfg.spec.enabled = e;
+            }
+            if let Some(k) = sp.get("draft_k").and_then(|v| v.as_usize()) {
+                cfg.spec.draft_k = k;
+            }
+        }
         if let Some(b) = j.get("max_batch").and_then(|v| v.as_usize()) {
             cfg.max_batch = b;
         }
@@ -240,6 +269,13 @@ impl ServeConfig {
                     ("p", Json::num(self.squeeze.p)),
                     ("groups", Json::num(self.squeeze.groups as f64)),
                     ("min_budget", Json::num(self.squeeze.min_budget as f64)),
+                ]),
+            ),
+            (
+                "spec",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.spec.enabled)),
+                    ("draft_k", Json::num(self.spec.draft_k as f64)),
                 ]),
             ),
             ("max_batch", Json::num(self.max_batch as f64)),
@@ -306,6 +342,16 @@ impl ServeConfig {
 
     pub fn with_request_deadline_ms(mut self, ms: u64) -> Self {
         self.request_deadline_ms = ms;
+        self
+    }
+
+    /// Enable speculative decoding with `k` drafted tokens per burst; `k = 0`
+    /// disables it (the `--spec-k` CLI semantics).
+    pub fn with_spec_k(mut self, k: usize) -> Self {
+        self.spec.enabled = k > 0;
+        if k > 0 {
+            self.spec.draft_k = k;
+        }
         self
     }
 }
@@ -404,6 +450,26 @@ mod tests {
         // absent key keeps the default
         let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
         assert_eq!(ServeConfig::from_json(&j).unwrap().request_deadline_ms, 0);
+    }
+
+    #[test]
+    fn spec_roundtrip_and_default() {
+        // Default: speculative decoding off, draft_k 4 standing by.
+        let cfg = ServeConfig::new("a");
+        assert!(!cfg.spec.enabled);
+        assert_eq!(cfg.spec.draft_k, 4);
+        let on = cfg.clone().with_spec_k(8);
+        assert!(on.spec.enabled);
+        let back = ServeConfig::from_json(&on.to_json()).unwrap();
+        assert!(back.spec.enabled);
+        assert_eq!(back.spec.draft_k, 8);
+        // --spec-k 0 disables without clobbering the stored k.
+        let off = on.with_spec_k(0);
+        assert!(!off.spec.enabled);
+        assert_eq!(off.spec.draft_k, 8);
+        // absent key keeps the default
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        assert!(!ServeConfig::from_json(&j).unwrap().spec.enabled);
     }
 
     #[test]

@@ -15,6 +15,32 @@
 //!      fits the largest per-layer cache; after each step append the new KV
 //!      row, fold the attention-mass signal into H2O scores, and re-compress
 //!      any layer over budget.
+//!   5. **Speculative bursts** (`spec.enabled`, `--spec-k`) — each decode
+//!      step becomes a draft→verify→rollback burst per sequence:
+//!
+//!      ```text
+//!      charge k+1 rows ─► draft k tokens ─► truncate + shrink ─► verify
+//!      (page envelope,    (draft model,      (rollback: KV rows,  (target
+//!       preempt on OOM)    optimistic         positions, H2O       model,
+//!                          appends, no        scores restored      batched
+//!                          events)            byte-exactly)        across
+//!                                                                  seqs)
+//!      ```
+//!
+//!      The paired draft model (`sim://tiny-draft`) proposes up to k tokens
+//!      by greedy argmax, appending their KV rows optimistically inside the
+//!      pre-charged k+1-row page envelope; the rows are then rolled back
+//!      (`SequenceCache::truncate` + `PageTable::shrink`) and the target
+//!      verifies by running its exact per-token decode sequence — batched
+//!      across sequences per micro-step — committing the longest prefix
+//!      that matches the draft plus one bonus token. A `Token` event fires
+//!      per committed token (rollback never emits), and ITL records one
+//!      interval per committed token. Output is token-identical to
+//!      non-speculative decode under every eviction policy, because
+//!      verification *is* the non-speculative code path. (Exact for greedy
+//!      sampling — the default; temperature sampling draws from the shared
+//!      rng in burst order, which interleaves differently across a
+//!      multi-sequence batch.)
 //!
 //! The engine is driven one decode step at a time (`step`), so requests can
 //! join and leave the running batch mid-flight:
@@ -59,9 +85,9 @@ use crate::kvcache::{
     make_policy, EvictionPolicy, KvPool, PageTable, PagedKvPool, SequenceCache, Tier,
 };
 use crate::metrics::{Histogram, SchedulerMetrics, ThroughputMeter};
-use crate::model::sample;
 use crate::model::tokenizer::{self, check_token_map};
-use crate::runtime::{Runtime, Tensor, TensorI32};
+use crate::model::{argmax, sample};
+use crate::runtime::{DecodeOut, Runtime, Tensor, TensorI32};
 use crate::squeeze::{allocate, BudgetPlan, CosineStats};
 use crate::util::Rng;
 
@@ -99,6 +125,9 @@ enum AdmitError {
 
 pub struct Engine {
     runtime: Runtime,
+    /// Paired draft model for speculative decoding (loaded only while
+    /// `cfg.spec` is enabled; geometry checked against the target).
+    draft: Option<Runtime>,
     cfg: ServeConfig,
     policy: Box<dyn EvictionPolicy>,
     paged: PagedKvPool,
@@ -129,18 +158,62 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Largest decode-artifact batch size <= `max_batch` — the single source
+    /// of truth for slot sizing (`new`, `reconfigure`, and spec-mode slot
+    /// accounting all go through here).
+    fn select_batch(runtime: &Runtime, max_batch: usize) -> Result<usize> {
+        runtime
+            .decode_batches()
+            .into_iter()
+            .filter(|&b| b <= max_batch)
+            .max()
+            .ok_or_else(|| anyhow!("no decode artifact with batch <= {max_batch}"))
+    }
+
+    /// Artifact spec of the draft model paired with `artifacts`. Only the
+    /// sim backend ships a draft variant today (`sim://tiny` →
+    /// `sim://tiny-draft`, sharing the target's deterministic KV hashing).
+    fn draft_artifacts(artifacts: &str) -> Result<String> {
+        match artifacts.strip_prefix("sim://") {
+            Some("" | "tiny") => Ok("sim://tiny-draft".to_string()),
+            _ => Err(anyhow!(
+                "speculative decoding has no draft model for '{artifacts}' (sim://tiny only)"
+            )),
+        }
+    }
+
+    /// Load the draft runtime when spec mode is on, verifying its geometry
+    /// matches the target's (drafted KV rows land in the target's cache, so
+    /// every shape must agree).
+    fn load_draft(runtime: &Runtime, cfg: &ServeConfig) -> Result<Option<Runtime>> {
+        if !cfg.spec.enabled || cfg.spec.draft_k == 0 {
+            return Ok(None);
+        }
+        let draft = Runtime::load(&Self::draft_artifacts(&cfg.artifacts)?, &cfg.kernel)?;
+        let (d, t) = (&draft.manifest.model, &runtime.manifest.model);
+        if d.n_layer != t.n_layer
+            || d.n_head != t.n_head
+            || d.head_dim != t.head_dim
+            || d.vocab != t.vocab
+            || d.max_seq != t.max_seq
+        {
+            return Err(anyhow!(
+                "draft model '{}' geometry does not match target '{}'",
+                d.name,
+                t.name
+            ));
+        }
+        Ok(Some(draft))
+    }
+
     pub fn new(cfg: ServeConfig) -> Result<Self> {
         let runtime = Runtime::load(&cfg.artifacts, &cfg.kernel)?;
         check_token_map(&runtime.manifest.tokens)?;
         let n_layer = runtime.manifest.model.n_layer;
         let row_elems = runtime.manifest.model.n_head * runtime.manifest.model.head_dim;
         let max_seq = runtime.manifest.model.max_seq;
-        let batch = runtime
-            .decode_batches()
-            .into_iter()
-            .filter(|&b| b <= cfg.max_batch)
-            .max()
-            .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
+        let batch = Self::select_batch(&runtime, cfg.max_batch)?;
+        let draft = Self::load_draft(&runtime, &cfg)?;
         // Pages must hold at least one token row, or a page could never
         // cover the slot it is charged for.
         let page_bytes = cfg.kv_page_bytes.max(SequenceCache::token_bytes(row_elems));
@@ -152,6 +225,7 @@ impl Engine {
         let sched = Scheduler::new(batch, cfg.queue_depth);
         Ok(Self {
             runtime,
+            draft,
             policy,
             paged,
             batch,
@@ -187,13 +261,8 @@ impl Engine {
         if !self.sched.is_idle() {
             return Err(anyhow!("reconfigure requires an idle scheduler"));
         }
-        self.batch = self
-            .runtime
-            .decode_batches()
-            .into_iter()
-            .filter(|&b| b <= cfg.max_batch)
-            .max()
-            .ok_or_else(|| anyhow!("no decode artifact with batch <= {}", cfg.max_batch))?;
+        self.batch = Self::select_batch(&self.runtime, cfg.max_batch)?;
+        self.draft = Self::load_draft(&self.runtime, &cfg)?;
         self.policy = make_policy(&cfg);
         let page_bytes = cfg.kv_page_bytes.max(SequenceCache::token_bytes(self.row_elems));
         self.paged = PagedKvPool::new(
@@ -941,19 +1010,52 @@ impl Engine {
         sched.requeue_front(Queued { req: a.req, t_submit: a.t_submit, restarted: true });
     }
 
-    /// One batched decode step over occupied slots, with OOM resolved by
-    /// preempting the youngest running sequence.
+    /// One decode step over the occupied slots. In speculative mode each
+    /// step is a draft→verify→rollback burst committing 1..=k+1 tokens per
+    /// sequence; otherwise exactly one token per sequence.
     fn decode_phase(
         &mut self,
         sched: &mut Scheduler,
         outputs: &mut Vec<RequestOutput>,
     ) -> Result<()> {
-        let b = self.batch;
-        // Tier: smallest capacity covering every layer cache + the new token.
-        let needed = sched
+        if self.cfg.spec.enabled && self.cfg.spec.draft_k > 0 && self.draft.is_some() {
+            self.decode_step_spec(sched, outputs)
+        } else {
+            self.decode_step_plain(sched, outputs)
+        }
+    }
+
+    /// Occupied slot indices oldest-first (admission order): the stable
+    /// processing order for charging, committing, and preempting.
+    fn slot_order(sched: &Scheduler) -> Vec<usize> {
+        let mut order: Vec<(u64, usize)> = sched
             .slots
             .iter()
-            .flatten()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|a| (a.seq, i)))
+            .collect();
+        order.sort_unstable();
+        order.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// One batched decode call over the slots named by `inputs` (`(slot,
+    /// token, position)` triples): fills the per-tier scratch buffers from
+    /// each slot's cache and runs the target or draft model. Uninvolved
+    /// slots stay padded (PAD token, zero lens) and their logits rows are
+    /// never read. Returns the decode output and the capacity tier bound
+    /// `m` (the score stride `commit_token` needs).
+    fn batched_call(
+        &mut self,
+        sched: &Scheduler,
+        use_draft: bool,
+        inputs: &[(usize, i32, i32)],
+    ) -> Result<(DecodeOut, usize)> {
+        let b = self.batch;
+        // Tier: smallest capacity covering every participating layer cache
+        // + the new token.
+        let needed = inputs
+            .iter()
+            .filter_map(|&(i, _, _)| sched.slots[i].as_ref())
             .map(|a| a.cache.max_layer_len())
             .max()
             .unwrap_or(0)
@@ -977,55 +1079,376 @@ impl Engine {
         let mut tokens = vec![tokenizer::PAD; b];
         let mut positions = vec![0i32; b];
         let mut lens = vec![0i32; self.n_layer * b];
-        for (i, slot) in sched.slots.iter().enumerate() {
-            if let Some(a) = slot {
-                tokens[i] = a.last_token;
-                positions[i] = a.next_pos as i32;
-                a.cache.write_into_batch(&mut k_buf, &mut v_buf, &mut lens, i)?;
+        let mut fill = Ok(());
+        for &(i, tok, pos) in inputs {
+            let a = sched.slots[i].as_ref().expect("inputs list occupied slots");
+            tokens[i] = tok;
+            positions[i] = pos;
+            if let Err(e) = a.cache.write_into_batch(&mut k_buf, &mut v_buf, &mut lens, i) {
+                fill = Err(e);
+                break;
             }
         }
 
-        let out = self.runtime.decode(
-            tier,
-            &TensorI32::from_vec(&[b], tokens)?,
-            &TensorI32::from_vec(&[b], positions)?,
-            &k_buf,
-            &v_buf,
-            &TensorI32::from_vec(&[self.n_layer, b], lens.clone())?,
-        );
+        let out = match fill {
+            Ok(()) => {
+                let rt = if use_draft {
+                    self.draft.as_ref().expect("spec mode loaded a draft runtime")
+                } else {
+                    &self.runtime
+                };
+                rt.decode(
+                    tier,
+                    &TensorI32::from_vec(&[b], tokens)?,
+                    &TensorI32::from_vec(&[b], positions)?,
+                    &k_buf,
+                    &v_buf,
+                    &TensorI32::from_vec(&[self.n_layer, b], lens)?,
+                )
+            }
+            Err(e) => Err(e),
+        };
         self.scratch.insert(tier, (k_buf, v_buf));
         let out = out?;
         self.run.decode_steps += 1;
         self.run.kv_slots_touched += (self.n_layer * b * m) as u64;
         self.meter.add_decode_step();
+        Ok((out, m))
+    }
 
+    /// Charge page-table growth of `extra` rows per layer for slot `idx`
+    /// (`grow` charges only the layers whose new rows cross a page
+    /// boundary), resolving pool OOM by preempting the youngest running
+    /// sequence — or yielding / failing with `Oom` when alone. Returns true
+    /// when the slot is still running with the growth charged.
+    fn charge_growth(
+        &mut self,
+        sched: &mut Scheduler,
+        outputs: &mut Vec<RequestOutput>,
+        idx: usize,
+        extra: usize,
+    ) -> bool {
+        loop {
+            let (old_lens, new_lens) = {
+                let a = sched.slots[idx].as_ref().expect("checked occupied");
+                let mut old = Vec::with_capacity(self.n_layer);
+                let mut new = Vec::with_capacity(self.n_layer);
+                for layer in 0..self.n_layer {
+                    let len = a.cache.layer_len(layer);
+                    old.push(len);
+                    new.push(len + extra);
+                }
+                (old, new)
+            };
+            if sched.slots[idx]
+                .as_mut()
+                .expect("checked occupied")
+                .table
+                .grow(&old_lens, &new_lens)
+                .is_ok()
+            {
+                let a = sched.slots[idx].as_mut().expect("checked occupied");
+                a.peak_bytes = a.peak_bytes.max(a.table.bytes());
+                return true;
+            }
+            let victim = if self.cfg.preemption && sched.running() > 1 {
+                sched.youngest_running()
+            } else {
+                None
+            };
+            match victim {
+                Some(v) if v != idx => {
+                    // Preempt the youngest running sequence (younger
+                    // than idx, so untouched this pass), then retry the
+                    // failed grow with the freed device bytes.
+                    let va = sched.slots[v].take().expect("victim occupied");
+                    sched.metrics.preemptions += 1;
+                    self.run.preemptions += 1;
+                    self.suspend_or_requeue(sched, va);
+                }
+                Some(_) => {
+                    // This sequence IS the youngest: it yields to the
+                    // older work instead of evicting it.
+                    let a = sched.slots[idx].take().expect("checked occupied");
+                    sched.metrics.preemptions += 1;
+                    self.run.preemptions += 1;
+                    self.suspend_or_requeue(sched, a);
+                    return false;
+                }
+                None => {
+                    // Alone (or preemption disabled) and still too big:
+                    // a genuine OOM failure.
+                    let a = sched.slots[idx].take().expect("checked occupied");
+                    sched.metrics.oom_failures += 1;
+                    outputs.push(Self::finish(a, FinishReason::Oom));
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Fold one decode-output row into slot `idx`: append the new KV row to
+    /// every layer, fold the H2O attention-mass signal, sample the next
+    /// token, emit its `Token` event, and re-compress any layer over budget
+    /// (returning whole pages). This is the single per-token commit path —
+    /// the non-speculative step and every speculative verify micro-step run
+    /// exactly this code, which is what makes speculative output
+    /// token-identical under every eviction policy. The caller has already
+    /// charged table growth for the appended row.
+    fn commit_token(
+        &mut self,
+        sched: &mut Scheduler,
+        idx: usize,
+        out: &DecodeOut,
+        m: usize,
+    ) -> Result<i32> {
+        let b = self.batch;
         let vocab = self.runtime.manifest.model.vocab;
         let needs_scores = self.policy.needs_scores();
+        let a = sched.slots[idx].as_mut().expect("checked occupied");
 
-        // Charge, append, sample, and re-compress oldest-first; on OOM
-        // preempt the youngest other sequence and retry. The new KV rows are
-        // appended only *after* the grow is charged, so a sequence preempted
-        // mid-pass still holds exactly its post-previous-step cache — the
-        // snapshot a swap-in can continue from token-identically (the decode
-        // output is a pure function of cache + token + position, so
-        // re-running this step after resume reproduces it). A sequence fails
-        // with Oom only when it cannot grow with the pool otherwise empty.
-        let mut order: Vec<(u64, usize)> = sched
-            .slots
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.as_ref().map(|a| (a.seq, i)))
-            .collect();
-        order.sort_unstable();
-        for (_, idx) in order {
-            if sched.slots[idx].is_none() {
-                continue; // preempted by an older sequence in this pass
+        // Append the new KV row to every layer and fold H2O scores (the
+        // grow was charged by the caller, so append cannot over-commit).
+        let pos = a.next_pos as u32;
+        for layer in 0..self.n_layer {
+            let base = (layer * b + idx) * self.row_elems;
+            let k_row = &out.new_k.data[base..base + self.row_elems];
+            let v_row = &out.new_v.data[base..base + self.row_elems];
+            a.cache.append(layer, k_row, v_row, pos)?;
+            if needs_scores {
+                let sbase = (layer * b + idx) * m;
+                let n = a.cache.layer_len(layer).min(m);
+                a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n])?;
             }
-            loop {
-                // One more row per layer this step; `grow` charges only the
-                // layers whose new row crosses a page boundary.
+        }
+
+        // Sample the next token from this slot's logits row.
+        let row = &out.logits.data[idx * vocab..(idx + 1) * vocab];
+        let tok = sample(row, a.req.sampling, &mut self.rng);
+        a.generated.push(tok);
+        a.last_token = tok;
+        a.next_pos += 1;
+        self.meter.add_tokens(1);
+        lifecycle::emit(
+            &a.req.events,
+            RequestEvent::Token { id: a.req.id, token: tok, pos: a.generated.len() - 1 },
+        );
+
+        // Per-layer re-compression with each layer's own budget
+        // (Algorithm 1, lines 15–19).
+        let grown = a.cache.bytes();
+        for layer in 0..self.n_layer {
+            let budget = a.plan.budgets[layer];
+            if a.cache.layer_len(layer) > budget {
+                let keep = self.policy.keep(&a.cache.layers[layer].meta, budget);
+                a.cache.retain(layer, &keep)?;
+                self.run.evictions += 1;
+            }
+        }
+        let shrunk = a.cache.bytes();
+        if shrunk != grown {
+            let mut lens = Vec::with_capacity(self.n_layer);
+            for layer in 0..self.n_layer {
+                lens.push(a.cache.layer_len(layer));
+            }
+            // Engine tables are never shared, so shrink cannot COW
+            // (and therefore cannot fail).
+            let _ = a.table.shrink(&lens);
+        }
+        Ok(tok)
+    }
+
+    /// Record the burst's inter-token intervals for slot `idx`: the gap
+    /// since the previous burst (anchored at `t_last_token`, suspended time
+    /// included) is split evenly over the `n` tokens just committed, so a
+    /// burst of n tokens records n samples and ITL stays comparable between
+    /// speculative and non-speculative serving.
+    fn note_burst_itl(&mut self, sched: &mut Scheduler, idx: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let per = {
+            let Some(a) = sched.slots[idx].as_mut() else { return };
+            let now = Instant::now();
+            let per = now.duration_since(a.t_last_token).as_secs_f64() / n as f64;
+            a.t_last_token = now;
+            per
+        };
+        for _ in 0..n {
+            self.note_itl(per);
+        }
+    }
+
+    /// A speculative burst step. Per running sequence: charge the burst's
+    /// predicted peak (k drafts + 1 bonus row per layer), draft up to k
+    /// tokens with the draft model (optimistic appends — no scores, no
+    /// events), roll the drafted rows back (`SequenceCache::truncate` +
+    /// page-granular `PageTable::shrink`), then verify with the target
+    /// model in micro-steps batched across sequences. Each micro-step runs
+    /// the exact non-speculative commit path, so the committed stream is
+    /// token-identical to non-speculative decode; a sequence stops at its
+    /// first draft mismatch, EOS, length cap, or cancellation.
+    fn decode_step_spec(
+        &mut self,
+        sched: &mut Scheduler,
+        outputs: &mut Vec<RequestOutput>,
+    ) -> Result<()> {
+        struct Burst {
+            idx: usize,
+            /// Draft budget for this burst (<= cfg draft_k; clamped by the
+            /// sequence's remaining length).
+            k: usize,
+            /// Committed sequence length (== next_pos) at burst start; the
+            /// rollback target.
+            start_pos: usize,
+            drafts: Vec<i32>,
+            /// Still proposing (the draft phase stops early at EOS).
+            drafting: bool,
+            /// Still taking verify micro-steps.
+            verifying: bool,
+            committed: usize,
+            accepted: usize,
+        }
+        let draft_k = self.cfg.spec.draft_k;
+        let mut bursts: Vec<Burst> = Vec::new();
+        // Membership + slot accounting, oldest first: the whole burst's
+        // page growth (k drafts + 1 bonus row per layer) is charged before
+        // any draft work, so a preemption victim is always chosen before
+        // its slot holds drafted rows and its snapshot stays step-boundary
+        // consistent.
+        for idx in Self::slot_order(sched) {
+            if sched.slots[idx].is_none() {
+                continue; // preempted charging an older burst
+            }
+            let a = sched.slots[idx].as_ref().expect("checked occupied");
+            if a.req.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                continue; // the next lifecycle phase retires it; don't decode
+            }
+            // Never draft past the length cap: k drafts + the bonus token
+            // must all fit in the sequence's remaining new-token room.
+            let room = a.effective_max_new.saturating_sub(a.generated.len());
+            if room == 0 {
+                continue;
+            }
+            let k = draft_k.min(room - 1);
+            let start_pos = a.next_pos;
+            if !self.charge_growth(sched, outputs, idx, k + 1) {
+                continue;
+            }
+            bursts.push(Burst {
+                idx,
+                k,
+                start_pos,
+                drafts: Vec::with_capacity(k),
+                drafting: k > 0,
+                verifying: true,
+                committed: 0,
+                accepted: 0,
+            });
+        }
+        if bursts.is_empty() {
+            return Ok(());
+        }
+
+        // --- draft phase: sequential micro-steps, batched across slots ----
+        for j in 0..draft_k {
+            let inputs: Vec<(usize, i32, i32)> = bursts
+                .iter()
+                .filter(|bu| bu.drafting && j < bu.k)
+                .map(|bu| {
+                    let a = sched.slots[bu.idx].as_ref().expect("burst slot occupied");
+                    let tok = if j == 0 { a.last_token } else { bu.drafts[j - 1] };
+                    (bu.idx, tok, (bu.start_pos + j) as i32)
+                })
+                .collect();
+            if inputs.is_empty() {
+                break;
+            }
+            let (out, _m) = self.batched_call(sched, true, &inputs)?;
+            let vocab = self.runtime.manifest.model.vocab;
+            for bu in bursts.iter_mut().filter(|bu| bu.drafting && j < bu.k) {
+                let a = sched.slots[bu.idx].as_mut().expect("burst slot occupied");
+                // Optimistic append of the drafted KV row — inside the
+                // charged envelope, and never scored, so rollback restores
+                // the H2O accumulators untouched.
+                let pos = (bu.start_pos + j) as u32;
+                for layer in 0..self.n_layer {
+                    let base = (layer * self.batch + bu.idx) * self.row_elems;
+                    a.cache.append(
+                        layer,
+                        &out.new_k.data[base..base + self.row_elems],
+                        &out.new_v.data[base..base + self.row_elems],
+                        pos,
+                    )?;
+                }
+                // Greedy proposal — deliberately rng-free so the verify
+                // micro-steps consume the sampling rng in exactly the
+                // non-speculative order.
+                let tok = argmax(&out.logits.data[bu.idx * vocab..(bu.idx + 1) * vocab]);
+                bu.drafts.push(tok);
+                if tok == tokenizer::EOS {
+                    bu.drafting = false; // nothing decodes past EOS
+                }
+            }
+        }
+
+        // --- rollback: drop every drafted row, return whole pages ---------
+        for bu in &bursts {
+            let a = sched.slots[bu.idx].as_mut().expect("burst slot occupied");
+            a.cache.truncate(bu.start_pos);
+            let mut lens = Vec::with_capacity(self.n_layer);
+            for layer in 0..self.n_layer {
+                lens.push(a.cache.layer_len(layer));
+            }
+            // Engine tables are never shared, so shrink cannot COW (and
+            // therefore cannot fail).
+            let _ = a.table.shrink(&lens);
+        }
+
+        // --- verify: target micro-steps, batched across sequences ---------
+        // Micro-step v checks drafts[v]; the step after the last draft is
+        // the bonus token the target always commits, so a burst commits
+        // between 1 and k+1 tokens. Every commit is `commit_token` — the
+        // non-speculative path — run from the rolled-back cache state.
+        for v in 0..=draft_k {
+            // Honor mid-burst cancellation between micro-steps: the
+            // sequence keeps its committed prefix, its unverified drafts
+            // count as rollback, and the next lifecycle phase retires it
+            // (rollback never emits events).
+            for bu in bursts.iter_mut() {
+                if !bu.verifying {
+                    continue;
+                }
+                match sched.slots[bu.idx].as_ref() {
+                    Some(a) if a.req.cancel.as_ref().is_some_and(|c| c.is_cancelled()) => {
+                        bu.verifying = false;
+                    }
+                    Some(_) => {}
+                    None => bu.verifying = false, // Oom-finished earlier
+                }
+            }
+            let inputs: Vec<(usize, i32, i32)> = bursts
+                .iter()
+                .filter(|bu| bu.verifying && v <= bu.drafts.len())
+                .map(|bu| {
+                    let a = sched.slots[bu.idx].as_ref().expect("burst slot occupied");
+                    (bu.idx, a.last_token, a.next_pos as i32)
+                })
+                .collect();
+            if inputs.is_empty() {
+                break;
+            }
+            let (out, m) = self.batched_call(sched, false, &inputs)?;
+            for bu in bursts.iter_mut() {
+                if !(bu.verifying && v <= bu.drafts.len()) {
+                    continue;
+                }
+                let idx = bu.idx;
+                // Charge the verify append. This cannot fail — the burst's
+                // peak was charged up-front and rollback freed more than
+                // verify re-grows — but handle it defensively.
                 let (old_lens, new_lens) = {
-                    let a = sched.slots[idx].as_ref().expect("checked occupied");
+                    let a = sched.slots[idx].as_ref().expect("burst slot occupied");
                     let mut old = Vec::with_capacity(self.n_layer);
                     let mut new = Vec::with_capacity(self.n_layer);
                     for layer in 0..self.n_layer {
@@ -1035,105 +1458,90 @@ impl Engine {
                     }
                     (old, new)
                 };
-                if sched.slots[idx]
+                let grew = sched.slots[idx]
                     .as_mut()
-                    .expect("checked occupied")
+                    .expect("burst slot occupied")
                     .table
                     .grow(&old_lens, &new_lens)
-                    .is_ok()
+                    .is_ok();
+                if !grew {
+                    let a = sched.slots[idx].take().expect("burst slot occupied");
+                    sched.metrics.oom_failures += 1;
+                    outputs.push(Self::finish(a, FinishReason::Oom));
+                    bu.verifying = false;
+                    continue;
+                }
                 {
-                    let a = sched.slots[idx].as_mut().expect("checked occupied");
+                    let a = sched.slots[idx].as_mut().expect("burst slot occupied");
                     a.peak_bytes = a.peak_bytes.max(a.table.bytes());
-                    break;
                 }
-                let victim = if self.cfg.preemption && sched.running() > 1 {
-                    sched.youngest_running()
-                } else {
-                    None
+                let tok = self.commit_token(sched, idx, &out, m)?;
+                bu.committed += 1;
+                let done = {
+                    let a = sched.slots[idx].as_ref().expect("burst slot occupied");
+                    tok == tokenizer::EOS || a.generated.len() >= a.effective_max_new
                 };
-                match victim {
-                    Some(v) if v != idx => {
-                        // Preempt the youngest running sequence (younger
-                        // than idx, so untouched this pass), then retry the
-                        // failed grow with the freed device bytes.
-                        let va = sched.slots[v].take().expect("victim occupied");
-                        sched.metrics.preemptions += 1;
-                        self.run.preemptions += 1;
-                        self.suspend_or_requeue(sched, va);
-                    }
-                    Some(_) => {
-                        // This sequence IS the youngest: it yields to the
-                        // older work instead of evicting it.
-                        let a = sched.slots[idx].take().expect("checked occupied");
-                        sched.metrics.preemptions += 1;
-                        self.run.preemptions += 1;
-                        self.suspend_or_requeue(sched, a);
-                        break;
-                    }
-                    None => {
-                        // Alone (or preemption disabled) and still too big:
-                        // a genuine OOM failure.
-                        let a = sched.slots[idx].take().expect("checked occupied");
-                        sched.metrics.oom_failures += 1;
-                        outputs.push(Self::finish(a, FinishReason::Oom));
-                        break;
-                    }
+                if v < bu.drafts.len() && tok == bu.drafts[v] {
+                    bu.accepted += 1;
+                } else {
+                    // First mismatch: the committed token is the target's
+                    // correction; everything after it in the draft is dead.
+                    bu.verifying = false;
+                }
+                if done || v == bu.drafts.len() {
+                    bu.verifying = false;
                 }
             }
-            let Some(a) = sched.slots[idx].as_mut() else { continue };
+        }
 
-            // Append the new KV row to every layer and fold H2O scores (the
-            // grow was charged above, so append cannot over-commit).
-            let pos = a.next_pos as u32;
-            for layer in 0..self.n_layer {
-                let base = (layer * b + idx) * self.row_elems;
-                let k_row = &out.new_k.data[base..base + self.row_elems];
-                let v_row = &out.new_v.data[base..base + self.row_elems];
-                a.cache.append(layer, k_row, v_row, pos)?;
-                if needs_scores {
-                    let sbase = (layer * b + idx) * m;
-                    let n = a.cache.layer_len(layer).min(m);
-                    a.cache.add_scores(layer, &out.scores.data[sbase..sbase + n])?;
-                }
-            }
+        // --- burst end: per-token ITL + spec metrics ----------------------
+        for bu in &bursts {
+            self.note_burst_itl(sched, bu.idx, bu.committed);
+            sched.metrics.spec_steps += 1;
+            sched.metrics.spec_drafted += bu.drafts.len() as u64;
+            sched.metrics.spec_accepted += bu.accepted as u64;
+            sched.metrics.spec_rollback_tokens += (bu.drafts.len() - bu.accepted) as u64;
+        }
+        Ok(())
+    }
 
-            // Sample the next token from this slot's logits row.
-            let row = &out.logits.data[idx * vocab..(idx + 1) * vocab];
-            let tok = sample(row, a.req.sampling, &mut self.rng);
-            a.generated.push(tok);
-            a.last_token = tok;
-            a.next_pos += 1;
-            self.meter.add_tokens(1);
-            let now = Instant::now();
-            let itl = now.duration_since(a.t_last_token).as_secs_f64();
-            a.t_last_token = now;
-            lifecycle::emit(
-                &a.req.events,
-                RequestEvent::Token { id: a.req.id, token: tok, pos: a.generated.len() - 1 },
-            );
-            self.note_itl(itl);
+    /// The non-speculative step: one batched decode over every occupied
+    /// slot, then charge/commit oldest-first with OOM resolved by
+    /// preempting the youngest running sequence.
+    fn decode_step_plain(
+        &mut self,
+        sched: &mut Scheduler,
+        outputs: &mut Vec<RequestOutput>,
+    ) -> Result<()> {
+        let inputs: Vec<(usize, i32, i32)> = Self::slot_order(sched)
+            .into_iter()
+            .map(|i| {
+                let a = sched.slots[i].as_ref().expect("order lists occupied slots");
+                (i, a.last_token, a.next_pos as i32)
+            })
+            .collect();
+        if inputs.is_empty() {
+            return Ok(());
+        }
+        let (out, m) = self.batched_call(sched, false, &inputs)?;
 
-            // Per-layer re-compression with each layer's own budget
-            // (Algorithm 1, lines 15–19).
-            let grown = a.cache.bytes();
-            for layer in 0..self.n_layer {
-                let budget = a.plan.budgets[layer];
-                if a.cache.layer_len(layer) > budget {
-                    let keep = self.policy.keep(&a.cache.layers[layer].meta, budget);
-                    a.cache.retain(layer, &keep)?;
-                    self.run.evictions += 1;
-                }
+        // Charge and commit oldest-first; on OOM preempt the youngest other
+        // sequence and retry (`charge_growth`). The new KV rows are appended
+        // only *after* the grow is charged, so a sequence preempted mid-pass
+        // still holds exactly its post-previous-step cache — the snapshot a
+        // swap-in can continue from token-identically (the decode output is
+        // a pure function of cache + token + position, so re-running this
+        // step after resume reproduces it). A sequence fails with Oom only
+        // when it cannot grow with the pool otherwise empty.
+        for (idx, _, _) in inputs {
+            if sched.slots[idx].is_none() {
+                continue; // preempted by an older sequence in this pass
             }
-            let shrunk = a.cache.bytes();
-            if shrunk != grown {
-                let mut lens = Vec::with_capacity(self.n_layer);
-                for layer in 0..self.n_layer {
-                    lens.push(a.cache.layer_len(layer));
-                }
-                // Engine tables are never shared, so shrink cannot COW
-                // (and therefore cannot fail).
-                let _ = a.table.shrink(&lens);
+            if !self.charge_growth(sched, outputs, idx, 1) {
+                continue;
             }
+            self.commit_token(sched, idx, &out, m)?;
+            self.note_burst_itl(sched, idx, 1);
         }
         Ok(())
     }

@@ -28,6 +28,13 @@
 //! admission, so `Started` and `Token` events repeat from `pos` 0 —
 //! consumers must treat `pos` as authoritative, not append blindly.
 //! Suspend/resume never re-emits: the partial output is preserved.
+//!
+//! Speculative decoding (`--spec-k`) does not change the contract, only the
+//! cadence: a verify burst emits one `Token` event per *committed* token,
+//! so several consecutive-`pos` events can arrive from a single engine
+//! step. Draft proposals that are rolled back never emit — an event fires
+//! only from the ordinary commit path, after the target model verifies the
+//! token.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};

@@ -22,7 +22,15 @@
 //!   (`kvcache::{PageTable, PagedKvPool}`): admission and per-step growth
 //!   allocate whole fixed-size pages (`--kv-page-bytes`), eviction returns
 //!   whole pages, and suspend/resume is a page-table retag that moves only
-//!   private (refcount-1) pages between tiers.
+//!   private (refcount-1) pages between tiers. With `--spec-k N` the decode
+//!   step runs a speculative *draft → verify → rollback* burst: each burst
+//!   first charges its worst-case `N + 1` rows per layer against the pool
+//!   (preempting exactly as a plain step would), a draft model proposes
+//!   `N` tokens on optimistic KV appends, `SequenceCache::truncate` removes
+//!   the drafted rows, and batched one-token verify micro-steps commit the
+//!   accepted prefix through the ordinary per-token path — evictions, H2O
+//!   scores, lifecycle `Token` events and all. Rolled-back tokens are never
+//!   observable: no event fires and no score accumulates for a draft row.
 //! * **scheduler** — the continuous-batching state machine the engine
 //!   steps:
 //!

@@ -46,6 +46,17 @@
 //!   `DeadlineExceeded`. Dropping the state releases its reservation
 //!   (RAII), so a cancel while swapped out frees the host tier without a
 //!   swap-in.
+//! * **Speculative bursts** (`ServeConfig::spec`): a decode step may commit
+//!   up to `draft_k + 1` tokens per slot via draft → verify → rollback
+//!   (see `Engine`). The scheduler is burst-agnostic — each burst charges
+//!   its `draft_k + 1`-row worst case up front through the same
+//!   grow-with-preempt path a plain step uses, bursts are registered
+//!   oldest-first so a preemption victim (always the youngest) is never a
+//!   sequence already mid-burst, and every snapshot a suspend takes remains
+//!   step-boundary consistent: drafted rows are truncated before any
+//!   suspend can observe them. Acceptance statistics land in
+//!   `SchedulerMetrics::{spec_steps, spec_drafted, spec_accepted,
+//!   spec_rollback_tokens}`.
 //!
 //! The scheduler owns no model state; `Active` carries everything a running
 //! sequence needs (its per-sequence cache, budget plan, and RAII page

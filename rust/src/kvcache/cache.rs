@@ -170,6 +170,31 @@ impl SequenceCache {
         Ok(())
     }
 
+    /// Roll the sequence back to logical length `len`: drop every trailing
+    /// slot whose absolute position is `>= len`, in every layer. This is the
+    /// speculative-decode rollback primitive — drafted rows are always the
+    /// contiguous tail of each layer (appended after the last committed
+    /// token, never evicted mid-burst, never scored), so removing that tail
+    /// restores the cache byte-exactly to its pre-draft state: surviving
+    /// K/V payload, positions, *and* H2O score accumulators are untouched.
+    /// Returns the number of rows dropped across all layers.
+    pub fn truncate(&mut self, len: usize) -> usize {
+        let cut = len as u32;
+        let row = self.row_elems;
+        let mut dropped = 0usize;
+        for lc in &mut self.layers {
+            let mut keep = lc.meta.len();
+            while keep > 0 && lc.meta[keep - 1].position >= cut {
+                keep -= 1;
+            }
+            dropped += lc.meta.len() - keep;
+            lc.meta.truncate(keep);
+            lc.k.truncate(keep * row);
+            lc.v.truncate(keep * row);
+        }
+        dropped
+    }
+
     /// Freeze this cache into a host-side snapshot for swap-out. The cache
     /// is captured as-is — post-eviction, so each layer holds at most its
     /// budget — which is what makes suspended sequences cheap: the bytes
@@ -384,6 +409,44 @@ mod tests {
         assert_eq!(back.layers[0].k, k0);
         assert_eq!(back.layers[0].meta, meta0); // H2O scores survive
         assert_eq!(back.layer_len(1), 1);
+    }
+
+    #[test]
+    fn truncate_drops_drafted_tail_only() {
+        let mut c = SequenceCache::new(2, 2);
+        // Committed prefix: positions 0..3 in layer 0 (with eviction hole at
+        // pos 1), positions 0..2 in layer 1.
+        for p in [0u32, 2, 3] {
+            c.append(0, &[p as f32; 2], &[p as f32 + 10.0; 2], p).unwrap();
+        }
+        for p in [0u32, 1] {
+            c.append(1, &[p as f32; 2], &[p as f32; 2], p).unwrap();
+        }
+        c.add_scores(0, &[0.5, 0.25, 0.125]).unwrap();
+        let k0 = c.layers[0].k.clone();
+        let meta0 = c.layers[0].meta.clone();
+        // Draft two rows at positions 4, 5 (scores never accumulated).
+        for p in [4u32, 5] {
+            c.append(0, &[99.0; 2], &[99.0; 2], p).unwrap();
+            c.append(1, &[99.0; 2], &[99.0; 2], p).unwrap();
+        }
+        assert_eq!(c.truncate(4), 4);
+        assert_eq!(c.layers[0].k, k0);
+        assert_eq!(c.layers[0].meta, meta0); // positions + H2O scores intact
+        assert_eq!(c.layer_len(1), 2);
+        // Idempotent once the tail is gone.
+        assert_eq!(c.truncate(4), 0);
+    }
+
+    #[test]
+    fn truncate_to_zero_empties() {
+        let mut c = SequenceCache::new(1, 3);
+        for p in 0..4 {
+            c.append(0, &[0.0; 3], &[0.0; 3], p).unwrap();
+        }
+        assert_eq!(c.truncate(0), 4);
+        assert_eq!(c.total_tokens(), 0);
+        assert!(c.layers[0].k.is_empty() && c.layers[0].v.is_empty());
     }
 
     #[test]

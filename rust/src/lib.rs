@@ -41,7 +41,15 @@
 //! 3. **Step** — one batched decode over the occupied slots on the smallest
 //!    capacity tier that fits; new KV rows are appended, charged to the
 //!    pool, then each layer is re-compressed to its own budget (the paper's
-//!    2-D management).
+//!    2-D management). With speculative decoding enabled (`--spec-k N`),
+//!    each step becomes a *draft → verify → rollback* burst instead: a
+//!    small draft model proposes up to `N` tokens per sequence against its
+//!    own optimistically-appended KV rows, `SequenceCache::truncate` rolls
+//!    those rows back, and the target model then verifies the proposals in
+//!    batched one-token micro-steps that run the exact non-speculative
+//!    commit path — so the output is token-identical to `--spec-k 0` under
+//!    every eviction policy, and up to `N + 1` tokens land per engine step
+//!    (the accepted prefix plus the verifier's own bonus token).
 //! 4. **Lifecycle** — requests may carry an event sink, a cancel token,
 //!    and a deadline ([`coordinator::lifecycle`]). The engine publishes a
 //!    `RequestEvent` at every transition (admission, each decoded token,

@@ -50,6 +50,9 @@ ENGINE FLAGS (serve/generate)
                        (clamped up to one token row)           [16384]
   --batch-wait-ms N    wait up to N ms for more arrivals
                        before stepping a small batch           [0]
+  --spec-k N           speculative decoding: draft N tokens per
+                       sequence per step and verify them in one
+                       batched pass (0 = disabled)              [0]
   --request-deadline-ms N
                        default per-request wall-clock deadline,
                        enforced at decode-step boundaries; an
@@ -95,6 +98,10 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
     cfg.kv_page_bytes = args.usize("kv-page-bytes", cfg.kv_page_bytes)?;
     cfg.batch_wait_ms = args.u64("batch-wait-ms", cfg.batch_wait_ms)?;
     cfg.request_deadline_ms = args.u64("request-deadline-ms", cfg.request_deadline_ms)?;
+    if let Some(k) = args.opt_str("spec-k") {
+        let k: usize = k.parse().map_err(|_| anyhow!("--spec-k expects an integer, got {k}"))?;
+        cfg = cfg.with_spec_k(k);
+    }
     Ok(cfg)
 }
 
@@ -181,7 +188,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_inspect(args: &Args) -> Result<()> {
     let dir = args.str("artifacts", "sim://tiny");
     let m = if let Some(spec) = dir.strip_prefix("sim://") {
-        squeezeattention::runtime::SimModel::new(spec)?.manifest()
+        squeezeattention::runtime::SimModel::new(spec)?.manifest().clone()
     } else {
         squeezeattention::config::Manifest::load(&dir)?
     };

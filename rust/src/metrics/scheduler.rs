@@ -91,6 +91,21 @@ pub struct SchedulerMetrics {
     pub cancelled: u64,
     /// Requests that exceeded their deadline at a step boundary.
     pub deadline_exceeded: u64,
+    /// Speculative bursts executed (one per sequence per decode step while
+    /// spec mode is on — the denominator for the per-step spec rates).
+    pub spec_steps: u64,
+    /// Draft-model tokens proposed across all bursts (`draft_k` per burst,
+    /// less when the sequence is near its length cap).
+    pub spec_drafted: u64,
+    /// Drafted tokens the target model verified and committed. Excludes the
+    /// per-burst bonus token the target samples itself, so
+    /// `spec_accepted / spec_drafted` is the draft acceptance rate.
+    pub spec_accepted: u64,
+    /// Drafted KV rows rolled back after verification rejected them
+    /// (`spec_drafted - spec_accepted` when every burst runs to
+    /// completion; tracked separately because a mid-burst cancel rolls
+    /// back rows that were never verified).
+    pub spec_rollback_tokens: u64,
 }
 
 impl SchedulerMetrics {
@@ -109,6 +124,35 @@ impl SchedulerMetrics {
             0.0
         } else {
             self.mean_occupancy() / self.slots as f64
+        }
+    }
+
+    /// Fraction of drafted tokens the target accepted.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
+    /// Mean tokens committed per speculative burst: accepted drafts plus the
+    /// one token the target always samples itself. > 1 means speculation is
+    /// paying for the draft passes.
+    pub fn spec_accepted_per_step(&self) -> f64 {
+        if self.spec_steps == 0 {
+            0.0
+        } else {
+            (self.spec_accepted + self.spec_steps) as f64 / self.spec_steps as f64
+        }
+    }
+
+    /// Mean drafted rows rolled back per burst (rollback depth).
+    pub fn spec_rollback_depth(&self) -> f64 {
+        if self.spec_steps == 0 {
+            0.0
+        } else {
+            self.spec_rollback_tokens as f64 / self.spec_steps as f64
         }
     }
 
@@ -144,6 +188,13 @@ impl SchedulerMetrics {
             ("oom_failures", Json::num(self.oom_failures as f64)),
             ("cancelled", Json::num(self.cancelled as f64)),
             ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
+            ("spec_steps", Json::num(self.spec_steps as f64)),
+            ("spec_drafted", Json::num(self.spec_drafted as f64)),
+            ("spec_accepted", Json::num(self.spec_accepted as f64)),
+            ("spec_rollback_tokens", Json::num(self.spec_rollback_tokens as f64)),
+            ("spec_acceptance_rate", Json::num(self.spec_acceptance_rate())),
+            ("spec_accepted_per_step", Json::num(self.spec_accepted_per_step())),
+            ("spec_rollback_depth", Json::num(self.spec_rollback_depth())),
         ])
     }
 }
@@ -178,6 +229,29 @@ mod tests {
         assert_eq!(j.get("cancelled").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("deadline_exceeded").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("mean_occupancy").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn spec_rates_and_json_export() {
+        let mut m = SchedulerMetrics::default();
+        assert_eq!(m.spec_acceptance_rate(), 0.0);
+        assert_eq!(m.spec_accepted_per_step(), 0.0);
+        assert_eq!(m.spec_rollback_depth(), 0.0);
+        m.spec_steps = 10;
+        m.spec_drafted = 40;
+        m.spec_accepted = 30;
+        m.spec_rollback_tokens = 10;
+        assert!((m.spec_acceptance_rate() - 0.75).abs() < 1e-12);
+        assert!((m.spec_accepted_per_step() - 4.0).abs() < 1e-12);
+        assert!((m.spec_rollback_depth() - 1.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("spec_steps").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("spec_drafted").unwrap().as_usize(), Some(40));
+        assert_eq!(j.get("spec_accepted").unwrap().as_usize(), Some(30));
+        assert_eq!(j.get("spec_rollback_tokens").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("spec_acceptance_rate").unwrap().as_f64(), Some(0.75));
+        assert_eq!(j.get("spec_accepted_per_step").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("spec_rollback_depth").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

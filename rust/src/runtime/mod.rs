@@ -85,7 +85,7 @@ impl Runtime {
     pub fn load(artifact_dir: &str, kernel: &str) -> Result<Self> {
         if let Some(spec) = artifact_dir.strip_prefix("sim://") {
             let model = SimModel::new(spec)?;
-            let manifest = model.manifest();
+            let manifest = model.manifest().clone();
             return Ok(Self {
                 manifest,
                 kernel: kernel.to_string(),

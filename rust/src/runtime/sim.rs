@@ -43,6 +43,7 @@ const SALT_S: u64 = 0xA1B2_C3D4_E5F6_0005;
 const SALT_P: u64 = 0xA1B2_C3D4_E5F6_0006;
 const SALT_C: u64 = 0xA1B2_C3D4_E5F6_0007;
 const SALT_B: u64 = 0xA1B2_C3D4_E5F6_0008;
+const SALT_D: u64 = 0xA1B2_C3D4_E5F6_0009;
 
 /// SplitMix64 finalizer: uniform 64-bit mixing of an arbitrary key.
 fn mix(x: u64) -> u64 {
@@ -70,14 +71,21 @@ pub struct SimModel {
     vocab: usize,
     /// n_head * head_dim — elements per K (or V) row.
     row: usize,
+    /// Draft variant ("tiny-draft"): identical shapes and K/V hashing, but
+    /// logits get a small deterministic nudge so greedy argmax agrees with
+    /// the target model often — not always. That partial agreement is what
+    /// speculative decoding amortizes.
+    draft: bool,
 }
 
 impl SimModel {
-    /// Build the named sim model. Only the "tiny" shape exists today;
-    /// `sim://` with an empty tail also resolves to it.
+    /// Build the named sim model. Two specs exist: "tiny" (the target shape;
+    /// `sim://` with an empty tail also resolves to it) and "tiny-draft"
+    /// (same geometry, perturbed logits — the speculative draft model).
     pub fn new(spec: &str) -> Result<Self> {
-        if !spec.is_empty() && spec != "tiny" {
-            return Err(anyhow!("unknown sim model '{spec}' (available: tiny)"));
+        let draft = spec == "tiny-draft";
+        if !spec.is_empty() && spec != "tiny" && !draft {
+            return Err(anyhow!("unknown sim model '{spec}' (available: tiny, tiny-draft)"));
         }
         let (n_layer, n_head, head_dim, vocab, max_seq) = (8usize, 4usize, 32usize, 272usize, 640usize);
         let mut artifacts = Vec::new();
@@ -107,7 +115,7 @@ impl SimModel {
         }
         let manifest = Manifest {
             model: ModelCfg {
-                name: "sim-tiny".to_string(),
+                name: if draft { "sim-tiny-draft" } else { "sim-tiny" }.to_string(),
                 n_layer,
                 d_model: n_head * head_dim,
                 n_head,
@@ -137,11 +145,14 @@ impl SimModel {
             artifacts,
             dir: PathBuf::new(),
         };
-        Ok(Self { manifest, n_layer, n_head, head_dim, vocab, row: n_head * head_dim })
+        Ok(Self { manifest, n_layer, n_head, head_dim, vocab, row: n_head * head_dim, draft })
     }
 
-    pub fn manifest(&self) -> Manifest {
-        self.manifest.clone()
+    /// Borrow the manifest. Callers that need ownership clone explicitly;
+    /// the engine step path only ever reads shape fields, and cloning the
+    /// full artifact table per step was pure waste.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
     }
 
     fn k_elem(&self, token: i32, layer: usize, j: usize) -> f32 {
@@ -217,6 +228,16 @@ impl SimModel {
                 dot += *s * feat(t as u64, j as u64, SALT_E);
             }
             *o = dot * inv_row + 1e-3 * unit(mix(t as u64 ^ SALT_B));
+        }
+        if self.draft {
+            // Draft-model nudge: comparable to the top-1/top-2 logit gap, so
+            // the draft's greedy pick matches the target's at most positions
+            // but diverges at some — giving speculative decode a realistic
+            // mix of accepted prefixes and rollbacks.
+            let key = (token as u64).wrapping_mul(1009).wrapping_add(position as u64);
+            for (t, o) in out.iter_mut().enumerate() {
+                *o += 2e-3 * feat(key, t as u64, SALT_D);
+            }
         }
         // Greedy decoding must be length-deterministic for the scheduler
         // tests: push EOS far below the argmax range (it stays finite, so
@@ -349,7 +370,8 @@ mod tests {
 
     #[test]
     fn manifest_shape_contract() {
-        let m = model().manifest();
+        let sim = model();
+        let m = sim.manifest();
         assert_eq!(m.model.n_layer, 8);
         assert_eq!(m.model.n_head * m.model.head_dim, 128);
         assert_eq!(m.prefill_buckets("pallas"), vec![64, 128, 256, 512]);
@@ -409,5 +431,31 @@ mod tests {
     fn unknown_model_rejected() {
         assert!(SimModel::new("huge").is_err());
         assert!(SimModel::new("").is_ok());
+        assert!(SimModel::new("tiny-draft").is_ok());
+    }
+
+    #[test]
+    fn draft_variant_shares_kv_hashing_but_perturbs_logits() {
+        let target = model();
+        let draft = SimModel::new("tiny-draft").unwrap();
+        assert_eq!(draft.manifest().model.name, "sim-tiny-draft");
+        let prompt = vec![256, 5, 9, 22, 257];
+        let a = target.prefill(&prompt, 64).unwrap();
+        let b = draft.prefill(&prompt, 64).unwrap();
+        // Same hashing scheme: a row the draft appends during its burst is
+        // byte-identical to the row the target would append for that token.
+        assert_eq!(a.k.data, b.k.data);
+        assert_eq!(a.v.data, b.v.data);
+        assert_eq!(a.cos_sims.data, b.cos_sims.data);
+        // Logits differ, but only within the nudge amplitude.
+        assert_ne!(a.logits.data, b.logits.data);
+        let max_delta = a
+            .logits
+            .data
+            .iter()
+            .zip(&b.logits.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_delta > 0.0 && max_delta <= 2.1e-3, "delta {max_delta}");
     }
 }

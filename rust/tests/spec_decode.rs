@@ -1,0 +1,397 @@
+//! Speculative-decoding parity suite (on `sim://tiny`, so it always runs).
+//!
+//! The contract under test: a draft→verify→rollback burst commits exactly
+//! the tokens non-speculative decode would have committed, under every
+//! eviction policy's squeezed cache — because each verify micro-step runs
+//! the engine's single per-token commit path from a byte-exact rollback.
+//!
+//! * every policy × draft_k ∈ {1, 4, 8} is token-identical to the
+//!   non-speculative run, budget plans included;
+//! * parity survives a suspend/resume cycle (capped device pool + host
+//!   spill forces swap-outs mid-generation);
+//! * a cancel mid-generation keeps a prefix of the non-speculative stream,
+//!   emits `Token` events only for committed tokens (rollback never emits,
+//!   positions stay dense), and drains the pool;
+//! * acceptance metrics: bursts commit more than one token per step on the
+//!   paired draft model;
+//! * `SequenceCache::truncate` rollback is byte-exact against a shadow
+//!   cache under random append/score/retain/truncate/snapshot-restore
+//!   interleavings, and the paged tables conserve page refcounts.
+
+use std::collections::BTreeMap;
+
+use squeezeattention::config::{PolicyKind, ServeConfig};
+use squeezeattention::coordinator::{
+    Engine, FinishReason, Request, RequestEvent, RequestHandle, RequestOutput,
+};
+use squeezeattention::kvcache::{KvPool, PageTable, PagedKvPool, SequenceCache, Tier};
+use squeezeattention::util::prop::{check, ensure, ensure_eq};
+use squeezeattention::workload::{Task, TaskGen, TraceSpec};
+
+const ARTIFACTS: &str = "sim://tiny";
+
+fn cfg(policy: PolicyKind) -> ServeConfig {
+    ServeConfig::new(ARTIFACTS).with_budget(48).with_policy(policy)
+}
+
+fn requests(n: usize, prompt_len: usize, max_new: usize, seed: u64) -> Vec<Request> {
+    TraceSpec::closed(n, prompt_len, max_new, seed)
+        .generate()
+        .iter()
+        .enumerate()
+        .map(|(i, it)| Request::new(i as u64, it.sample.prompt.clone(), max_new))
+        .collect()
+}
+
+fn by_id(outs: Vec<RequestOutput>) -> BTreeMap<u64, RequestOutput> {
+    outs.into_iter().map(|o| (o.id, o)).collect()
+}
+
+/// Closed-batch run on a fresh engine; asserts the pool drains.
+fn run(cfg: ServeConfig, reqs: Vec<Request>) -> BTreeMap<u64, RequestOutput> {
+    let mut eng = Engine::new(cfg).unwrap();
+    let outs = eng.generate_batch(reqs);
+    assert_eq!(eng.pool().in_use(), 0, "pool not fully released");
+    by_id(outs)
+}
+
+fn assert_parity(
+    base: &BTreeMap<u64, RequestOutput>,
+    spec: &BTreeMap<u64, RequestOutput>,
+    label: &str,
+) {
+    assert_eq!(base.len(), spec.len(), "{label}: output count diverged");
+    for (id, b) in base {
+        let s = &spec[id];
+        assert!(
+            matches!(b.finish, FinishReason::Eos | FinishReason::Length),
+            "{label} id={id}: baseline finish {:?}",
+            b.finish
+        );
+        assert_eq!(b.finish, s.finish, "{label} id={id}: finish reason diverged");
+        assert_eq!(
+            b.generated, s.generated,
+            "{label} id={id}: speculative decode changed the generated tokens"
+        );
+        assert_eq!(b.plan.budgets, s.plan.budgets, "{label} id={id}: budget plan diverged");
+    }
+}
+
+#[test]
+fn spec_is_token_identical_for_every_policy_and_draft_k() {
+    for policy in PolicyKind::ALL {
+        let reqs = requests(6, 80, 16, 11);
+        let base = run(cfg(policy), reqs.clone());
+        for k in [1usize, 4, 8] {
+            let spec = run(cfg(policy).with_spec_k(k), reqs.clone());
+            assert_parity(&base, &spec, &format!("{} k={k}", policy.name()));
+        }
+    }
+}
+
+#[test]
+fn spec_parity_survives_suspend_resume() {
+    // Same pressure shape as the lifecycle suite: a 600 KiB device pool
+    // over 6 growing sequences at max_batch 4 forces suspensions to the
+    // host tier mid-generation. Resume must land the verify micro-steps on
+    // exactly the swapped cache state. H2O is the hardest policy here (the
+    // score accumulators must survive both rollback and the swap).
+    for policy in [PolicyKind::SlidingWindow, PolicyKind::H2o] {
+        let make_cfg = |k: usize| {
+            let mut c = cfg(policy).with_host_spill(8 * 1024 * 1024).with_spec_k(k);
+            c.max_batch = 4;
+            c.kv_pool_bytes = 600 * 1024;
+            c
+        };
+        let reqs = requests(6, 16, 48, 31);
+        let base = run(make_cfg(0), reqs.clone());
+        for k in [1usize, 4, 8] {
+            let mut eng = Engine::new(make_cfg(k)).unwrap();
+            let outs = eng.generate_batch(reqs.clone());
+            let m = eng.sched_metrics();
+            assert!(
+                m.preemptions > 0,
+                "{} k={k}: pool pressure never preempted — resize the workload",
+                policy.name()
+            );
+            assert!(
+                m.swap_ins > 0,
+                "{} k={k}: nothing ever resumed from the host tier",
+                policy.name()
+            );
+            assert_eq!(eng.pool().in_use(), 0, "device pool not drained");
+            assert_eq!(eng.pool().in_use_of(Tier::Host), 0, "host tier not drained");
+            assert_parity(&base, &by_id(outs), &format!("{} swap k={k}", policy.name()));
+        }
+    }
+}
+
+#[test]
+fn spec_commits_more_than_one_token_per_step() {
+    let mut eng = Engine::new(cfg(PolicyKind::SlidingWindow).with_spec_k(4)).unwrap();
+    let outs = eng.generate_batch(requests(6, 80, 24, 13));
+    assert_eq!(outs.len(), 6);
+    let m = eng.sched_metrics();
+    assert!(m.spec_steps > 0, "no speculative bursts ran");
+    assert!(m.spec_drafted > 0, "no tokens were ever drafted");
+    assert!(
+        m.spec_accepted > 0,
+        "draft model never agreed with the target — check the sim draft perturbation"
+    );
+    assert!(
+        m.spec_accepted_per_step() > 1.0,
+        "bursts must beat one token per step; got {}",
+        m.spec_accepted_per_step()
+    );
+    let rate = m.spec_acceptance_rate();
+    assert!((0.0..=1.0).contains(&rate), "acceptance rate out of range: {rate}");
+    assert_eq!(
+        m.spec_accepted + m.spec_rollback_tokens,
+        m.spec_drafted,
+        "every drafted token is either accepted or rolled back"
+    );
+}
+
+#[test]
+fn cancel_mid_generation_keeps_prefix_and_never_emits_rolled_back_tokens() {
+    let spec_cfg = || cfg(PolicyKind::SlidingWindow).with_spec_k(4);
+    let mut gen = TaskGen::new(5);
+    let prompt = gen.sample(Task::Copy, 64).prompt;
+
+    // Reference stream: the full non-speculative run of the same request.
+    let full = run(cfg(PolicyKind::SlidingWindow), vec![Request::new(0, prompt.clone(), 200)]);
+    let full = &full[&0].generated;
+    assert!(full.len() > 20, "reference run too short to cancel inside");
+
+    // Deterministic cancel between bursts: step a few times, cancel, drain.
+    let mut eng = Engine::new(spec_cfg()).unwrap();
+    let mut req = Request::new(0, prompt.clone(), 200);
+    let handle = RequestHandle::attach(&mut req);
+    eng.submit(req).unwrap();
+    let mut outs = Vec::new();
+    for _ in 0..3 {
+        outs.extend(eng.step().unwrap());
+        assert!(outs.is_empty(), "request finished before it could be cancelled");
+    }
+    handle.cancel();
+    while eng.has_work() {
+        outs.extend(eng.step().unwrap());
+    }
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::Cancelled);
+    let got = &outs[0].generated;
+    assert!(!got.is_empty(), "partial output must be preserved");
+    assert!(got.len() < 200, "cancel did not stop decode early");
+    assert_eq!(
+        &full[..got.len()],
+        &got[..],
+        "cancelled speculative output is not a prefix of the non-speculative stream"
+    );
+    assert_eq!(eng.pool().in_use(), 0, "cancel did not release the reservation");
+
+    // Token events must match the committed output exactly — one event per
+    // committed token with dense positions; rolled-back drafts never emit.
+    let evs: Vec<RequestEvent> = handle.events().try_iter().collect();
+    assert!(matches!(evs.last(), Some(RequestEvent::Cancelled(_))));
+    let mut toks = Vec::new();
+    for ev in &evs {
+        if let RequestEvent::Token { token, pos, .. } = ev {
+            assert_eq!(*pos, toks.len(), "token positions must stay dense across bursts");
+            toks.push(*token);
+        }
+    }
+    assert_eq!(toks, *got, "token events diverge from the committed output");
+
+    // Asynchronous cancel: fire the token from another thread while the
+    // engine steps, so the flag can land between verify micro-steps
+    // (mid-burst). Whenever it lands, the output must still be a prefix of
+    // the reference stream with exactly matching token events.
+    let mut eng = Engine::new(spec_cfg()).unwrap();
+    let mut req = Request::new(1, prompt.clone(), 200);
+    let handle = RequestHandle::attach(&mut req);
+    let token = req.cancel.clone().expect("attach installs a cancel token");
+    eng.submit(req).unwrap();
+    let canceller = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        token.cancel();
+    });
+    let mut outs = Vec::new();
+    while eng.has_work() {
+        outs.extend(eng.step().unwrap());
+    }
+    canceller.join().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert!(matches!(
+        outs[0].finish,
+        // Cancelled when the flag lands in time; on a very fast host the
+        // run may legitimately complete first — the prefix check below
+        // still pins correctness.
+        FinishReason::Cancelled | FinishReason::Length | FinishReason::Eos
+    ));
+    let got = &outs[0].generated;
+    assert_eq!(&full[..got.len()], &got[..], "async cancel broke the prefix property");
+    let toks: Vec<i32> = handle
+        .events()
+        .try_iter()
+        .filter_map(|e| match e {
+            RequestEvent::Token { token, .. } => Some(token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(toks, *got, "async cancel leaked rolled-back token events");
+    assert_eq!(eng.pool().in_use(), 0);
+}
+
+/// Shadow model for one layer: positions, H2O scores, and payload rows.
+#[derive(Clone, Default)]
+struct ShadowLayer {
+    pos: Vec<u32>,
+    score: Vec<f64>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+#[test]
+fn truncate_rollback_is_byte_exact_and_conserves_pages() {
+    check("truncate rollback", 120, |rng| {
+        let row = rng.range(1, 8);
+        let n_layer = rng.range(1, 5);
+        let token_bytes = SequenceCache::token_bytes(row);
+        let page_bytes = token_bytes * rng.range(1, 5); // 1..4 slots/page
+        let pool = PagedKvPool::new(KvPool::unlimited(), page_bytes);
+        let mut table = PageTable::new(&pool, Tier::Device, n_layer, token_bytes);
+        let mut cache = SequenceCache::new(n_layer, row);
+        let mut shadow: Vec<ShadowLayer> = vec![ShadowLayer::default(); n_layer];
+        let mut next_pos: u32 = 0;
+        // (snapshot, shadow, next_pos) saved for a later rollback-restore.
+        let mut saved = None;
+
+        let lens_of = |sh: &[ShadowLayer]| -> Vec<usize> {
+            sh.iter().map(|l| l.pos.len()).collect()
+        };
+
+        for _ in 0..40 {
+            match rng.range(0, 6) {
+                // Append a burst of 1..5 tokens to every layer (the engine's
+                // draft/commit shape), charging the table first.
+                0 | 1 => {
+                    let n = rng.range(1, 6);
+                    let old = lens_of(&shadow);
+                    let new: Vec<usize> = old.iter().map(|&l| l + n).collect();
+                    table.grow(&old, &new).map_err(|e| e.to_string())?;
+                    for _ in 0..n {
+                        for (layer, sh) in shadow.iter_mut().enumerate() {
+                            let k: Vec<f32> = (0..row).map(|_| rng.f64() as f32).collect();
+                            let v: Vec<f32> = (0..row).map(|_| rng.f64() as f32).collect();
+                            cache.append(layer, &k, &v, next_pos).map_err(|e| e.to_string())?;
+                            sh.pos.push(next_pos);
+                            sh.score.push(0.0);
+                            sh.k.extend_from_slice(&k);
+                            sh.v.extend_from_slice(&v);
+                        }
+                        next_pos += 1;
+                    }
+                }
+                // Fold an H2O score vector into every non-empty layer.
+                2 => {
+                    for (layer, sh) in shadow.iter_mut().enumerate() {
+                        if sh.pos.is_empty() {
+                            continue;
+                        }
+                        let scores: Vec<f32> =
+                            (0..sh.pos.len()).map(|_| rng.f64() as f32).collect();
+                        cache.add_scores(layer, &scores).map_err(|e| e.to_string())?;
+                        for (acc, s) in sh.score.iter_mut().zip(&scores) {
+                            *acc += *s as f64;
+                        }
+                    }
+                }
+                // Evict a random sorted subset per layer (any policy's
+                // output shape), then return whole pages.
+                3 => {
+                    for (layer, sh) in shadow.iter_mut().enumerate() {
+                        let keep: Vec<usize> =
+                            (0..sh.pos.len()).filter(|_| rng.bool(0.7)).collect();
+                        cache.retain(layer, &keep).map_err(|e| e.to_string())?;
+                        let pick = |xs: &[u32]| keep.iter().map(|&i| xs[i]).collect::<Vec<_>>();
+                        sh.pos = pick(&sh.pos);
+                        sh.score = keep.iter().map(|&i| sh.score[i]).collect();
+                        sh.k = keep
+                            .iter()
+                            .flat_map(|&i| sh.k[i * row..(i + 1) * row].to_vec())
+                            .collect();
+                        sh.v = keep
+                            .iter()
+                            .flat_map(|&i| sh.v[i * row..(i + 1) * row].to_vec())
+                            .collect();
+                    }
+                    table.shrink(&lens_of(&shadow)).map_err(|e| e.to_string())?;
+                }
+                // The rollback op itself: truncate to a random cut.
+                4 => {
+                    let cut = rng.range(0, next_pos as usize + 1);
+                    let dropped = cache.truncate(cut);
+                    let mut expect_dropped = 0usize;
+                    for sh in shadow.iter_mut() {
+                        let keep = sh.pos.iter().take_while(|&&p| p < cut as u32).count();
+                        expect_dropped += sh.pos.len() - keep;
+                        sh.pos.truncate(keep);
+                        sh.score.truncate(keep);
+                        sh.k.truncate(keep * row);
+                        sh.v.truncate(keep * row);
+                    }
+                    ensure_eq(dropped, expect_dropped, "truncate drop count")?;
+                    table.shrink(&lens_of(&shadow)).map_err(|e| e.to_string())?;
+                }
+                // Snapshot now, or restore a snapshot taken earlier (the
+                // suspend/resume path composed with rollback).
+                _ => {
+                    match saved.take() {
+                        None => saved = Some((cache.clone().snapshot(), shadow.clone(), next_pos)),
+                        Some((snap, sh, pos)) => {
+                            cache = snap.restore();
+                            shadow = sh;
+                            next_pos = pos;
+                            // Resume builds a fresh table for the restored
+                            // lengths, exactly like swap-in does.
+                            table = PageTable::new(&pool, Tier::Device, n_layer, token_bytes);
+                            let zeros = vec![0usize; n_layer];
+                            let lens = lens_of(&shadow);
+                            table.grow(&zeros, &lens).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+            }
+
+            // Byte-exact state check against the shadow, every step.
+            let spp = table.slots_per_page();
+            let mut live = 0usize;
+            for (layer, sh) in shadow.iter().enumerate() {
+                ensure_eq(cache.layer_len(layer), sh.pos.len(), "layer len")?;
+                let pos: Vec<u32> = cache.layers[layer].meta.iter().map(|m| m.position).collect();
+                ensure_eq(pos, sh.pos.clone(), "positions")?;
+                let score: Vec<f64> = cache.layers[layer].meta.iter().map(|m| m.score).collect();
+                ensure_eq(score, sh.score.clone(), "H2O score accumulators")?;
+                ensure_eq(cache.layers[layer].k.clone(), sh.k.clone(), "K payload")?;
+                ensure_eq(cache.layers[layer].v.clone(), sh.v.clone(), "V payload")?;
+                // Table pages track ceil(len / slots_per_page) exactly.
+                ensure_eq(
+                    table.layer_pages(layer).len(),
+                    sh.pos.len().div_ceil(spp),
+                    "pages per layer",
+                )?;
+                live += table.layer_pages(layer).len();
+            }
+            // One unshared table (+ possibly a parked snapshot, which holds
+            // no pages): live pages and pool bytes must agree exactly.
+            ensure_eq(pool.live_pages(), live, "live pages == mapped pages")?;
+            ensure_eq(pool.pool().in_use(), live * page_bytes, "pool bytes == pages")?;
+        }
+
+        drop(table);
+        ensure_eq(pool.live_pages(), 0, "no leaked pages")?;
+        ensure_eq(pool.pool().in_use(), 0, "all bytes released")?;
+        ensure_eq(pool.pages_allocated(), pool.pages_freed(), "alloc/free balance")?;
+        ensure(pool.pool().accounting_errors() == 0, "no double-frees detected")
+    });
+}
