@@ -141,6 +141,11 @@ pub struct ServeConfig {
     /// (`FinishReason::DeadlineExceeded`, partial output kept). 0 = no
     /// default; a request's own `deadline` always takes precedence.
     pub request_deadline_ms: u64,
+    /// Keep decode scratch slots resident across steps and gather only
+    /// newly appended KV rows (the hot-path default). Disable
+    /// (`--no-resident-scratch`) to force a full scratch refill every step
+    /// — the parity baseline `bench_hotpath` compares against.
+    pub resident_scratch: bool,
 }
 
 impl ServeConfig {
@@ -164,6 +169,7 @@ impl ServeConfig {
             preemption: true,
             batch_wait_ms: 0,
             request_deadline_ms: 0,
+            resident_scratch: true,
         }
     }
 
@@ -246,6 +252,9 @@ impl ServeConfig {
         if let Some(d) = j.get("request_deadline_ms").and_then(|v| v.as_usize()) {
             cfg.request_deadline_ms = d as u64;
         }
+        if let Some(r) = j.get("resident_scratch").and_then(|v| v.as_bool()) {
+            cfg.resident_scratch = r;
+        }
         Ok(cfg)
     }
 
@@ -287,6 +296,7 @@ impl ServeConfig {
             ("preemption", Json::Bool(self.preemption)),
             ("batch_wait_ms", Json::num(self.batch_wait_ms as f64)),
             ("request_deadline_ms", Json::num(self.request_deadline_ms as f64)),
+            ("resident_scratch", Json::Bool(self.resident_scratch)),
         ])
     }
 
@@ -342,6 +352,11 @@ impl ServeConfig {
 
     pub fn with_request_deadline_ms(mut self, ms: u64) -> Self {
         self.request_deadline_ms = ms;
+        self
+    }
+
+    pub fn with_resident_scratch(mut self, resident: bool) -> Self {
+        self.resident_scratch = resident;
         self
     }
 
@@ -470,6 +485,19 @@ mod tests {
         // absent key keeps the default
         let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
         assert!(!ServeConfig::from_json(&j).unwrap().spec.enabled);
+    }
+
+    #[test]
+    fn resident_scratch_roundtrip_and_default() {
+        // Default: resident scratch on (the hot-path win).
+        let cfg = ServeConfig::new("a");
+        assert!(cfg.resident_scratch);
+        let back =
+            ServeConfig::from_json(&cfg.with_resident_scratch(false).to_json()).unwrap();
+        assert!(!back.resident_scratch);
+        // absent key keeps the default
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).unwrap().resident_scratch);
     }
 
     #[test]

@@ -87,12 +87,13 @@ use crate::kvcache::{
 use crate::metrics::{Histogram, SchedulerMetrics, ThroughputMeter};
 use crate::model::tokenizer::{self, check_token_map};
 use crate::model::{argmax, sample};
-use crate::runtime::{DecodeOut, Runtime, Tensor, TensorI32};
+use crate::runtime::{DecodeOut, Runtime, TensorI32};
 use crate::squeeze::{allocate, BudgetPlan, CosineStats};
 use crate::util::Rng;
 
 use super::lifecycle::{self, RequestEvent};
 use super::request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
+use super::residency::{GatherStats, ScratchTier};
 use super::scheduler::{Active, Queued, Scheduler, Suspended};
 
 /// Engine-level aggregate statistics for one run (`generate_batch` resets
@@ -135,9 +136,22 @@ pub struct Engine {
     n_layer: usize,
     row_elems: usize,
     max_seq: usize,
-    /// Scratch decode buffers per (batch, capacity) tier (reused across
-    /// steps; padding is never zeroed — the kernel masks by cache_len).
-    scratch: std::collections::HashMap<(usize, usize), (Tensor, Tensor)>,
+    /// Batch-resident scratch per (batch, capacity) decode tier: buffers
+    /// persist across steps with per-slot residency tracking, so the
+    /// steady-state gather appends only newly grown rows (padding is never
+    /// zeroed — the kernel masks by cache_len). Tiers idle for
+    /// `SCRATCH_IDLE_STEPS` decode steps are reclaimed.
+    scratch: std::collections::HashMap<(usize, usize), ScratchTier>,
+    /// Gather-path counters (bytes copied, full refills vs incremental
+    /// appends), exported via `SchedulerMetrics`; reset with the run stats.
+    gather: GatherStats,
+    /// Scratch tiers reclaimed by the idle sweep since the last reset.
+    scratch_tiers_evicted: u64,
+    /// Decode-step staging tensors (token ids, positions, per-layer lens),
+    /// rewritten in place each batched call instead of reallocated.
+    stage_tokens: TensorI32,
+    stage_positions: TensorI32,
+    stage_lens: TensorI32,
     /// Optional cross-request cosine accumulation (Fig. 2 heatmaps).
     collect_cosine: Option<CosineStats>,
     /// Sampling RNG (deterministic; greedy sampling never consumes it).
@@ -233,6 +247,11 @@ impl Engine {
             row_elems,
             max_seq,
             scratch: Default::default(),
+            gather: GatherStats::default(),
+            scratch_tiers_evicted: 0,
+            stage_tokens: TensorI32::zeros(&[batch]),
+            stage_positions: TensorI32::zeros(&[batch]),
+            stage_lens: TensorI32::zeros(&[n_layer, batch]),
             collect_cosine: None,
             rng: Rng::seed_from_u64(0x5A5A_5A5A),
             sched,
@@ -264,6 +283,14 @@ impl Engine {
         self.batch = Self::select_batch(&self.runtime, cfg.max_batch)?;
         self.draft = Self::load_draft(&self.runtime, &cfg)?;
         self.policy = make_policy(&cfg);
+        // Residency entries reference sequence ordinals of the scheduler
+        // being replaced below — drop every scratch tier wholesale.
+        self.scratch.clear();
+        self.gather = GatherStats::default();
+        self.scratch_tiers_evicted = 0;
+        self.stage_tokens = TensorI32::zeros(&[self.batch]);
+        self.stage_positions = TensorI32::zeros(&[self.batch]);
+        self.stage_lens = TensorI32::zeros(&[self.n_layer, self.batch]);
         let page_bytes = cfg.kv_page_bytes.max(SequenceCache::token_bytes(self.row_elems));
         self.paged = PagedKvPool::new(
             KvPool::tiered(cfg.kv_pool_bytes, cfg.host_spill_bytes),
@@ -435,6 +462,11 @@ impl Engine {
         let t0 = Instant::now();
         self.meter = ThroughputMeter::new();
         self.run = EngineRunStats::default();
+        // Gather counters reset with the run so bytes-copied/step is
+        // well-defined per closed batch; scratch residency itself survives
+        // (sequence ordinals keep growing, so stale entries cannot alias).
+        self.gather = GatherStats::default();
+        self.scratch_tiers_evicted = 0;
         self.queue_hist = Histogram::new();
         self.ttft_hist = Histogram::new();
         self.itl_hist = Histogram::new();
@@ -478,6 +510,7 @@ impl Engine {
         }
         self.retire_phase(sched, &mut outputs);
         sched.note_step(occupancy);
+        self.prune_scratch();
         // Keep the live counters coherent for step-driven observers
         // (`wall_s` is only meaningful for the generate_batch window).
         self.run.generated_tokens = self.meter.tokens();
@@ -767,6 +800,28 @@ impl Engine {
         sched.metrics.shared_pages = self.paged.shared_pages();
         sched.metrics.cow_copies = self.paged.cow_copies() as u64;
         sched.metrics.accounting_errors = self.pool().accounting_errors() as u64;
+        sched.metrics.kv_bytes_copied = self.gather.kv_bytes_copied;
+        sched.metrics.gather_full_refills = self.gather.full_refills;
+        sched.metrics.gather_incremental_appends = self.gather.incremental_appends;
+        sched.metrics.scratch_retained_bytes = self.scratch.values().map(|t| t.bytes()).sum();
+        sched.metrics.scratch_tiers_evicted = self.scratch_tiers_evicted;
+    }
+
+    /// Decode steps a scratch tier may sit unused before the idle sweep
+    /// reclaims its buffers — the tier map no longer retains every `(B, M)`
+    /// pair it ever touched. Generous relative to tier-switch cadence: a
+    /// sequence crossing a capacity boundary comes back to the smaller tier
+    /// only via retirement + admission, well past any hot reuse window.
+    const SCRATCH_IDLE_STEPS: u64 = 256;
+
+    /// Drop scratch tiers unused for `SCRATCH_IDLE_STEPS` decode steps.
+    /// Retained bytes are exported as `scratch_retained_bytes`.
+    fn prune_scratch(&mut self) {
+        let now = self.run.decode_steps;
+        let before = self.scratch.len();
+        self.scratch
+            .retain(|_, t| now.saturating_sub(t.last_used_step) <= Self::SCRATCH_IDLE_STEPS);
+        self.scratch_tiers_evicted += (before - self.scratch.len()) as u64;
     }
 
     /// Token rows (slots) per KV page for this model's row width.
@@ -1067,24 +1122,34 @@ impl Engine {
             self.runtime.manifest.model.head_dim,
         );
 
-        // Take the scratch pair out of the map so the runtime call below can
-        // borrow `self` — padding is never zeroed, the kernel masks by len.
-        let (mut k_buf, mut v_buf) = self.scratch.remove(&tier).unwrap_or_else(|| {
-            (
-                Tensor::zeros(&[self.n_layer, b, m, h, d]),
-                Tensor::zeros(&[self.n_layer, b, m, h, d]),
-            )
-        });
+        // Take the resident tier out of the map so the runtime call below
+        // can borrow `self`.
+        let mut st = self
+            .scratch
+            .remove(&tier)
+            .unwrap_or_else(|| ScratchTier::new(self.n_layer, b, m, h, d));
+        st.last_used_step = self.run.decode_steps;
 
-        let mut tokens = vec![tokenizer::PAD; b];
-        let mut positions = vec![0i32; b];
-        let mut lens = vec![0i32; self.n_layer * b];
+        // Reset the reused staging tensors in place; uninvolved slots stay
+        // padded (PAD token, zero lens) and their logits rows are never
+        // read.
+        self.stage_tokens.data.fill(tokenizer::PAD);
+        self.stage_positions.data.fill(0);
+        self.stage_lens.data.fill(0);
+        let allow_incremental = self.cfg.resident_scratch;
         let mut fill = Ok(());
         for &(i, tok, pos) in inputs {
             let a = sched.slots[i].as_ref().expect("inputs list occupied slots");
-            tokens[i] = tok;
-            positions[i] = pos;
-            if let Err(e) = a.cache.write_into_batch(&mut k_buf, &mut v_buf, &mut lens, i) {
+            self.stage_tokens.data[i] = tok;
+            self.stage_positions.data[i] = pos;
+            if let Err(e) = st.gather(
+                &a.cache,
+                a.seq,
+                i,
+                &mut self.stage_lens.data,
+                allow_incremental,
+                &mut self.gather,
+            ) {
                 fill = Err(e);
                 break;
             }
@@ -1099,16 +1164,16 @@ impl Engine {
                 };
                 rt.decode(
                     tier,
-                    &TensorI32::from_vec(&[b], tokens)?,
-                    &TensorI32::from_vec(&[b], positions)?,
-                    &k_buf,
-                    &v_buf,
-                    &TensorI32::from_vec(&[self.n_layer, b], lens)?,
+                    &self.stage_tokens,
+                    &self.stage_positions,
+                    &st.k,
+                    &st.v,
+                    &self.stage_lens,
                 )
             }
             Err(e) => Err(e),
         };
-        self.scratch.insert(tier, (k_buf, v_buf));
+        self.scratch.insert(tier, st);
         let out = out?;
         self.run.decode_steps += 1;
         self.run.kv_slots_touched += (self.n_layer * b * m) as u64;

@@ -75,10 +75,34 @@
 //! Done / Cancelled / Error) at each step boundary, honors `CancelToken`s
 //! and deadlines there (`FinishReason::{Cancelled, DeadlineExceeded}`),
 //! and the server streams tokens to clients as they decode.
+//!
+//! ## Decode hot path: batch-resident scratch
+//!
+//! The engine owns one scratch `(K, V)` buffer pair per decode tier
+//! `(B, M)` — the exact tensors handed to `Runtime::decode` — behind the
+//! `residency` module. Slot contents are *resident*: they persist across
+//! steps, each occupied slot remembers which sequence filled it, at which
+//! `SequenceCache` generation, and how many rows per layer are valid, so
+//! the steady-state gather appends only the row(s) the cache grew since
+//! the previous step instead of re-copying the whole cache. Residency of a
+//! slot is invalidated — one full refill of just that slot — by anything
+//! destructive: eviction/compaction (`retain`), speculative rollback
+//! (`truncate`), suspend/resume, preemption, slot reassignment, or a tier
+//! capacity change (a different tier's buffer simply has no valid entry).
+//! COW page privatization needs no invalidation: page tables are pure
+//! accounting and never rewrite KV payload rows. The contract is enforced
+//! by generation counters on `SequenceCache` (every mutating op bumps one;
+//! destructive ops bump the dirty watermark), checked at gather time.
+//! Scratch tiers idle for `Engine::SCRATCH_IDLE_STEPS` decode steps are
+//! reclaimed; `scratch_retained_bytes`, `kv_bytes_copied`,
+//! `gather_full_refills`, and `gather_incremental_appends` export through
+//! `SchedulerMetrics`. `--no-resident-scratch` forces the always-refill
+//! baseline (the parity and bench reference).
 
 pub mod engine;
 pub mod lifecycle;
 pub mod request;
+pub(crate) mod residency;
 pub mod router;
 pub mod scheduler;
 pub mod server;

@@ -1,0 +1,369 @@
+//! Batch-resident scratch KV: per-tier decode buffers whose slot contents
+//! persist across steps so the steady-state gather copies only the rows
+//! appended since the last step, not the whole cache.
+//!
+//! Ownership and contract:
+//!
+//! * The engine owns one [`ScratchTier`] per decode tier `(B, M)`. The
+//!   tensors inside are the exact buffers handed to `Runtime::decode`; the
+//!   kernel masks by `cache_lens`, so rows past a slot's length are
+//!   don't-care garbage and a shrinking slot never needs zeroing.
+//! * Each slot records which sequence (`seq` ordinal — unique for the
+//!   lifetime of the scheduler, so slot reassignment can never alias) last
+//!   filled it, at which cache [`generation`](SequenceCache::generation),
+//!   and how many rows per layer were synced.
+//! * On gather, the slot is eligible for an *incremental append* iff the
+//!   same sequence is still in the slot and the cache's
+//!   [`dirty_generation`](SequenceCache::dirty_generation) has not passed
+//!   the synced generation — i.e. every mutation since the last sync was a
+//!   pure append (or metadata-only score fold). Anything destructive —
+//!   eviction/compaction (`retain`), speculative rollback (`truncate`),
+//!   suspend/resume (`restore`), preemption, slot reassignment — bumps the
+//!   dirty generation or changes the slot's `seq`, forcing a full refill of
+//!   just that slot. A tier-capacity change lands in a different
+//!   `ScratchTier` whose slot entry is validated the same way, so tier
+//!   switches are safe by construction, and COW page privatization never
+//!   rewrites payload rows (page tables are pure accounting), so it needs
+//!   no invalidation at all.
+//!
+//! The checks are enforced here, not assumed: a breached contract (e.g. a
+//! synced prefix longer than the live cache) falls back to a full refill or
+//! surfaces as a hard error from the copy layer, never as silently stale
+//! rows.
+
+use anyhow::Result;
+
+use crate::kvcache::SequenceCache;
+use crate::runtime::Tensor;
+
+/// Cumulative gather-path counters, exported through `SchedulerMetrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GatherStats {
+    /// Payload bytes copied into scratch (K+V, f32).
+    pub kv_bytes_copied: u64,
+    /// Slot gathers that had to rewrite the slot from row 0.
+    pub full_refills: u64,
+    /// Slot gathers that appended only rows new since the last sync.
+    pub incremental_appends: u64,
+}
+
+/// What one slot of one tier currently holds.
+#[derive(Debug, Clone)]
+struct SlotResidency {
+    /// Scheduler-wide unique sequence ordinal that filled this slot.
+    seq: u64,
+    /// Cache generation at the time of the last sync.
+    synced_gen: u64,
+    /// Rows valid in the buffer, per layer.
+    valid: Vec<usize>,
+}
+
+/// One decode tier's scratch buffers plus per-slot residency state.
+#[derive(Debug, Clone)]
+pub struct ScratchTier {
+    pub k: Tensor,
+    pub v: Tensor,
+    resident: Vec<Option<SlotResidency>>,
+    /// Engine decode-step clock at last use, for idle-tier eviction.
+    pub last_used_step: u64,
+    /// Scratch zero-offset vector reused by full refills (avoids a per-call
+    /// allocation on the hot path).
+    zeros: Vec<usize>,
+}
+
+impl ScratchTier {
+    /// Allocate buffers of shape `[n_layer, b, m, h, d]` with empty
+    /// residency.
+    pub fn new(n_layer: usize, b: usize, m: usize, h: usize, d: usize) -> Self {
+        Self {
+            k: Tensor::zeros(&[n_layer, b, m, h, d]),
+            v: Tensor::zeros(&[n_layer, b, m, h, d]),
+            resident: vec![None; b],
+            last_used_step: 0,
+            zeros: vec![0; n_layer],
+        }
+    }
+
+    /// Bytes held by the K and V buffers.
+    pub fn bytes(&self) -> usize {
+        (self.k.data.len() + self.v.data.len()) * 4
+    }
+
+    /// Forget everything resident (e.g. after reconfigure).
+    #[cfg(test)]
+    pub fn invalidate_all(&mut self) {
+        for r in &mut self.resident {
+            *r = None;
+        }
+    }
+
+    /// Sync `cache` (owned by sequence `seq`) into slot `b`, refreshing
+    /// `lens` for every layer. Copies only the rows appended since the last
+    /// sync when the residency contract allows; otherwise performs a full
+    /// refill of the slot. `allow_incremental = false` forces the refill
+    /// path (the parity baseline). On error the slot's residency is cleared
+    /// — a partial write must never masquerade as a valid prefix.
+    pub fn gather(
+        &mut self,
+        cache: &SequenceCache,
+        seq: u64,
+        b: usize,
+        lens: &mut [i32],
+        allow_incremental: bool,
+        stats: &mut GatherStats,
+    ) -> Result<()> {
+        let n_layer = cache.n_layer();
+        let incremental = allow_incremental
+            && self.resident.get(b).and_then(|r| r.as_ref()).is_some_and(|r| {
+                r.seq == seq
+                    && cache.dirty_generation() <= r.synced_gen
+                    && r.valid.len() == n_layer
+                    && (0..n_layer).all(|l| r.valid[l] <= cache.layer_len(l))
+            });
+        let from: &[usize] = if incremental {
+            &self.resident[b].as_ref().expect("checked above").valid
+        } else {
+            &self.zeros
+        };
+        let copied = match cache.write_rows_into_batch(&mut self.k, &mut self.v, lens, b, from) {
+            Ok(n) => n,
+            Err(e) => {
+                if let Some(r) = self.resident.get_mut(b) {
+                    *r = None;
+                }
+                return Err(e);
+            }
+        };
+        let valid = (0..n_layer).map(|l| cache.layer_len(l)).collect();
+        self.resident[b] = Some(SlotResidency { seq, synced_gen: cache.generation(), valid });
+        stats.kv_bytes_copied += copied as u64 * SequenceCache::token_bytes(cache.row_elems) as u64;
+        if incremental {
+            stats.incremental_appends += 1;
+        } else {
+            stats.full_refills += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, ensure_eq};
+    use crate::util::rng::Rng;
+
+    const N_LAYER: usize = 3;
+    const ROW: usize = 4; // h=2, d=2
+    const B: usize = 2;
+    const M: usize = 24;
+
+    fn tier() -> ScratchTier {
+        ScratchTier::new(N_LAYER, B, M, 2, 2)
+    }
+
+    fn filled_cache(rng: &mut Rng, rows: usize) -> (SequenceCache, u32) {
+        let mut c = SequenceCache::new(N_LAYER, ROW);
+        let mut pos = 0u32;
+        for _ in 0..rows {
+            append_row(rng, &mut c, &mut pos);
+        }
+        (c, pos)
+    }
+
+    fn append_row(rng: &mut Rng, c: &mut SequenceCache, pos: &mut u32) {
+        for l in 0..N_LAYER {
+            let k: Vec<f32> = (0..ROW).map(|_| rng.f64() as f32).collect();
+            let v: Vec<f32> = (0..ROW).map(|_| rng.f64() as f32).collect();
+            c.append(l, &k, &v, *pos).unwrap();
+        }
+        *pos += 1;
+    }
+
+    /// Compare the buffer's slot-`b` contents against the cache row by row.
+    fn slot_matches(st: &ScratchTier, c: &SequenceCache, b: usize) -> Result<(), String> {
+        for l in 0..N_LAYER {
+            let len = c.layer_len(l);
+            let base = (l * B + b) * M * ROW;
+            ensure(
+                st.k.data[base..base + len * ROW] == c.layers[l].k[..],
+                format!("layer {l}: K rows diverge from cache"),
+            )?;
+            ensure(
+                st.v.data[base..base + len * ROW] == c.layers[l].v[..],
+                format!("layer {l}: V rows diverge from cache"),
+            )?;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn steady_state_appends_copy_only_new_rows() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (mut c, mut pos) = filled_cache(&mut rng, 5);
+        let mut st = tier();
+        let mut lens = vec![0i32; N_LAYER * B];
+        let mut stats = GatherStats::default();
+        st.gather(&c, 7, 0, &mut lens, true, &mut stats).unwrap();
+        assert_eq!(stats.full_refills, 1);
+        let after_refill = stats.kv_bytes_copied;
+        assert_eq!(after_refill, (5 * N_LAYER * SequenceCache::token_bytes(ROW)) as u64);
+        for _ in 0..3 {
+            append_row(&mut rng, &mut c, &mut pos);
+            st.gather(&c, 7, 0, &mut lens, true, &mut stats).unwrap();
+        }
+        assert_eq!(stats.incremental_appends, 3);
+        assert_eq!(
+            stats.kv_bytes_copied - after_refill,
+            (3 * N_LAYER * SequenceCache::token_bytes(ROW)) as u64,
+            "each steady-state step copies exactly the appended rows"
+        );
+        slot_matches(&st, &c, 0).unwrap();
+        assert_eq!(lens[0], 8);
+    }
+
+    #[test]
+    fn destructive_ops_force_refill_and_seq_change_isolates_slots() {
+        let mut rng = Rng::seed_from_u64(2);
+        let (mut c, mut pos) = filled_cache(&mut rng, 6);
+        let mut st = tier();
+        let mut lens = vec![0i32; N_LAYER * B];
+        let mut stats = GatherStats::default();
+        st.gather(&c, 1, 0, &mut lens, true, &mut stats).unwrap();
+        // Eviction: keep 4 of 6 rows in layer 0.
+        c.retain(0, &[0, 2, 3, 5]).unwrap();
+        st.gather(&c, 1, 0, &mut lens, true, &mut stats).unwrap();
+        assert_eq!(stats.full_refills, 2, "retain must invalidate residency");
+        slot_matches(&st, &c, 0).unwrap();
+        // Pure append after the refill is incremental again.
+        append_row(&mut rng, &mut c, &mut pos);
+        st.gather(&c, 1, 0, &mut lens, true, &mut stats).unwrap();
+        assert_eq!(stats.incremental_appends, 1);
+        // A different sequence taking the slot refills even if its cache
+        // generations happen to line up.
+        let (other, _) = filled_cache(&mut rng, 3);
+        st.gather(&other, 2, 0, &mut lens, true, &mut stats).unwrap();
+        assert_eq!(stats.full_refills, 3, "slot reassignment must refill");
+        slot_matches(&st, &other, 0).unwrap();
+    }
+
+    #[test]
+    fn gather_error_clears_residency() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (c, _) = filled_cache(&mut rng, 4);
+        let mut st = tier();
+        let mut lens = vec![0i32; N_LAYER * B];
+        let mut stats = GatherStats::default();
+        st.gather(&c, 1, 0, &mut lens, true, &mut stats).unwrap();
+        // Overfull cache (len == M) makes the copy layer error out; the
+        // slot must not keep claiming residency afterwards.
+        let (big, _) = filled_cache(&mut rng, M);
+        assert!(st.gather(&big, 1, 0, &mut lens, true, &mut stats).is_err());
+        assert!(st.resident[0].is_none());
+    }
+
+    /// Random interleavings of append / retain / truncate / suspend-resume /
+    /// slot reassignment / skipped steps: after every gather the scratch
+    /// slot must match the cache byte-exactly (i.e. equal a freshly
+    /// gathered shadow buffer), whether the gather took the incremental or
+    /// the refill path.
+    #[test]
+    fn prop_random_interleavings_stay_byte_exact() {
+        check("residency_byte_exact", 60, |rng| {
+            let mut st = tier();
+            let mut lens = vec![0i32; N_LAYER * B];
+            let mut stats = GatherStats::default();
+            // One live cache per slot.
+            let mut caches: Vec<(SequenceCache, u32, u64)> = Vec::new();
+            let mut next_seq = 0u64;
+            for _ in 0..B {
+                let rows = rng.range(1, 8);
+                let (c, pos) = filled_cache(rng, rows);
+                caches.push((c, pos, next_seq));
+                next_seq += 1;
+            }
+            for _ in 0..40 {
+                let b = rng.below(B);
+                let (cache, pos, seq) = &mut caches[b];
+                match rng.below(6) {
+                    // Append 1-3 rows (plain decode or a spec burst).
+                    0 | 1 => {
+                        for _ in 0..rng.range(1, 4) {
+                            if cache.max_layer_len() + 1 < M {
+                                append_row(rng, cache, pos);
+                            }
+                        }
+                    }
+                    // Evict: keep a random subset of one layer.
+                    2 => {
+                        let l = rng.below(N_LAYER);
+                        let n = cache.layer_len(l);
+                        if n > 1 {
+                            let mut keep = rng.choose_k(&(0..n).collect::<Vec<_>>(), n - 1);
+                            keep.sort_unstable();
+                            cache.retain(l, &keep).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    // Speculative rollback: drop the positional tail.
+                    3 => {
+                        if *pos > 1 {
+                            let cut = rng.range(1, *pos as usize) as u32;
+                            cache.truncate(cut as usize);
+                            *pos = cut;
+                        }
+                    }
+                    // Suspend/resume round-trip.
+                    4 => {
+                        let snap = cache.clone().snapshot();
+                        *cache = snap.restore();
+                    }
+                    // Slot reassigned to a brand-new sequence.
+                    5 => {
+                        let rows = rng.range(1, 6);
+                        let (c, p) = filled_cache(rng, rows);
+                        *cache = c;
+                        *pos = p;
+                        *seq = next_seq;
+                        next_seq += 1;
+                    }
+                    _ => unreachable!(),
+                }
+                // Some steps skip the gather (slot not in this step's
+                // inputs); residency must tolerate syncing later.
+                if rng.bool(0.75) {
+                    let (cache, _, seq) = &caches[b];
+                    st.gather(cache, *seq, b, &mut lens, true, &mut stats)
+                        .map_err(|e| e.to_string())?;
+                    slot_matches(&st, cache, b)?;
+                    for l in 0..N_LAYER {
+                        ensure_eq(
+                            lens[l * B + b],
+                            cache.layer_len(l) as i32,
+                            "cache_lens refreshed",
+                        )?;
+                    }
+                }
+            }
+            ensure(
+                stats.incremental_appends > 0 || stats.full_refills > 0,
+                "property exercised the gather path",
+            )
+        });
+    }
+
+    #[test]
+    fn disallow_incremental_always_refills() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (mut c, mut pos) = filled_cache(&mut rng, 4);
+        let mut st = tier();
+        let mut lens = vec![0i32; N_LAYER * B];
+        let mut stats = GatherStats::default();
+        for _ in 0..3 {
+            st.gather(&c, 9, 1, &mut lens, false, &mut stats).unwrap();
+            append_row(&mut rng, &mut c, &mut pos);
+        }
+        assert_eq!(stats.incremental_appends, 0);
+        assert_eq!(stats.full_refills, 3);
+        st.invalidate_all();
+        assert!(st.resident[1].is_none());
+    }
+}

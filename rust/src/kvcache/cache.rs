@@ -40,16 +40,51 @@ impl LayerCache {
 }
 
 /// The full KV cache of one sequence.
+///
+/// Mutations are tracked by two monotonic counters that make batch-scratch
+/// residency (`coordinator::residency`) enforceable rather than a
+/// convention: `generation` is bumped by *every* mutating op, and
+/// `dirty_gen` is set to the new generation by every op that invalidates
+/// previously copied rows (compaction, rollback, restore-from-snapshot).
+/// A consumer that copied rows at generation `g` may keep them as long as
+/// `dirty_generation() <= g` — appends only ever add rows past the copied
+/// prefix.
 #[derive(Debug, Clone)]
 pub struct SequenceCache {
     pub layers: Vec<LayerCache>,
     /// Elements per KV row (= n_head * head_dim).
     pub row_elems: usize,
+    /// Bumped by every mutating op (append, add_scores, retain, truncate).
+    generation: u64,
+    /// Generation of the last *destructive* mutation — one after which rows
+    /// copied out earlier may no longer match the cache (retain/truncate
+    /// that dropped rows, or restore from a snapshot).
+    dirty_gen: u64,
 }
 
 impl SequenceCache {
     pub fn new(n_layer: usize, row_elems: usize) -> Self {
-        Self { layers: vec![LayerCache::default(); n_layer], row_elems }
+        Self { layers: vec![LayerCache::default(); n_layer], row_elems, generation: 0, dirty_gen: 0 }
+    }
+
+    /// Monotonic mutation counter (every mutating op bumps it).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Generation of the last destructive mutation. Rows copied out at
+    /// generation `g` are still a valid prefix iff `dirty_generation() <= g`.
+    pub fn dirty_generation(&self) -> u64 {
+        self.dirty_gen
+    }
+
+    fn bump(&mut self) {
+        self.generation += 1;
+    }
+
+    fn bump_dirty(&mut self) {
+        self.generation += 1;
+        self.dirty_gen = self.generation;
     }
 
     /// Build from prefill outputs `k`,`v` of shape `[n_layer, L, H, D]`,
@@ -115,6 +150,7 @@ impl SequenceCache {
         lc.k.extend_from_slice(k_row);
         lc.v.extend_from_slice(v_row);
         lc.meta.push(SlotMeta { position, score: 0.0 });
+        self.bump();
         Ok(())
     }
 
@@ -135,12 +171,18 @@ impl SequenceCache {
         for (slot, &s) in lc.meta.iter_mut().zip(scores.iter()) {
             slot.score += s as f64;
         }
+        // Scores live in host-side metadata, not in the K/V payload rows, so
+        // this bumps the generation but does NOT dirty copied-out rows.
+        self.bump();
         Ok(())
     }
 
     /// Keep exactly the slots in `keep` (sorted ascending, in-range, unique)
-    /// for `layer`, compacting payload + metadata.
-    pub fn retain(&mut self, layer: usize, keep: &[usize]) -> Result<()> {
+    /// for `layer`, compacting payload + metadata. Returns the number of
+    /// rows dropped; when rows were dropped the cache is marked dirty
+    /// (copied-out prefixes are no longer trustworthy — compaction moves
+    /// surviving rows).
+    pub fn retain(&mut self, layer: usize, keep: &[usize]) -> Result<usize> {
         let lc = &mut self.layers[layer];
         let n = lc.len();
         let row = self.row_elems;
@@ -167,7 +209,13 @@ impl SequenceCache {
         lc.k = k;
         lc.v = v;
         lc.meta = meta;
-        Ok(())
+        let dropped = n - keep.len();
+        if dropped > 0 {
+            self.bump_dirty();
+        } else {
+            self.bump();
+        }
+        Ok(dropped)
     }
 
     /// Roll the sequence back to logical length `len`: drop every trailing
@@ -192,6 +240,15 @@ impl SequenceCache {
             lc.k.truncate(keep * row);
             lc.v.truncate(keep * row);
         }
+        // A rollback is a pure tail drop, but a consumer's copied prefix may
+        // extend past the new length; treating it as destructive keeps the
+        // residency contract simple (copied length never exceeds live
+        // length on the incremental path).
+        if dropped > 0 {
+            self.bump_dirty();
+        } else {
+            self.bump();
+        }
         dropped
     }
 
@@ -202,11 +259,18 @@ impl SequenceCache {
     /// accumulators travel inside `SlotMeta`, so a restored sequence ranks
     /// heavy hitters identically to one that was never suspended.
     pub fn snapshot(self) -> CacheSnapshot {
-        CacheSnapshot { layers: self.layers, row_elems: self.row_elems }
+        CacheSnapshot {
+            layers: self.layers,
+            row_elems: self.row_elems,
+            generation: self.generation,
+            dirty_gen: self.dirty_gen,
+        }
     }
 
     /// Copy this sequence's cache into slot `b` of a padded decode batch
     /// buffer of shape `[n_layer, B, M, row_elems]` and fill `cache_lens`.
+    /// Always a full refill of the slot; the incremental variant is
+    /// [`SequenceCache::write_rows_into_batch`].
     pub fn write_into_batch(
         &self,
         k_buf: &mut Tensor,
@@ -214,6 +278,24 @@ impl SequenceCache {
         lens: &mut [i32],
         b: usize,
     ) -> Result<()> {
+        self.write_rows_into_batch(k_buf, v_buf, lens, b, &vec![0; self.n_layer()])?;
+        Ok(())
+    }
+
+    /// Copy only rows `from[layer]..len(layer)` of each layer into slot `b`
+    /// of a padded decode batch buffer of shape `[n_layer, B, M, row_elems]`
+    /// — the hot-path primitive behind batch-resident scratch: a slot whose
+    /// first `from[layer]` rows are already valid in the buffer pays only
+    /// for the rows appended since. `cache_lens` is always refreshed for
+    /// every layer. Returns the number of rows copied (summed over layers).
+    pub fn write_rows_into_batch(
+        &self,
+        k_buf: &mut Tensor,
+        v_buf: &mut Tensor,
+        lens: &mut [i32],
+        b: usize,
+        from: &[usize],
+    ) -> Result<usize> {
         let (n_layer, bsz, m) = (k_buf.shape[0], k_buf.shape[1], k_buf.shape[2]);
         let row = self.row_elems;
         let buf_row = k_buf.shape[3] * k_buf.shape.get(4).copied().unwrap_or(1);
@@ -225,6 +307,10 @@ impl SequenceCache {
         if self.n_layer() != n_layer || b >= bsz {
             return Err(anyhow!("batch buffer mismatch"));
         }
+        if from.len() != n_layer {
+            return Err(anyhow!("from offsets {} != n_layer {n_layer}", from.len()));
+        }
+        let mut copied = 0usize;
         for layer in 0..n_layer {
             let lc = &self.layers[layer];
             if lc.len() >= m {
@@ -233,12 +319,23 @@ impl SequenceCache {
                     lc.len()
                 ));
             }
+            let start = from[layer];
+            if start > lc.len() {
+                return Err(anyhow!(
+                    "layer {layer}: resident prefix {start} exceeds cache len {} — \
+                     residency contract breached",
+                    lc.len()
+                ));
+            }
             let base = (layer * bsz + b) * m * row;
-            k_buf.data[base..base + lc.k.len()].copy_from_slice(&lc.k);
-            v_buf.data[base..base + lc.v.len()].copy_from_slice(&lc.v);
+            k_buf.data[base + start * row..base + lc.k.len()]
+                .copy_from_slice(&lc.k[start * row..]);
+            v_buf.data[base + start * row..base + lc.v.len()]
+                .copy_from_slice(&lc.v[start * row..]);
             lens[layer * bsz + b] = lc.len() as i32;
+            copied += lc.len() - start;
         }
-        Ok(())
+        Ok(copied)
     }
 }
 
@@ -249,6 +346,8 @@ impl SequenceCache {
 pub struct CacheSnapshot {
     layers: Vec<LayerCache>,
     row_elems: usize,
+    generation: u64,
+    dirty_gen: u64,
 }
 
 impl CacheSnapshot {
@@ -276,9 +375,21 @@ impl CacheSnapshot {
         self.row_elems
     }
 
-    /// Thaw back into a live cache for swap-in.
+    /// Thaw back into a live cache for swap-in. Generations continue
+    /// monotonically from where the snapshot froze them (never backward —
+    /// a consumer holding a pre-suspend generation must not see it reused),
+    /// and the restored cache is marked dirty: any rows copied out before
+    /// the suspend must be refilled, because the scratch slot may have been
+    /// reassigned while this sequence was parked.
     pub fn restore(self) -> SequenceCache {
-        SequenceCache { layers: self.layers, row_elems: self.row_elems }
+        let mut c = SequenceCache {
+            layers: self.layers,
+            row_elems: self.row_elems,
+            generation: self.generation,
+            dirty_gen: self.dirty_gen,
+        };
+        c.bump_dirty();
+        c
     }
 }
 
@@ -447,6 +558,82 @@ mod tests {
         assert_eq!(c.truncate(0), 4);
         assert_eq!(c.total_tokens(), 0);
         assert!(c.layers[0].k.is_empty() && c.layers[0].v.is_empty());
+    }
+
+    #[test]
+    fn generations_track_mutations_and_destructiveness() {
+        let mut c = SequenceCache::new(1, 2);
+        assert_eq!(c.generation(), 0);
+        assert_eq!(c.dirty_generation(), 0);
+        for i in 0..4 {
+            c.append(0, &[i as f32; 2], &[0.0; 2], i).unwrap();
+        }
+        let g = c.generation();
+        assert_eq!(g, 4);
+        assert_eq!(c.dirty_generation(), 0, "appends are not destructive");
+        c.add_scores(0, &[0.1; 4]).unwrap();
+        assert_eq!(c.generation(), g + 1);
+        assert_eq!(c.dirty_generation(), 0, "score folding leaves payload rows intact");
+        // Compaction that drops rows dirties the cache.
+        assert_eq!(c.retain(0, &[0, 2, 3]).unwrap(), 1);
+        assert_eq!(c.dirty_generation(), c.generation());
+        // Identity retain bumps but does not dirty.
+        let d = c.dirty_generation();
+        assert_eq!(c.retain(0, &[0, 1, 2]).unwrap(), 0);
+        assert!(c.generation() > d);
+        assert_eq!(c.dirty_generation(), d);
+        // No-op truncate bumps but does not dirty; a real rollback dirties.
+        c.truncate(10);
+        assert_eq!(c.dirty_generation(), d);
+        assert!(c.truncate(1) > 0);
+        assert_eq!(c.dirty_generation(), c.generation());
+    }
+
+    #[test]
+    fn restore_continues_generations_and_marks_dirty() {
+        let mut c = SequenceCache::new(1, 2);
+        for i in 0..3 {
+            c.append(0, &[0.0; 2], &[0.0; 2], i).unwrap();
+        }
+        let g = c.generation();
+        let back = c.snapshot().restore();
+        assert!(back.generation() > g, "generations never move backward across suspend");
+        assert_eq!(
+            back.dirty_generation(),
+            back.generation(),
+            "a restored cache must force a scratch refill"
+        );
+    }
+
+    #[test]
+    fn write_rows_into_batch_copies_only_the_tail() {
+        let mut c = SequenceCache::new(2, 2);
+        for i in 0..3 {
+            c.append(0, &[i as f32; 2], &[10.0 + i as f32; 2], i).unwrap();
+            c.append(1, &[20.0 + i as f32; 2], &[30.0 + i as f32; 2], i).unwrap();
+        }
+        let mut kb = Tensor::zeros(&[2, 1, 6, 1, 2]);
+        let mut vb = Tensor::zeros(&[2, 1, 6, 1, 2]);
+        let mut lens = vec![0i32; 2];
+        // Full refill: 3 rows per layer.
+        let n = c.write_rows_into_batch(&mut kb, &mut vb, &mut lens, 0, &[0, 0]).unwrap();
+        assert_eq!(n, 6);
+        assert_eq!(lens, vec![3, 3]);
+        // Append one row per layer; incremental copy moves exactly 2 rows.
+        c.append(0, &[9.0; 2], &[9.5; 2], 3).unwrap();
+        c.append(1, &[8.0; 2], &[8.5; 2], 3).unwrap();
+        let n = c.write_rows_into_batch(&mut kb, &mut vb, &mut lens, 0, &[3, 3]).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(lens, vec![4, 4]);
+        // The buffer now matches a fresh full gather byte-exactly.
+        let mut kb2 = kb.clone();
+        let mut vb2 = vb.clone();
+        c.write_into_batch(&mut kb2, &mut vb2, &mut lens, 0).unwrap();
+        assert_eq!(kb.data, kb2.data);
+        assert_eq!(vb.data, vb2.data);
+        // Contract violations are hard errors.
+        assert!(c.write_rows_into_batch(&mut kb, &mut vb, &mut lens, 0, &[0]).is_err());
+        assert!(c.write_rows_into_batch(&mut kb, &mut vb, &mut lens, 0, &[5, 0]).is_err());
     }
 
     #[test]

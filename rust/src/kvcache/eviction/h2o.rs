@@ -39,15 +39,25 @@ impl EvictionPolicy for H2o {
         let recent_start = n - recent;
 
         // Top-`heavy` scores among the non-recent prefix; ties broken toward
-        // older tokens (stable heavy-hitter behaviour).
-        let mut prefix: Vec<usize> = (0..recent_start).collect();
-        prefix.sort_by(|&a, &b| {
-            meta[b].score
-                .partial_cmp(&meta[a].score)
+        // older tokens (stable heavy-hitter behaviour). The comparator is a
+        // strict total order (slot index breaks score ties), so an O(n)
+        // selection of the top `heavy` yields exactly the same set as a full
+        // sort + take — only the order within the set differs, and the final
+        // sort_unstable erases that.
+        let cmp = |a: &usize, b: &usize| {
+            meta[*b].score
+                .partial_cmp(&meta[*a].score)
                 .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
-        let mut keep: Vec<usize> = prefix.into_iter().take(heavy).collect();
+                .then(a.cmp(b))
+        };
+        let mut prefix: Vec<usize> = (0..recent_start).collect();
+        if heavy > 0 {
+            // n > budget guarantees recent_start > heavy, so heavy - 1 is in
+            // bounds and there is always at least one element past the pivot.
+            prefix.select_nth_unstable_by(heavy - 1, cmp);
+        }
+        prefix.truncate(heavy);
+        let mut keep = prefix;
         keep.extend(recent_start..n);
         keep.sort_unstable();
         keep
@@ -101,6 +111,45 @@ mod tests {
     fn under_budget_identity() {
         let meta = mk_meta(3);
         assert_eq!(H2o::new(0.5).keep(&meta, 10), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn selection_matches_full_sort_reference() {
+        // The O(n) selection must pick exactly the set a full sort would.
+        fn reference_keep(meta: &[SlotMeta], budget: usize, frac: f64) -> Vec<usize> {
+            let n = meta.len();
+            if n <= budget {
+                return (0..n).collect();
+            }
+            let recent = ((budget as f64 * frac).round() as usize).min(budget);
+            let heavy = budget - recent;
+            let recent_start = n - recent;
+            let mut prefix: Vec<usize> = (0..recent_start).collect();
+            prefix.sort_by(|&a, &b| {
+                meta[b].score
+                    .partial_cmp(&meta[a].score)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut keep: Vec<usize> = prefix.into_iter().take(heavy).collect();
+            keep.extend(recent_start..n);
+            keep.sort_unstable();
+            keep
+        }
+        let mut rng = crate::util::Rng::seed_from_u64(0x42);
+        for case in 0..200 {
+            let n = 1 + rng.below(40);
+            // Coarse scores force plenty of exact ties to exercise the
+            // index tie-break.
+            let scores: Vec<f64> =
+                (0..n).map(|_| (rng.below(5) as f64) * 0.5).collect();
+            let meta = meta_with_scores(&scores);
+            let budget = 1 + rng.below(n + 4);
+            let frac = [0.0, 0.25, 0.5, 1.0][rng.below(4)];
+            let got = H2o::new(frac).keep(&meta, budget);
+            let want = reference_keep(&meta, budget, frac);
+            assert_eq!(got, want, "case {case}: n={n} budget={budget} frac={frac}");
+        }
     }
 
     #[test]

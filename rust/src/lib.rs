@@ -88,6 +88,35 @@
 //! shared between tables via `PageTable::share_prefix` is charged to the
 //! pool exactly once until a divergent write privatizes it.
 //!
+//! ## Decode hot-path data flow (batch-resident scratch)
+//!
+//! The per-step KV data flow is incremental, not re-built. Each decode tier
+//! `(B, M)` owns one persistent scratch `(K, V)` buffer pair — the exact
+//! tensors handed to the kernel — with per-slot residency records: which
+//! sequence last filled the slot, at which cache generation, and how many
+//! rows per layer are already valid. The steady-state step therefore runs
+//!
+//! ```text
+//! SequenceCache ──(new rows only)──► resident scratch ──► Runtime::decode
+//!      │ generation / dirty counters      │ per-slot (seq, gen, valid[])
+//!      └── destructive op (retain /       └── mismatch ⇒ full refill of
+//!          truncate / restore) bumps          just that slot
+//!          the dirty watermark
+//! ```
+//!
+//! appending O(rows-grown) bytes per slot instead of re-copying O(cache
+//! size) every step. Anything destructive — eviction (`retain`),
+//! speculative rollback (`truncate`), suspend/resume (`restore`),
+//! preemption, slot reassignment, a tier change — invalidates residency
+//! through the `SequenceCache` generation counters, checked at gather time,
+//! so the optimization can never serve stale rows (COW page privatization
+//! is pure accounting and needs no invalidation). Scratch tiers idle too
+//! long are reclaimed; `kv_bytes_copied`, `gather_full_refills`,
+//! `gather_incremental_appends`, and `scratch_retained_bytes` export via
+//! [`metrics::SchedulerMetrics`], `--no-resident-scratch` forces the
+//! always-refill baseline, and the `bench_hotpath` bench gates the win in
+//! CI.
+//!
 //! `Engine::generate_batch` survives as a thin compatibility wrapper
 //! (enqueue everything, drain the scheduler, sort by id) and is
 //! token-identical to the step-driven path under greedy sampling — the

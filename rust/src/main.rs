@@ -39,6 +39,10 @@ ENGINE FLAGS (serve/generate)
   --budget N           per-layer token budget b_init          [128]
   --budget-frac F      b_init = F * prompt_len (overrides --budget)
   --no-squeeze         disable layer-budget reallocation
+  --no-resident-scratch
+                       disable batch-resident scratch KV: fully
+                       re-gather every sequence's cache into the
+                       decode scratch each step (baseline mode)
   --p F                squeeze hyperparameter p               [0.35]
   --max-batch N        decode slots                           [8]
   --kernel K           pallas|jnp                             [pallas]
@@ -90,6 +94,9 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
     if args.flag("no-squeeze") {
         cfg.squeeze.enabled = false;
     }
+    if args.flag("no-resident-scratch") {
+        cfg.resident_scratch = false;
+    }
     cfg.squeeze.p = args.f64("p", cfg.squeeze.p)?;
     cfg.max_batch = args.usize("max-batch", cfg.max_batch)?;
     cfg.kernel = args.str("kernel", &cfg.kernel);
@@ -106,7 +113,7 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["no-squeeze", "verbose"])?;
+    let args = Args::from_env(&["no-squeeze", "no-resident-scratch", "verbose"])?;
     match args.positional(0).unwrap_or("help") {
         "serve" => cmd_serve(&args),
         "generate" => cmd_generate(&args),

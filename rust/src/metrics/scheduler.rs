@@ -106,6 +106,22 @@ pub struct SchedulerMetrics {
     /// completion; tracked separately because a mid-burst cancel rolls
     /// back rows that were never verified).
     pub spec_rollback_tokens: u64,
+    /// KV payload bytes copied into batch scratch by the decode gather
+    /// path. With resident scratch the steady-state contribution per step
+    /// is O(rows appended); with `--no-resident-scratch` it is O(total
+    /// resident KV) — the ratio is the hot-path win `bench_hotpath`
+    /// measures.
+    pub kv_bytes_copied: u64,
+    /// Slot gathers that rewrote a scratch slot from row 0 (first use,
+    /// or residency invalidated by eviction/rollback/resume/reassignment).
+    pub gather_full_refills: u64,
+    /// Slot gathers that appended only the rows grown since the last sync.
+    pub gather_incremental_appends: u64,
+    /// Bytes currently held by per-tier scratch K/V buffers (gauge; the
+    /// idle sweep bounds it).
+    pub scratch_retained_bytes: usize,
+    /// Scratch tiers reclaimed by the idle sweep.
+    pub scratch_tiers_evicted: u64,
 }
 
 impl SchedulerMetrics {
@@ -195,6 +211,11 @@ impl SchedulerMetrics {
             ("spec_acceptance_rate", Json::num(self.spec_acceptance_rate())),
             ("spec_accepted_per_step", Json::num(self.spec_accepted_per_step())),
             ("spec_rollback_depth", Json::num(self.spec_rollback_depth())),
+            ("kv_bytes_copied", Json::num(self.kv_bytes_copied as f64)),
+            ("gather_full_refills", Json::num(self.gather_full_refills as f64)),
+            ("gather_incremental_appends", Json::num(self.gather_incremental_appends as f64)),
+            ("scratch_retained_bytes", Json::num(self.scratch_retained_bytes as f64)),
+            ("scratch_tiers_evicted", Json::num(self.scratch_tiers_evicted as f64)),
         ])
     }
 }
@@ -252,6 +273,24 @@ mod tests {
         assert_eq!(j.get("spec_acceptance_rate").unwrap().as_f64(), Some(0.75));
         assert_eq!(j.get("spec_accepted_per_step").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("spec_rollback_depth").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn json_snapshot_exports_gather_counters() {
+        let m = SchedulerMetrics {
+            kv_bytes_copied: 123_456,
+            gather_full_refills: 7,
+            gather_incremental_appends: 90,
+            scratch_retained_bytes: 8192,
+            scratch_tiers_evicted: 2,
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("kv_bytes_copied").unwrap().as_usize(), Some(123_456));
+        assert_eq!(j.get("gather_full_refills").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("gather_incremental_appends").unwrap().as_usize(), Some(90));
+        assert_eq!(j.get("scratch_retained_bytes").unwrap().as_usize(), Some(8192));
+        assert_eq!(j.get("scratch_tiers_evicted").unwrap().as_usize(), Some(2));
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //! decode tiers {1,2,4,8} x {64,128,192,256,384,512,640}, published for both
 //! the "pallas" and "jnp" kernel names (the sim math is kernel-independent,
 //! which trivially satisfies the kernel-ablation equivalence the real
-//! artifacts are tested for).
+//! artifacts are tested for). `sim://long` keeps the per-token math but
+//! stretches the shape table to max_seq 1536 (prefill buckets up to 1024,
+//! decode caps up to 1536) so benches can exercise kilocontext decode.
 
 use std::path::PathBuf;
 
@@ -79,18 +81,31 @@ pub struct SimModel {
 }
 
 impl SimModel {
-    /// Build the named sim model. Two specs exist: "tiny" (the target shape;
-    /// `sim://` with an empty tail also resolves to it) and "tiny-draft"
-    /// (same geometry, perturbed logits — the speculative draft model).
+    /// Build the named sim model. Three specs exist: "tiny" (the target
+    /// shape; `sim://` with an empty tail also resolves to it), "tiny-draft"
+    /// (same geometry, perturbed logits — the speculative draft model), and
+    /// "long" (same per-token math but max_seq 1536 with 1k-token prefill
+    /// buckets and kilocontext decode tiers — the hot-path bench geometry).
     pub fn new(spec: &str) -> Result<Self> {
         let draft = spec == "tiny-draft";
-        if !spec.is_empty() && spec != "tiny" && !draft {
-            return Err(anyhow!("unknown sim model '{spec}' (available: tiny, tiny-draft)"));
+        let long = spec == "long";
+        if !spec.is_empty() && spec != "tiny" && !draft && !long {
+            return Err(anyhow!(
+                "unknown sim model '{spec}' (available: tiny, tiny-draft, long)"
+            ));
         }
-        let (n_layer, n_head, head_dim, vocab, max_seq) = (8usize, 4usize, 32usize, 272usize, 640usize);
+        let (n_layer, n_head, head_dim, vocab) = (8usize, 4usize, 32usize, 272usize);
+        let max_seq = if long { 1536usize } else { 640usize };
+        let buckets: &[usize] =
+            if long { &[64, 128, 256, 512, 1024] } else { &[64, 128, 256, 512] };
+        let caps: &[usize] = if long {
+            &[128, 256, 512, 768, 1088, 1536]
+        } else {
+            &[64, 128, 192, 256, 384, 512, 640]
+        };
         let mut artifacts = Vec::new();
         for kernel in ["pallas", "jnp"] {
-            for len in [64usize, 128, 256, 512] {
+            for &len in buckets {
                 artifacts.push(ArtifactEntry {
                     file: format!("sim_prefill_{kernel}_l{len}"),
                     kind: "prefill".to_string(),
@@ -101,7 +116,7 @@ impl SimModel {
                 });
             }
             for batch in [1usize, 2, 4, 8] {
-                for cap in [64usize, 128, 192, 256, 384, 512, 640] {
+                for &cap in caps {
                     artifacts.push(ArtifactEntry {
                         file: format!("sim_decode_{kernel}_b{batch}_m{cap}"),
                         kind: "decode".to_string(),
@@ -113,9 +128,16 @@ impl SimModel {
                 }
             }
         }
+        let name = if draft {
+            "sim-tiny-draft"
+        } else if long {
+            "sim-long"
+        } else {
+            "sim-tiny"
+        };
         let manifest = Manifest {
             model: ModelCfg {
-                name: if draft { "sim-tiny-draft" } else { "sim-tiny" }.to_string(),
+                name: name.to_string(),
                 n_layer,
                 d_model: n_head * head_dim,
                 n_head,
@@ -432,6 +454,25 @@ mod tests {
         assert!(SimModel::new("huge").is_err());
         assert!(SimModel::new("").is_ok());
         assert!(SimModel::new("tiny-draft").is_ok());
+    }
+
+    #[test]
+    fn long_spec_extends_context_with_identical_token_math() {
+        let long = SimModel::new("long").unwrap();
+        let m = long.manifest();
+        assert_eq!(m.model.name, "sim-long");
+        assert_eq!(m.model.max_seq, 1536);
+        assert_eq!(m.prefill_buckets("pallas"), vec![64, 128, 256, 512, 1024]);
+        assert_eq!(m.decode_tiers("pallas").len(), 4 * 6);
+        assert!(m.decode_tiers("pallas").contains(&(8, 1088)));
+        // Same hashing and attention math as tiny — only the shape table
+        // differs — so results at shared shapes are byte-identical.
+        let tiny = model();
+        let prompt = vec![256, 5, 9, 22, 257];
+        let a = tiny.prefill(&prompt, 64).unwrap();
+        let b = long.prefill(&prompt, 64).unwrap();
+        assert_eq!(a.k.data, b.k.data);
+        assert_eq!(a.logits.data, b.logits.data);
     }
 
     #[test]
