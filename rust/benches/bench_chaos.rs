@@ -1,0 +1,279 @@
+//! Chaos bench: serving quality under injected faults, worker death, and
+//! overload, in three arms (emits `reports/BENCH_chaos.json`):
+//!
+//! 1. **Fault-rate sweep** — the same closed workload drained at decode
+//!    step-error rates {0, 0.01, 0.05} (plus matching latency spikes), with
+//!    suspend-capable retries. Reports throughput and the containment
+//!    counters, and *asserts* that every faulted run completes
+//!    token-identically to the fault-free reference — the paper-level
+//!    invariant that greedy decode is a pure function of cache + token +
+//!    position, so retries are invisible in the output.
+//! 2. **Kill / recovery** — a worker is killed mid-decode through the
+//!    router's chaos hook. Reports the time until the supervisor has the
+//!    slot healthy again and asserts the in-flight caller unblocked with a
+//!    `WorkerError` terminal and a post-respawn submit succeeds.
+//! 3. **Load shedding** — a Poisson burst against one worker with a low
+//!    queue-depth bound, vs the same burst unbounded. Reports shed counts
+//!    and admitted-request TTFT quantiles, and asserts the admitted p95
+//!    TTFT stays under the bound — shedding converts queue delay into fast
+//!    `Overloaded` rejections instead of serving everyone late.
+//!
+//! Runs entirely on the simulated backend (`sim://tiny`); fault injection
+//! is deterministic (seeded), so every run replays. `SA_QUICK=1` shrinks
+//! the workloads.
+
+use std::time::{Duration, Instant};
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{
+    Engine, FinishReason, Request, RouteError, RoutePolicy, Router,
+};
+use squeezeattention::util::bench::Table;
+use squeezeattention::util::Json;
+use squeezeattention::workload::TraceSpec;
+
+const PROMPT_LEN: usize = 16;
+const MAX_NEW: usize = 32;
+/// Admitted-request p95 TTFT bound for the shedding arm, generous enough
+/// for a loaded CI runner while still far below an unbounded queue's wait.
+const TTFT_BOUND_S: f64 = 2.0;
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig::new("sim://tiny").with_budget(48).with_squeeze(false)
+}
+
+fn is_success(f: FinishReason) -> bool {
+    matches!(f, FinishReason::Eos | FinishReason::Length)
+}
+
+struct FaultArm {
+    rate: f64,
+    wall_s: f64,
+    tokens: u64,
+    completed: usize,
+    worker_errors: u64,
+    requests_retried: u64,
+    faults_injected: u64,
+    swap_outs: u64,
+    /// Per-request generated tokens, by id — the identity payload.
+    outputs: Vec<(u64, Vec<i32>)>,
+}
+
+impl FaultArm {
+    fn to_json(&self, token_identical: bool) -> Json {
+        Json::obj(vec![
+            ("step_error_rate", Json::num(self.rate)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("tokens_per_s", Json::num(self.tokens as f64 / self.wall_s.max(1e-9))),
+            ("completed", Json::num(self.completed as f64)),
+            ("worker_errors", Json::num(self.worker_errors as f64)),
+            ("requests_retried", Json::num(self.requests_retried as f64)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("swap_outs", Json::num(self.swap_outs as f64)),
+            ("token_identical_to_fault_free", Json::Bool(token_identical)),
+        ])
+    }
+}
+
+/// Drain one closed workload at the given decode step-error rate.
+fn run_fault_arm(rate: f64, n_requests: usize) -> anyhow::Result<FaultArm> {
+    let mut cfg = base_cfg().with_host_spill(16 * 1024 * 1024);
+    cfg.max_retries = 1_000;
+    cfg.faults.step_error_rate = rate;
+    if rate > 0.0 {
+        cfg.faults.latency_spike_ms = 1;
+        cfg.faults.latency_spike_rate = rate;
+    }
+    let items = TraceSpec::closed(n_requests, PROMPT_LEN, MAX_NEW, 61).generate();
+    let mut eng = Engine::new(cfg)?;
+    let t0 = Instant::now();
+    for (i, it) in items.iter().enumerate() {
+        let req = Request::new(i as u64, it.sample.prompt.clone(), MAX_NEW);
+        if let Err(rejected) = eng.submit(req) {
+            anyhow::bail!("request {} rejected at submit: {:?}", i, rejected.finish);
+        }
+    }
+    let mut outs = Vec::new();
+    while eng.has_work() {
+        outs.extend(eng.step()?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    for o in &outs {
+        if !is_success(o.finish) {
+            anyhow::bail!("request {} did not survive rate {rate}: {:?}", o.id, o.finish);
+        }
+    }
+    let m = eng.sched_metrics().clone();
+    let mut outputs: Vec<(u64, Vec<i32>)> =
+        outs.iter().map(|o| (o.id, o.generated.clone())).collect();
+    outputs.sort_by_key(|(id, _)| *id);
+    Ok(FaultArm {
+        rate,
+        wall_s,
+        tokens: outs.iter().map(|o| o.generated.len() as u64).sum(),
+        completed: outs.len(),
+        worker_errors: m.worker_errors,
+        requests_retried: m.requests_retried,
+        faults_injected: m.faults_injected,
+        swap_outs: m.swap_outs,
+        outputs,
+    })
+}
+
+/// Kill one worker mid-decode; report how long the supervisor takes to
+/// bring the slot back and verify serving resumes.
+fn run_kill_arm() -> anyhow::Result<Json> {
+    let mut cfg = base_cfg();
+    cfg.max_worker_restarts = 3;
+    cfg.faults.latency_spike_ms = 2;
+    cfg.faults.latency_spike_rate = 1.0; // every decode call sleeps 2ms
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin)?;
+    let items = TraceSpec::closed(2, PROMPT_LEN, MAX_NEW, 67).generate();
+    let prompt = items[0].sample.prompt.clone();
+
+    let handle = router
+        .submit_async(Request::new(0, prompt.clone(), 400))
+        .map_err(|e| anyhow::anyhow!("victim submit failed: {e}"))?;
+    std::thread::sleep(Duration::from_millis(30));
+    let t_kill = Instant::now();
+    assert!(router.kill_worker(0), "poison job not accepted");
+    let out = handle.recv()?;
+    assert_eq!(out.finish, FinishReason::WorkerError, "caller got {:?}", out.finish);
+    let unblock_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+
+    while router.worker_restarts() != 1 || router.worker_state(0) != Some("healthy") {
+        assert!(t_kill.elapsed() < Duration::from_secs(10), "worker never respawned");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let recover_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+    let out = router
+        .submit(Request::new(1, prompt, 16))
+        .map_err(|e| anyhow::anyhow!("post-respawn submit failed: {e}"))?;
+    assert!(is_success(out.finish), "post-respawn request failed: {:?}", out.finish);
+    println!(
+        "kill/recovery: caller unblocked in {unblock_ms:.0}ms, \
+         slot healthy again in {recover_ms:.0}ms, post-respawn submit ok"
+    );
+    Ok(Json::obj(vec![
+        ("caller_unblock_ms", Json::num(unblock_ms)),
+        ("recover_ms", Json::num(recover_ms)),
+        ("worker_restarts", Json::num(router.worker_restarts() as f64)),
+        ("post_respawn_submit_ok", Json::Bool(true)),
+    ]))
+}
+
+/// Replay one Poisson burst through a 1-worker router; returns
+/// (shed, admitted, ttft p95 of admitted).
+fn run_shed_burst(
+    shed_queue_depth: usize,
+    n_requests: usize,
+    rate: f64,
+) -> anyhow::Result<(usize, usize, f64)> {
+    let mut cfg = base_cfg();
+    cfg.shed_queue_depth = shed_queue_depth;
+    cfg.faults.latency_spike_ms = 1;
+    cfg.faults.latency_spike_rate = 1.0; // slow decode so the burst queues
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin)?;
+    let items = TraceSpec::closed(n_requests, PROMPT_LEN, MAX_NEW, 71).poisson(rate).generate();
+    let t0 = Instant::now();
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for (i, it) in items.iter().enumerate() {
+        let dt = it.arrival_s - t0.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(dt));
+        }
+        match router.submit_async(Request::new(i as u64, it.sample.prompt.clone(), MAX_NEW)) {
+            Ok(h) => admitted.push(h),
+            Err(RouteError::Overloaded { .. }) => shed += 1,
+            Err(other) => anyhow::bail!("unexpected route error: {other}"),
+        }
+    }
+    let n_admitted = admitted.len();
+    for h in &admitted {
+        let out = h.recv()?;
+        assert!(is_success(out.finish), "admitted request failed: {:?}", out.finish);
+    }
+    assert_eq!(router.requests_shed() as usize, shed);
+    let snap = router.snapshots().remove(0);
+    Ok((shed, n_admitted, snap.ttft.p95))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("SA_QUICK").is_ok();
+    let n_fault = if quick { 8 } else { 16 };
+    let n_burst = if quick { 16 } else { 40 };
+    let burst_rate = 400.0; // requests/s — far beyond one worker's capacity
+
+    // Arm 1: fault-rate sweep with token-identity assertion.
+    let reference = run_fault_arm(0.0, n_fault)?;
+    let mut arms = vec![(true, reference.outputs.clone(), reference)];
+    for rate in [0.01, 0.05] {
+        let arm = run_fault_arm(rate, n_fault)?;
+        let identical = arm.outputs == arms[0].1;
+        assert!(identical, "rate {rate} diverged from the fault-free reference");
+        arms.push((identical, arm.outputs.clone(), arm));
+    }
+    let mut table =
+        Table::new(&["rate", "tok/s", "faults", "retried", "worker_errors", "identical"]);
+    for (identical, _, arm) in &arms {
+        table.row(vec![
+            format!("{:.2}", arm.rate),
+            format!("{:.1}", arm.tokens as f64 / arm.wall_s.max(1e-9)),
+            arm.faults_injected.to_string(),
+            arm.requests_retried.to_string(),
+            arm.worker_errors.to_string(),
+            identical.to_string(),
+        ]);
+    }
+    println!("fault-rate sweep ({n_fault} requests, suspend-capable retries):");
+    table.print();
+
+    // Arm 2: kill / recovery.
+    let kill = run_kill_arm()?;
+
+    // Arm 3: load shedding vs unbounded queueing under the same burst.
+    let (shed, admitted, ttft_p95) = run_shed_burst(3, n_burst, burst_rate)?;
+    let (base_shed, base_admitted, base_ttft_p95) = run_shed_burst(0, n_burst, burst_rate)?;
+    assert_eq!(base_shed, 0, "unbounded arm must not shed");
+    assert!(shed > 0, "burst never tripped the queue-depth bound");
+    assert!(
+        ttft_p95 <= TTFT_BOUND_S,
+        "admitted p95 TTFT {ttft_p95:.3}s exceeds the {TTFT_BOUND_S}s bound"
+    );
+    println!(
+        "shedding (depth 3): {shed}/{n} shed, admitted p95 TTFT {ttft_p95:.3}s; \
+         unbounded: 0/{n} shed, p95 TTFT {base_ttft_p95:.3}s",
+        n = n_burst
+    );
+
+    let fault_sweep = Json::Arr(arms.iter().map(|(ok, _, a)| a.to_json(*ok)).collect());
+    let baseline = Json::obj(vec![
+        ("shed", Json::num(base_shed as f64)),
+        ("admitted", Json::num(base_admitted as f64)),
+        ("admitted_ttft_p95_s", Json::num(base_ttft_p95)),
+    ]);
+    let shedding = Json::obj(vec![
+        ("shed_queue_depth", Json::num(3.0)),
+        ("shed", Json::num(shed as f64)),
+        ("admitted", Json::num(admitted as f64)),
+        ("admitted_ttft_p95_s", Json::num(ttft_p95)),
+        ("ttft_bound_s", Json::num(TTFT_BOUND_S)),
+        ("ttft_within_bound", Json::Bool(true)),
+        ("unbounded_baseline", baseline),
+    ]);
+    let report = Json::obj(vec![
+        ("bench", Json::str("chaos")),
+        ("n_fault_requests", Json::num(n_fault as f64)),
+        ("n_burst_requests", Json::num(n_burst as f64)),
+        ("burst_rate", Json::num(burst_rate)),
+        ("fault_sweep", fault_sweep),
+        ("kill_recovery", kill),
+        ("shedding", shedding),
+    ]);
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/BENCH_chaos.json", report.to_string())?;
+    println!("wrote reports/BENCH_chaos.json");
+    Ok(())
+}

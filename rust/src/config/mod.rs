@@ -6,4 +6,4 @@ mod serve;
 
 pub use manifest::{ArtifactEntry, Manifest, ModelCfg, TokenMap, WeightEntry,
                    WeightsIndex};
-pub use serve::{PolicyKind, ServeConfig, SpecConfig, SqueezeConfig};
+pub use serve::{FaultConfig, PolicyKind, ServeConfig, SpecConfig, SqueezeConfig};

@@ -82,6 +82,54 @@ impl Default for SpecConfig {
     }
 }
 
+/// Deterministic fault-injection plan for the `sim://` backend (chaos
+/// testing). All knobs default to off; any non-zero rate/count arms the
+/// plan. Injection is a pure function of `(seed, decode-call index)`, so a
+/// given config reproduces the same fault sequence on every run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Probability in [0, 1] that any single backend decode call returns an
+    /// injected step error.
+    pub step_error_rate: f64,
+    /// Injected latency-spike duration (ms) — a decode call selected by
+    /// `latency_spike_rate` sleeps this long before returning normally.
+    pub latency_spike_ms: u64,
+    /// Probability in [0, 1] of a latency spike per decode call.
+    pub latency_spike_rate: f64,
+    /// Inject a simulated allocator OOM error on exactly the N-th decode
+    /// call (1-based). 0 = never.
+    pub oom_at: u64,
+    /// Seed for the fault hash; distinct seeds give independent fault
+    /// sequences at the same rates.
+    pub seed: u64,
+    /// Test hook: `Router::spawn` worker k fails engine construction (used
+    /// by the partial-spawn-failure chaos tests). Not serialized.
+    pub spawn_fail_worker: Option<usize>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            step_error_rate: 0.0,
+            latency_spike_ms: 0,
+            latency_spike_rate: 0.0,
+            oom_at: 0,
+            seed: 0x5EED,
+            spawn_fail_worker: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any injection knob is armed (an unarmed plan costs nothing
+    /// on the decode path).
+    pub fn enabled(&self) -> bool {
+        self.step_error_rate > 0.0
+            || (self.latency_spike_ms > 0 && self.latency_spike_rate > 0.0)
+            || self.oom_at > 0
+    }
+}
+
 /// Engine-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -146,6 +194,22 @@ pub struct ServeConfig {
     /// (`--no-resident-scratch`) to force a full scratch refill every step
     /// — the parity baseline `bench_hotpath` compares against.
     pub resident_scratch: bool,
+    /// Deterministic fault injection on the `sim://` backend (off by
+    /// default) — see [`FaultConfig`].
+    pub faults: FaultConfig,
+    /// Worker-fault retries per request before it retires with
+    /// `FinishReason::WorkerError`. A retried sequence resumes from its
+    /// host-tier snapshot (or restarts from scratch) token-identically.
+    pub max_retries: u32,
+    /// Times the router's supervisor will respawn a dead worker's engine
+    /// before marking the worker permanently dead.
+    pub max_worker_restarts: u64,
+    /// Load shedding: reject with `Overloaded` when the picked worker
+    /// already has this many requests in flight. 0 = shedding on depth off.
+    pub shed_queue_depth: usize,
+    /// Load shedding: reject with `Overloaded` when the picked worker's
+    /// observed queue-latency p95 exceeds this many milliseconds. 0 = off.
+    pub shed_queue_latency_ms: u64,
 }
 
 impl ServeConfig {
@@ -170,6 +234,11 @@ impl ServeConfig {
             batch_wait_ms: 0,
             request_deadline_ms: 0,
             resident_scratch: true,
+            faults: FaultConfig::default(),
+            max_retries: 2,
+            max_worker_restarts: 3,
+            shed_queue_depth: 0,
+            shed_queue_latency_ms: 0,
         }
     }
 
@@ -255,6 +324,35 @@ impl ServeConfig {
         if let Some(r) = j.get("resident_scratch").and_then(|v| v.as_bool()) {
             cfg.resident_scratch = r;
         }
+        if let Some(fa) = j.get("faults") {
+            if let Some(r) = fa.get("step_error_rate").and_then(|v| v.as_f64()) {
+                cfg.faults.step_error_rate = r;
+            }
+            if let Some(m) = fa.get("latency_spike_ms").and_then(|v| v.as_usize()) {
+                cfg.faults.latency_spike_ms = m as u64;
+            }
+            if let Some(r) = fa.get("latency_spike_rate").and_then(|v| v.as_f64()) {
+                cfg.faults.latency_spike_rate = r;
+            }
+            if let Some(n) = fa.get("oom_at").and_then(|v| v.as_usize()) {
+                cfg.faults.oom_at = n as u64;
+            }
+            if let Some(s) = fa.get("seed").and_then(|v| v.as_usize()) {
+                cfg.faults.seed = s as u64;
+            }
+        }
+        if let Some(r) = j.get("max_retries").and_then(|v| v.as_usize()) {
+            cfg.max_retries = r as u32;
+        }
+        if let Some(r) = j.get("max_worker_restarts").and_then(|v| v.as_usize()) {
+            cfg.max_worker_restarts = r as u64;
+        }
+        if let Some(d) = j.get("shed_queue_depth").and_then(|v| v.as_usize()) {
+            cfg.shed_queue_depth = d;
+        }
+        if let Some(l) = j.get("shed_queue_latency_ms").and_then(|v| v.as_usize()) {
+            cfg.shed_queue_latency_ms = l as u64;
+        }
         Ok(cfg)
     }
 
@@ -297,6 +395,20 @@ impl ServeConfig {
             ("batch_wait_ms", Json::num(self.batch_wait_ms as f64)),
             ("request_deadline_ms", Json::num(self.request_deadline_ms as f64)),
             ("resident_scratch", Json::Bool(self.resident_scratch)),
+            (
+                "faults",
+                Json::obj(vec![
+                    ("step_error_rate", Json::num(self.faults.step_error_rate)),
+                    ("latency_spike_ms", Json::num(self.faults.latency_spike_ms as f64)),
+                    ("latency_spike_rate", Json::num(self.faults.latency_spike_rate)),
+                    ("oom_at", Json::num(self.faults.oom_at as f64)),
+                    ("seed", Json::num(self.faults.seed as f64)),
+                ]),
+            ),
+            ("max_retries", Json::num(self.max_retries as f64)),
+            ("max_worker_restarts", Json::num(self.max_worker_restarts as f64)),
+            ("shed_queue_depth", Json::num(self.shed_queue_depth as f64)),
+            ("shed_queue_latency_ms", Json::num(self.shed_queue_latency_ms as f64)),
         ])
     }
 
@@ -367,6 +479,31 @@ impl ServeConfig {
         if k > 0 {
             self.spec.draft_k = k;
         }
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultConfig) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_max_retries(mut self, retries: u32) -> Self {
+        self.max_retries = retries;
+        self
+    }
+
+    pub fn with_max_worker_restarts(mut self, restarts: u64) -> Self {
+        self.max_worker_restarts = restarts;
+        self
+    }
+
+    pub fn with_shed_queue_depth(mut self, depth: usize) -> Self {
+        self.shed_queue_depth = depth;
+        self
+    }
+
+    pub fn with_shed_queue_latency_ms(mut self, ms: u64) -> Self {
+        self.shed_queue_latency_ms = ms;
         self
     }
 }
@@ -498,6 +635,48 @@ mod tests {
         // absent key keeps the default
         let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
         assert!(ServeConfig::from_json(&j).unwrap().resident_scratch);
+    }
+
+    #[test]
+    fn fault_knobs_roundtrip_and_default() {
+        // Defaults: injection disarmed, 2 retries, 3 restarts, shedding off.
+        let cfg = ServeConfig::new("a");
+        assert!(!cfg.faults.enabled());
+        assert_eq!(cfg.max_retries, 2);
+        assert_eq!(cfg.max_worker_restarts, 3);
+        assert_eq!(cfg.shed_queue_depth, 0);
+        assert_eq!(cfg.shed_queue_latency_ms, 0);
+        let set = cfg
+            .with_faults(FaultConfig {
+                step_error_rate: 0.05,
+                latency_spike_ms: 3,
+                latency_spike_rate: 0.1,
+                oom_at: 17,
+                seed: 99,
+                spawn_fail_worker: None,
+            })
+            .with_max_retries(5)
+            .with_max_worker_restarts(1)
+            .with_shed_queue_depth(4)
+            .with_shed_queue_latency_ms(250);
+        assert!(set.faults.enabled());
+        let back = ServeConfig::from_json(&set.to_json()).unwrap();
+        assert!((back.faults.step_error_rate - 0.05).abs() < 1e-12);
+        assert_eq!(back.faults.latency_spike_ms, 3);
+        assert!((back.faults.latency_spike_rate - 0.1).abs() < 1e-12);
+        assert_eq!(back.faults.oom_at, 17);
+        assert_eq!(back.faults.seed, 99);
+        assert_eq!(back.max_retries, 5);
+        assert_eq!(back.max_worker_restarts, 1);
+        assert_eq!(back.shed_queue_depth, 4);
+        assert_eq!(back.shed_queue_latency_ms, 250);
+        // absent keys keep the defaults
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        let d = ServeConfig::from_json(&j).unwrap();
+        assert!(!d.faults.enabled());
+        assert_eq!(d.max_retries, 2);
+        // spawn_fail_worker is a test hook, never serialized
+        assert!(set.to_json().get("faults").unwrap().get("spawn_fail_worker").is_none());
     }
 
     #[test]

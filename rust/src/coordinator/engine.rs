@@ -87,7 +87,7 @@ use crate::kvcache::{
 use crate::metrics::{Histogram, SchedulerMetrics, ThroughputMeter};
 use crate::model::tokenizer::{self, check_token_map};
 use crate::model::{argmax, sample};
-use crate::runtime::{DecodeOut, Runtime, TensorI32};
+use crate::runtime::{DecodeOut, FaultPlan, Runtime, TensorI32};
 use crate::squeeze::{allocate, BudgetPlan, CosineStats};
 use crate::util::Rng;
 
@@ -222,6 +222,11 @@ impl Engine {
 
     pub fn new(cfg: ServeConfig) -> Result<Self> {
         let runtime = Runtime::load(&cfg.artifacts, &cfg.kernel)?;
+        // Chaos testing: arm deterministic fault injection on the *target*
+        // runtime only — draft-model faults would be indistinguishable from
+        // target faults in the metrics, and the draft path already rolls
+        // back cleanly on any error.
+        runtime.set_fault_plan(cfg.faults.enabled().then(|| FaultPlan::from_config(&cfg.faults)));
         check_token_map(&runtime.manifest.tokens)?;
         let n_layer = runtime.manifest.model.n_layer;
         let row_elems = runtime.manifest.model.n_head * runtime.manifest.model.head_dim;
@@ -282,6 +287,8 @@ impl Engine {
         }
         self.batch = Self::select_batch(&self.runtime, cfg.max_batch)?;
         self.draft = Self::load_draft(&self.runtime, &cfg)?;
+        self.runtime
+            .set_fault_plan(cfg.faults.enabled().then(|| FaultPlan::from_config(&cfg.faults)));
         self.policy = make_policy(&cfg);
         // Residency entries reference sequence ordinals of the scheduler
         // being replaced below — drop every scratch tier wholesale.
@@ -499,11 +506,13 @@ impl Engine {
             return Ok(outputs);
         }
         if let Err(e) = self.decode_phase(sched, &mut outputs) {
-            // Runtime fault: fail everything in place rather than bubbling
-            // the error past outputs already collected this step (requests
-            // retired pre-decode must not be lost).
-            eprintln!("decode step failed: {e:#}");
-            Self::fail_in_place(sched, self.n_layer, &mut outputs);
+            // Backend fault: contain it to the sequences that were in the
+            // failed batch instead of poisoning the whole engine. Queued and
+            // suspended requests are untouched; affected slots re-queue from
+            // their step-boundary snapshot (bounded per-request retries) or
+            // retire with `WorkerError`. Outputs already collected this step
+            // (pre-decode retirements) are preserved either way.
+            self.contain_step_error(sched, &mut outputs, &e);
             self.stamp_kv_gauges(sched);
             self.note_outputs(&outputs);
             return Ok(outputs);
@@ -805,6 +814,7 @@ impl Engine {
         sched.metrics.gather_incremental_appends = self.gather.incremental_appends;
         sched.metrics.scratch_retained_bytes = self.scratch.values().map(|t| t.bytes()).sum();
         sched.metrics.scratch_tiers_evicted = self.scratch_tiers_evicted;
+        sched.metrics.faults_injected = self.runtime.faults_injected();
     }
 
     /// Decode steps a scratch tier may sit unused before the idle sweep
@@ -1416,46 +1426,53 @@ impl Engine {
         }
 
         // --- draft phase: sequential micro-steps, batched across slots ----
-        for j in 0..draft_k {
-            let inputs: Vec<(usize, i32, i32)> = bursts
-                .iter()
-                .filter(|bu| bu.drafting && j < bu.k)
-                .map(|bu| {
-                    let a = sched.slots[bu.idx].as_ref().expect("burst slot occupied");
-                    let tok = if j == 0 { a.last_token } else { bu.drafts[j - 1] };
-                    (bu.idx, tok, (bu.start_pos + j) as i32)
-                })
-                .collect();
-            if inputs.is_empty() {
-                break;
-            }
-            let (out, _m) = self.batched_call(sched, true, &inputs)?;
-            let vocab = self.runtime.manifest.model.vocab;
-            for bu in bursts.iter_mut().filter(|bu| bu.drafting && j < bu.k) {
-                let a = sched.slots[bu.idx].as_mut().expect("burst slot occupied");
-                // Optimistic append of the drafted KV row — inside the
-                // charged envelope, and never scored, so rollback restores
-                // the H2O accumulators untouched.
-                let pos = (bu.start_pos + j) as u32;
-                for layer in 0..self.n_layer {
-                    let base = (layer * self.batch + bu.idx) * self.row_elems;
-                    a.cache.append(
-                        layer,
-                        &out.new_k.data[base..base + self.row_elems],
-                        &out.new_v.data[base..base + self.row_elems],
-                        pos,
-                    )?;
+        // A fault mid-draft must not escape before the rollback below runs:
+        // slots would be suspended with unverified drafted rows in their
+        // caches, violating the "rollback is never observable" contract. So
+        // the phase captures its error and the rollback is unconditional.
+        let draft_res: Result<()> = (|| {
+            for j in 0..draft_k {
+                let inputs: Vec<(usize, i32, i32)> = bursts
+                    .iter()
+                    .filter(|bu| bu.drafting && j < bu.k)
+                    .map(|bu| {
+                        let a = sched.slots[bu.idx].as_ref().expect("burst slot occupied");
+                        let tok = if j == 0 { a.last_token } else { bu.drafts[j - 1] };
+                        (bu.idx, tok, (bu.start_pos + j) as i32)
+                    })
+                    .collect();
+                if inputs.is_empty() {
+                    break;
                 }
-                // Greedy proposal — deliberately rng-free so the verify
-                // micro-steps consume the sampling rng in exactly the
-                // non-speculative order.
-                let tok = argmax(&out.logits.data[bu.idx * vocab..(bu.idx + 1) * vocab]);
-                bu.drafts.push(tok);
-                if tok == tokenizer::EOS {
-                    bu.drafting = false; // nothing decodes past EOS
+                let (out, _m) = self.batched_call(sched, true, &inputs)?;
+                let vocab = self.runtime.manifest.model.vocab;
+                for bu in bursts.iter_mut().filter(|bu| bu.drafting && j < bu.k) {
+                    let a = sched.slots[bu.idx].as_mut().expect("burst slot occupied");
+                    // Optimistic append of the drafted KV row — inside the
+                    // charged envelope, and never scored, so rollback
+                    // restores the H2O accumulators untouched.
+                    let pos = (bu.start_pos + j) as u32;
+                    for layer in 0..self.n_layer {
+                        let base = (layer * self.batch + bu.idx) * self.row_elems;
+                        a.cache.append(
+                            layer,
+                            &out.new_k.data[base..base + self.row_elems],
+                            &out.new_v.data[base..base + self.row_elems],
+                            pos,
+                        )?;
+                    }
+                    // Greedy proposal — deliberately rng-free so the verify
+                    // micro-steps consume the sampling rng in exactly the
+                    // non-speculative order.
+                    let tok = argmax(&out.logits.data[bu.idx * vocab..(bu.idx + 1) * vocab]);
+                    bu.drafts.push(tok);
+                    if tok == tokenizer::EOS {
+                        bu.drafting = false; // nothing decodes past EOS
+                    }
                 }
             }
-        }
+            Ok(())
+        })();
 
         // --- rollback: drop every drafted row, return whole pages ---------
         for bu in &bursts {
@@ -1469,6 +1486,10 @@ impl Engine {
             // therefore cannot fail).
             let _ = a.table.shrink(&lens);
         }
+        // With the caches rolled back to their step-boundary state, a draft
+        // fault can now propagate safely: containment sees exactly the
+        // snapshot a resume continues from token-identically.
+        draft_res?;
 
         // --- verify: target micro-steps, batched across sequences ---------
         // Micro-step v checks drafts[v]; the step after the last draft is
@@ -1630,6 +1651,37 @@ impl Engine {
                 self.meter.add_request();
                 sched.metrics.completed += 1;
                 outputs.push(Self::finish(a, reason));
+            }
+        }
+        sched.refresh_gauges();
+    }
+
+    /// Contain a backend step error to the sequences that were in the
+    /// failed batch. Each occupied slot either re-queues from its
+    /// step-boundary snapshot (suspend when spill is enabled, else
+    /// restart-from-scratch — both resume token-identically because decode
+    /// is a pure function of cache + token + position) while it has retries
+    /// left, or retires with a `WorkerError` terminal that keeps the
+    /// partial generation. Dropping/migrating the slot releases its device
+    /// pages (RAII), so pool accounting returns to baseline. The queue and
+    /// the suspended set are untouched — the engine keeps serving.
+    fn contain_step_error(
+        &mut self,
+        sched: &mut Scheduler,
+        outputs: &mut Vec<RequestOutput>,
+        e: &anyhow::Error,
+    ) {
+        eprintln!("decode step failed (contained): {e:#}");
+        sched.metrics.worker_errors += 1;
+        for idx in 0..sched.slots.len() {
+            let Some(mut a) = sched.slots[idx].take() else { continue };
+            let retries = *a.req.retries_left.get_or_insert(self.cfg.max_retries);
+            if retries > 0 {
+                a.req.retries_left = Some(retries - 1);
+                sched.metrics.requests_retried += 1;
+                self.suspend_or_requeue(sched, a);
+            } else {
+                outputs.push(Self::finish(a, FinishReason::WorkerError));
             }
         }
         sched.refresh_gauges();

@@ -29,6 +29,16 @@
 //! consumers must treat `pos` as authoritative, not append blindly.
 //! Suspend/resume never re-emits: the partial output is preserved.
 //!
+//! Worker faults keep the contract intact: a backend step error either
+//! re-queues the affected sequences (retry — a later `Resumed` or restarted
+//! `Started` follows, still exactly one terminal event at the end) or, once
+//! the per-request retry budget is spent, retires them with an `Error`
+//! terminal whose output carries `FinishReason::WorkerError`. A worker
+//! *thread* death is handled one level up: the router's supervisor
+//! synthesizes the `WorkerError` terminal for every request that was in
+//! flight on the dead worker, so no subscriber ever hangs waiting for a
+//! stream the engine can no longer finish.
+//!
 //! Speculative decoding (`--spec-k`) does not change the contract, only the
 //! cadence: a verify burst emits one `Token` event per *committed* token,
 //! so several consecutive-`pos` events can arrive from a single engine
@@ -177,9 +187,10 @@ pub(crate) fn emit_terminal(sink: &Option<EventSink>, out: &RequestOutput) {
         let boxed = Box::new(out.clone());
         s.send(match out.finish {
             FinishReason::Cancelled => RequestEvent::Cancelled(boxed),
-            FinishReason::Oom | FinishReason::Rejected | FinishReason::Failed => {
-                RequestEvent::Error(boxed)
-            }
+            FinishReason::Oom
+            | FinishReason::Rejected
+            | FinishReason::Failed
+            | FinishReason::WorkerError => RequestEvent::Error(boxed),
             FinishReason::Eos | FinishReason::Length | FinishReason::DeadlineExceeded => {
                 RequestEvent::Done(boxed)
             }

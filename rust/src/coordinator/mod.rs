@@ -12,7 +12,18 @@
 //!   so requests arriving mid-flight join the running batch.
 //!   `submit_stream` attaches a lifecycle handle and forwards the
 //!   per-request event stream across the worker boundary instead of
-//!   waiting on completed outputs.
+//!   waiting on completed outputs. Admission control sheds work with
+//!   `RouteError::Overloaded` (+ Retry-After hint) before it consumes
+//!   worker resources when a configured queue-depth or queue-latency bound
+//!   is exceeded.
+//! * **supervisor** — worker health and recovery. Each worker heartbeats
+//!   once per loop iteration into shared state; a supervisor thread demotes
+//!   stale workers to Draining, and a liveness guard marks a dead (panicked)
+//!   worker thread Dead, triggering the death protocol: in-flight requests
+//!   get synthesized `WorkerError` terminals (no caller or subscriber ever
+//!   hangs), queued-but-unstarted jobs are re-routed to a live worker, and
+//!   the dead worker is respawned with exponential backoff, bounded by
+//!   `ServeConfig::max_worker_restarts`.
 //! * **lifecycle** — per-request event channels (`RequestEvent`), the
 //!   cooperative `CancelToken`, deadlines, and the `RequestHandle` callers
 //!   observe and cancel through.
@@ -76,6 +87,31 @@
 //! and deadlines there (`FinishReason::{Cancelled, DeadlineExceeded}`),
 //! and the server streams tokens to clients as they decode.
 //!
+//! ## Failure domains
+//!
+//! Faults are contained at the smallest layer that can handle them, and
+//! each layer's contract is the same: *exactly one terminal event per
+//! request, pool bytes back to baseline after drain*.
+//!
+//! ```text
+//!   fault                    contained by        request outcome
+//!   ─────                    ────────────        ───────────────
+//!   backend step error       engine              re-queued (bounded per-
+//!   (injected via            (contain_step_      request retry budget,
+//!    FaultConfig on sim://    error)             `max_retries`) or retired
+//!    or a real PJRT error)                       with WorkerError
+//!   worker thread death      supervisor          in-flight: synthesized
+//!   (panic; chaos hook:      (death protocol,    WorkerError terminal;
+//!    Router::kill_worker)     bounded respawn)   queued: re-routed
+//!   router overload          admission control   shed with Overloaded +
+//!   (queue depth/latency     (before a worker    retry_after_ms hint
+//!    over configured bound)   is touched)
+//! ```
+//!
+//! Because greedy decode output is a pure function of (cache, token, pos),
+//! a retried or restarted request that later succeeds completes
+//! token-identically to a fault-free run — the chaos suite pins this.
+//!
 //! ## Decode hot path: batch-resident scratch
 //!
 //! The engine owns one scratch `(K, V)` buffer pair per decode tier
@@ -106,9 +142,11 @@ pub(crate) mod residency;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod supervisor;
 
 pub use engine::{Engine, EngineRunStats};
 pub use lifecycle::{CancelToken, EventSink, RequestEvent, RequestHandle};
 pub use request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
 pub use router::{RoutePolicy, Router, WorkerSnapshot};
 pub use scheduler::Scheduler;
+pub use supervisor::{Health, ReplyHandle, RouteError};

@@ -48,6 +48,11 @@ pub struct Request {
     pub events: Option<EventSink>,
     /// Cooperative cancellation flag, honored at step boundaries.
     pub cancel: Option<Arc<CancelToken>>,
+    /// Remaining worker-fault retries. `None` (the default) resolves lazily
+    /// to `ServeConfig::max_retries` the first time a backend step error
+    /// hits this request; once it reaches 0 the next fault retires the
+    /// request with [`FinishReason::WorkerError`].
+    pub retries_left: Option<u32>,
 }
 
 impl Request {
@@ -60,6 +65,7 @@ impl Request {
             deadline: None,
             events: None,
             cancel: None,
+            retries_left: None,
         }
     }
 
@@ -86,6 +92,11 @@ pub enum FinishReason {
     /// Cancelled via its `CancelToken` (client disconnect or an explicit
     /// `RequestHandle::cancel`); the partial generation is preserved.
     Cancelled,
+    /// A worker fault (backend step error or worker-thread death) retired
+    /// the request after its retry budget ran out; the partial generation
+    /// is preserved — a retried request that later *succeeds* never carries
+    /// this reason.
+    WorkerError,
     /// Exceeded its wall-clock deadline at a step boundary; the partial
     /// generation is preserved.
     DeadlineExceeded,

@@ -1,13 +1,32 @@
-//! Multi-worker router: spreads requests across engine workers.
+//! Multi-worker router: spreads requests across supervised engine workers.
 //!
 //! Each worker owns an `Engine` on a dedicated thread (the engine is
 //! synchronous; PJRT-CPU execution is compute-bound) and pulls work from its
-//! own channel. The router assigns each incoming request to the worker with
-//! the least outstanding work (least-loaded, falling back to round-robin on
-//! ties) — the same shape as vLLM's router in front of engine replicas.
-//! Plain std threading: the offline dependency set has no tokio.
+//! own crash-surviving inbox (`supervisor::WorkerQueue`). The router assigns
+//! each incoming request to the worker with the least outstanding work
+//! (least-loaded, falling back to round-robin on ties) — the same shape as
+//! vLLM's router in front of engine replicas. Plain std threading: the
+//! offline dependency set has no tokio.
 //!
-//! The worker loop is step-driven: it drains its channel into the engine's
+//! ```text
+//!   submit / submit_async / submit_stream
+//!        |
+//!        v
+//!   admission -- shed? --> Err(RouteError::Overloaded{retry_after_ms})
+//!        |                 (queue depth / projected queue latency bounds)
+//!        v
+//!   pick: least-loaded HEALTHY worker (Draining as fallback,
+//!        |                             Dead skipped entirely)
+//!        v
+//!   WorkerQueue -> worker thread -> Engine  (heartbeat every loop)
+//!                        ^
+//!                        |   supervisor thread (10ms tick): stale beat ->
+//!                        |   Draining; dead thread -> fail in-flight with
+//!                        +-- WorkerError, re-route queued jobs, bounded
+//!                            respawn with backoff (see supervisor.rs)
+//! ```
+//!
+//! The worker loop is step-driven: it drains its inbox into the engine's
 //! scheduler queue between decode steps, so a request submitted while a
 //! batch is running joins that batch at the next step instead of waiting
 //! for the whole batch to finish (continuous batching across the network
@@ -23,13 +42,15 @@
 //! routing, so token/suspend/terminal events flow from the worker's engine
 //! to the subscriber as they happen — the router forwards events rather
 //! than waiting on completed outputs, and the sink rewrites worker-local
-//! ticket ids back to the caller's. `metrics_json` exports per-worker
-//! scheduler counters and queue/TTFT/ITL latency summaries.
+//! ticket ids back to the caller's. `submit_async` returns a `ReplyHandle`
+//! whose drop cancels the request, so abandoned callers release their KV
+//! reservations instead of decoding to `max_new_tokens`. `metrics_json`
+//! exports per-worker scheduler counters, health, and queue/TTFT/ITL latency
+//! summaries plus router-level shed/restart totals.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -39,18 +60,34 @@ use crate::metrics::{HistogramSummary, SchedulerMetrics};
 use crate::util::Json;
 
 use super::engine::Engine;
-use super::lifecycle::RequestHandle;
+use super::lifecycle::{CancelToken, RequestHandle};
 use super::request::{Request, RequestOutput};
+use super::supervisor::{
+    self, Health, Job, PendingJob, Pop, ReplyHandle, RouteError, SupervisorCtx, WorkerShared,
+};
 
-/// Per-worker observability snapshot, refreshed after every decode step:
-/// the scheduler counters plus the engine's latency histograms (queue wait,
-/// time-to-first-token, inter-token latency) summarized for export.
+/// How long an idle worker blocks on its inbox before publishing another
+/// heartbeat. Bounds supervisor staleness detection for idle workers.
+const HEARTBEAT: Duration = Duration::from_millis(50);
+
+/// Per-worker observability snapshot: the scheduler counters plus the
+/// engine's latency histograms (queue wait, time-to-first-token, inter-token
+/// latency) summarized for export, refreshed after every decode step, and
+/// the supervisor's view (health state, restart count) stamped by
+/// `Router::snapshots`.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerSnapshot {
     pub sched: SchedulerMetrics,
     pub queue_latency: HistogramSummary,
     pub ttft: HistogramSummary,
     pub itl: HistogramSummary,
+    /// False when the worker is draining/dead or its metrics mutex is
+    /// poisoned (it died mid-publish).
+    pub healthy: bool,
+    /// `"healthy"`, `"draining"`, or `"dead"`.
+    pub state: String,
+    /// Respawn attempts consumed for this worker slot.
+    pub restarts: u64,
 }
 
 impl WorkerSnapshot {
@@ -60,22 +97,11 @@ impl WorkerSnapshot {
             ("queue_latency_s", self.queue_latency.to_json()),
             ("ttft_s", self.ttft.to_json()),
             ("itl_s", self.itl.to_json()),
+            ("healthy", Json::Bool(self.healthy)),
+            ("state", Json::str(self.state.clone())),
+            ("restarts", Json::num(self.restarts as f64)),
         ])
     }
-}
-
-struct WorkerHandle {
-    tx: mpsc::Sender<Job>,
-    inflight: Arc<AtomicUsize>,
-    /// Snapshot of the worker's scheduler metrics + latency summaries,
-    /// refreshed after every step (engines live on their worker threads;
-    /// this is the only window into their counters).
-    metrics: Arc<Mutex<WorkerSnapshot>>,
-}
-
-struct Job {
-    request: Request,
-    reply: mpsc::Sender<RequestOutput>,
 }
 
 /// Routing discipline.
@@ -86,77 +112,154 @@ pub enum RoutePolicy {
 }
 
 pub struct Router {
-    workers: Vec<WorkerHandle>,
+    workers: Vec<Arc<WorkerShared>>,
     next: AtomicUsize,
     policy: RoutePolicy,
+    cfg: ServeConfig,
+    shutdown: Arc<AtomicBool>,
+    supervisor: Option<JoinHandle<()>>,
+    requests_shed: AtomicU64,
 }
 
 impl Router {
-    /// Spawn `n_workers` engines (each compiles its own executables).
+    /// Spawn `n_workers` engines (each compiles its own executables) plus
+    /// the supervisor thread watching them.
     ///
     /// The PJRT client is not `Send` (it holds `Rc` internals), so each
     /// engine is constructed *inside* its worker thread; construction errors
     /// are reported back over a readiness channel before `spawn` returns.
+    /// On a partial failure (worker `k` fails to start) the `0..k` workers
+    /// already running are shut down and joined before the error — naming
+    /// worker `k` — is returned: `spawn` never leaks threads.
     pub fn spawn(cfg: ServeConfig, n_workers: usize, policy: RoutePolicy) -> Result<Self> {
-        let mut workers = Vec::new();
-        for w in 0..n_workers.max(1) {
-            let (tx, rx) = mpsc::channel::<Job>();
-            let inflight = Arc::new(AtomicUsize::new(0));
-            let inflight2 = inflight.clone();
-            let metrics = Arc::new(Mutex::new(WorkerSnapshot::default()));
-            let metrics2 = metrics.clone();
-            let cfg = cfg.clone();
-            let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
-            std::thread::spawn(move || match Engine::new(cfg) {
-                Ok(engine) => {
-                    let _ = ready_tx.send(Ok(()));
-                    worker_loop(engine, rx, inflight2, metrics2);
+        let start = Instant::now();
+        let mut workers: Vec<Arc<WorkerShared>> = Vec::new();
+        for idx in 0..n_workers.max(1) {
+            let shared = Arc::new(WorkerShared::new(start));
+            if let Err(e) = supervisor::spawn_worker(idx, shared.clone(), cfg.clone(), start) {
+                for prev in &workers {
+                    prev.queue.close();
+                    if let Some(h) = prev.thread_take() {
+                        let _ = h.join();
+                    }
                 }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                }
-            });
-            ready_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("worker {w} died during startup"))?
-                .map_err(|e| anyhow::anyhow!("worker {w} failed to start: {e}"))?;
-            workers.push(WorkerHandle { tx, inflight, metrics });
+                return Err(e);
+            }
+            workers.push(shared);
         }
-        Ok(Self { workers, next: AtomicUsize::new(0), policy })
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let ctx = SupervisorCtx {
+            workers: workers.clone(),
+            cfg: cfg.clone(),
+            start,
+            shutdown: shutdown.clone(),
+        };
+        let supervisor = std::thread::Builder::new()
+            .name("sa-supervisor".into())
+            .spawn(move || supervisor::supervise(ctx))
+            .map_err(|e| anyhow::anyhow!("supervisor thread spawn failed: {e}"))?;
+        Ok(Self {
+            workers,
+            next: AtomicUsize::new(0),
+            policy,
+            cfg,
+            shutdown,
+            supervisor: Some(supervisor),
+            requests_shed: AtomicU64::new(0),
+        })
     }
 
-    fn pick(&self) -> usize {
-        match self.policy {
-            RoutePolicy::RoundRobin => {
-                self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len()
-            }
-            RoutePolicy::LeastLoaded => self
-                .workers
+    /// Pick a worker and pass admission control. Dead workers are skipped;
+    /// Draining ones serve only when nothing is Healthy.
+    fn pick(&self) -> std::result::Result<usize, RouteError> {
+        let by_health = |h: Health| -> Vec<usize> {
+            self.workers
                 .iter()
                 .enumerate()
-                .min_by_key(|(i, w)| (w.inflight.load(Ordering::Relaxed), *i))
+                .filter(|(_, w)| w.health() == h)
                 .map(|(i, _)| i)
-                .unwrap_or(0),
+                .collect()
+        };
+        let mut cands = by_health(Health::Healthy);
+        if cands.is_empty() {
+            cands = by_health(Health::Draining);
         }
+        if cands.is_empty() {
+            return Err(RouteError::NoHealthyWorker);
+        }
+        let i = match self.policy {
+            RoutePolicy::RoundRobin => {
+                cands[self.next.fetch_add(1, Ordering::Relaxed) % cands.len()]
+            }
+            RoutePolicy::LeastLoaded => cands
+                .into_iter()
+                .min_by_key(|&i| (self.workers[i].inflight.load(Ordering::Relaxed), i))
+                .expect("non-empty"),
+        };
+        self.admit(i)?;
+        Ok(i)
+    }
+
+    /// Load shedding: reject before the request consumes worker resources
+    /// when the picked (least-loaded) worker is already over the configured
+    /// queue-depth or projected queue-latency bound. A bound of 0 disables
+    /// that check.
+    fn admit(&self, i: usize) -> std::result::Result<(), RouteError> {
+        let w = &self.workers[i];
+        let depth = self.cfg.shed_queue_depth;
+        if depth > 0 && w.inflight.load(Ordering::Relaxed) >= depth {
+            return Err(self.shed(w));
+        }
+        let bound_ms = self.cfg.shed_queue_latency_ms;
+        if bound_ms > 0 {
+            let p95_s = w.metrics.lock().map(|m| m.queue_latency.p95).unwrap_or(0.0);
+            if p95_s.is_finite() && p95_s * 1000.0 >= bound_ms as f64 {
+                return Err(self.shed(w));
+            }
+        }
+        Ok(())
+    }
+
+    fn shed(&self, w: &WorkerShared) -> RouteError {
+        self.requests_shed.fetch_add(1, Ordering::Relaxed);
+        // Retry-After hint: the worker's median queue wait is the best
+        // single predictor of when capacity frees up; clamp to a sane range.
+        let p50_s = w.metrics.lock().map(|m| m.queue_latency.p50).unwrap_or(0.0);
+        let hint = if p50_s.is_finite() && p50_s > 0.0 { (p50_s * 1000.0) as u64 } else { 100 };
+        RouteError::Overloaded { retry_after_ms: hint.clamp(50, 5000) }
     }
 
     /// Route one request; blocks until its worker finishes it.
-    pub fn submit(&self, request: Request) -> Result<RequestOutput> {
-        Ok(self.submit_async(request)?.recv()?)
+    pub fn submit(&self, request: Request) -> std::result::Result<RequestOutput, RouteError> {
+        self.submit_async(request)?.recv().map_err(|_| RouteError::WorkerClosed)
     }
 
-    /// Route one request; returns a receiver for the eventual output. The
+    /// Route one request; returns a handle for the eventual output. The
     /// request enters its worker's scheduler queue immediately and joins the
     /// running batch at that worker's next decode step — callers pipeline
-    /// many requests and collect later.
-    pub fn submit_async(&self, request: Request) -> Result<mpsc::Receiver<RequestOutput>> {
-        let w = &self.workers[self.pick()];
+    /// many requests and collect later. Dropping the handle without
+    /// receiving cancels the request (see [`ReplyHandle`]).
+    pub fn submit_async(
+        &self,
+        mut request: Request,
+    ) -> std::result::Result<ReplyHandle, RouteError> {
+        let cancel = match &request.cancel {
+            Some(c) => c.clone(),
+            None => {
+                let c = Arc::new(CancelToken::new());
+                request.cancel = Some(c.clone());
+                c
+            }
+        };
+        let i = self.pick()?;
+        let w = &self.workers[i];
         w.inflight.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
-        w.tx
-            .send(Job { request, reply })
-            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
-        Ok(rx)
+        if w.queue.push(Job::Run { request, reply }).is_err() {
+            w.inflight.fetch_sub(1, Ordering::Relaxed);
+            return Err(RouteError::WorkerClosed);
+        }
+        Ok(ReplyHandle::new(rx, cancel))
     }
 
     /// Route one request and subscribe to its lifecycle: the returned
@@ -165,19 +268,51 @@ impl Router {
     /// Error with the final output) plus `cancel()`. Events are forwarded
     /// out of the worker as its engine decodes — a streaming consumer
     /// never waits for completion, and events carry the id the caller
-    /// submitted with (worker-local ticket rewriting is invisible).
-    pub fn submit_stream(&self, mut request: Request) -> Result<RequestHandle> {
+    /// submitted with (worker-local ticket rewriting is invisible). A
+    /// worker death mid-request resolves the stream with a synthesized
+    /// `WorkerError` terminal — subscribers never hang.
+    pub fn submit_stream(
+        &self,
+        mut request: Request,
+    ) -> std::result::Result<RequestHandle, RouteError> {
         let handle = RequestHandle::attach(&mut request);
-        let w = &self.workers[self.pick()];
+        let i = self.pick()?;
+        let w = &self.workers[i];
         w.inflight.fetch_add(1, Ordering::Relaxed);
         // The worker's reply path still runs for inflight bookkeeping; the
         // subscriber consumes the event stream instead, so the receiver is
         // dropped here and the eventual reply send is a silent no-op.
         let (reply, _unused) = mpsc::channel();
-        w.tx
-            .send(Job { request, reply })
-            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        if w.queue.push(Job::Run { request, reply }).is_err() {
+            w.inflight.fetch_sub(1, Ordering::Relaxed);
+            return Err(RouteError::WorkerClosed);
+        }
         Ok(handle)
+    }
+
+    /// Chaos hook: make worker `i`'s thread panic while holding its metrics
+    /// lock — the closest std-thread analog of a hard crash (dead thread +
+    /// poisoned mutex). The supervisor notices via the liveness guard and
+    /// runs the full death protocol (fail in-flight, re-route, respawn).
+    /// Returns false for an out-of-range index or a closed queue.
+    pub fn kill_worker(&self, i: usize) -> bool {
+        self.workers.get(i).is_some_and(|w| w.queue.push(Job::Poison).is_ok())
+    }
+
+    /// Health of worker `i` as a string (`"healthy"` / `"draining"` /
+    /// `"dead"`), or `None` when out of range.
+    pub fn worker_state(&self, i: usize) -> Option<&'static str> {
+        self.workers.get(i).map(|w| w.health().name())
+    }
+
+    /// Total respawn attempts across all worker slots.
+    pub fn worker_restarts(&self) -> u64 {
+        self.workers.iter().map(|w| w.restarts.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Requests rejected by admission control since spawn.
+    pub fn requests_shed(&self) -> u64 {
+        self.requests_shed.load(Ordering::Relaxed)
     }
 
     pub fn n_workers(&self) -> usize {
@@ -196,58 +331,94 @@ impl Router {
     }
 
     /// Per-worker full snapshots: scheduler counters plus queue/TTFT/ITL
-    /// latency summaries.
+    /// latency summaries and supervision state. A worker whose metrics
+    /// mutex is poisoned (it died mid-publish, or a poison job killed it
+    /// while holding the lock) is reported with default counters and
+    /// `healthy: false` / `state: "dead"` rather than silently defaulted.
     pub fn snapshots(&self) -> Vec<WorkerSnapshot> {
+        let shed_total = self.requests_shed();
         self.workers
             .iter()
-            .map(|w| w.metrics.lock().map(|m| (*m).clone()).unwrap_or_default())
+            .map(|w| {
+                let (mut snap, poisoned) = match w.metrics.lock() {
+                    Ok(m) => ((*m).clone(), false),
+                    Err(_) => (WorkerSnapshot::default(), true),
+                };
+                let health = w.health();
+                snap.healthy = health == Health::Healthy && !poisoned;
+                snap.state =
+                    if poisoned { Health::Dead.name().into() } else { health.name().into() };
+                snap.restarts = w.restarts.load(Ordering::Relaxed);
+                // Router-level counters mirrored into the scheduler snapshot
+                // so one metrics object tells the whole fault story:
+                // restarts are per-worker, the shed total is router-global.
+                snap.sched.worker_restarts = snap.restarts;
+                snap.sched.requests_shed = shed_total;
+                snap
+            })
             .collect()
     }
 
     /// JSON metrics export: one object per worker (scheduler counters,
-    /// queue-latency / time-to-first-token / inter-token-latency summaries)
-    /// plus router-level gauges. Served over the wire protocol via a
-    /// `{"metrics": true}` control line.
+    /// queue-latency / time-to-first-token / inter-token-latency summaries,
+    /// health state, restarts) plus router-level gauges and fault totals.
+    /// Served over the wire protocol via a `{"metrics": true}` control line.
     pub fn metrics_json(&self) -> Json {
         Json::obj(vec![
             ("workers", Json::arr(self.snapshots().iter().map(|s| s.to_json()))),
             ("inflight", Json::num(self.inflight() as f64)),
             ("n_workers", Json::num(self.n_workers() as f64)),
+            ("requests_shed", Json::num(self.requests_shed() as f64)),
+            ("worker_restarts", Json::num(self.worker_restarts() as f64)),
         ])
     }
 }
 
-/// In-flight bookkeeping for one submitted job: where to send the output and
-/// the caller's original request id (ids are rewritten to worker-local
-/// tickets while inside the engine).
-struct Pending {
-    reply: mpsc::Sender<RequestOutput>,
-    original_id: u64,
-}
-
-/// Worker loop: continuous batching. Jobs are pulled into the engine's
-/// scheduler queue whenever the loop is between decode steps — non-blocking
-/// while the engine has work (so new arrivals join the running batch), and a
-/// blocking `recv` only when idle.
-fn worker_loop(
-    mut engine: Engine,
-    rx: mpsc::Receiver<Job>,
-    inflight: Arc<AtomicUsize>,
-    metrics: Arc<Mutex<WorkerSnapshot>>,
-) {
-    let mut pending: HashMap<u64, Pending> = HashMap::new();
-    let mut ticket: u64 = 0;
-    loop {
-        // Ingest: block only when idle; otherwise take whatever is queued.
-        let was_idle = !engine.has_work();
-        if was_idle && pending.is_empty() {
-            match rx.recv() {
-                Ok(job) => ingest(&mut engine, job, &mut pending, &mut ticket, &inflight),
-                Err(_) => return, // router dropped — shut down
+impl Drop for Router {
+    /// Orderly shutdown: stop the supervisor first (so nothing respawns
+    /// under us), then close every inbox and join the worker threads. A
+    /// worker finishes its in-flight engine work — answering every reply —
+    /// before it observes the closed queue and exits.
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+        for w in &self.workers {
+            w.queue.close();
+        }
+        for w in &self.workers {
+            if let Some(h) = w.thread_take() {
+                let _ = h.join();
             }
         }
-        while let Ok(job) = rx.try_recv() {
-            ingest(&mut engine, job, &mut pending, &mut ticket, &inflight);
+    }
+}
+
+/// Worker loop: continuous batching with liveness. Jobs are pulled into the
+/// engine's scheduler queue whenever the loop is between decode steps —
+/// bounded-blocking while idle (so the heartbeat keeps publishing) and
+/// non-blocking while the engine has work (so new arrivals join the running
+/// batch). Returns when the inbox is closed and drained (router shutdown);
+/// a panic anywhere in here trips the `LivenessGuard` and hands recovery to
+/// the supervisor.
+pub(crate) fn worker_loop(mut engine: Engine, w: Arc<WorkerShared>, start: Instant) {
+    loop {
+        w.beat(start);
+        // Ingest: bounded block only when idle; otherwise take what's queued.
+        let was_idle = !engine.has_work();
+        if was_idle && w.pending_is_empty() {
+            match w.queue.pop_timeout(HEARTBEAT) {
+                Pop::Job(job) => ingest(&mut engine, job, &w),
+                Pop::Empty => continue, // idle heartbeat tick
+                Pop::Closed => return,  // shutdown
+            }
+        }
+        loop {
+            match w.queue.try_pop() {
+                Pop::Job(job) => ingest(&mut engine, job, &w),
+                Pop::Empty | Pop::Closed => break,
+            }
         }
 
         // Batch forming: when work just arrived at an idle engine and the
@@ -264,16 +435,16 @@ fn worker_loop(
                 if now >= deadline {
                     break;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(job) => ingest(&mut engine, job, &mut pending, &mut ticket, &inflight),
-                    Err(_) => break, // timeout or disconnect: step what we have
+                match w.queue.pop_timeout(deadline - now) {
+                    Pop::Job(job) => ingest(&mut engine, job, &w),
+                    Pop::Empty | Pop::Closed => break, // step what we have
                 }
             }
         }
 
         // One decode step; completed requests are answered immediately.
-        // (step() resolves decode faults internally by failing requests in
-        // place — the Err arm is defensive, for future fatal error sources.)
+        // (step() resolves decode faults internally — retry or WorkerError
+        // retire — so the Err arm is defensive, for fatal error sources.)
         let outputs = match engine.step() {
             Ok(outs) => outs,
             Err(e) => {
@@ -284,57 +455,72 @@ fn worker_loop(
         // Snapshot counters + latency summaries for the router. Summary
         // re-sorts a histogram only when it gained samples since the last
         // call, and samples are capped engine-side, so this stays cheap
-        // relative to a decode step.
+        // relative to a decode step. Health/restart fields are stamped by
+        // `Router::snapshots` at read time.
         {
             let sched = engine.sched_metrics().clone();
             let queue_latency = engine.queue_latency().summary();
             let ttft = engine.ttft_latency().summary();
             let itl = engine.itl_latency().summary();
-            if let Ok(mut m) = metrics.lock() {
-                *m = WorkerSnapshot { sched, queue_latency, ttft, itl };
+            if let Ok(mut m) = w.metrics.lock() {
+                *m = WorkerSnapshot { sched, queue_latency, ttft, itl, ..Default::default() };
             }
         }
         for mut out in outputs {
-            if let Some(p) = pending.remove(&out.id) {
+            if let Some(p) = w.pending_remove(out.id) {
                 out.id = p.original_id;
                 let _ = p.reply.send(out);
-                inflight.fetch_sub(1, Ordering::Relaxed);
+                w.inflight.fetch_sub(1, Ordering::Relaxed);
             }
         }
 
         // Defensive: an idle engine with pending entries means outputs were
-        // lost (engine invariant violated). Drop the reply senders so the
-        // callers error out instead of hanging, and avoid a busy spin here.
-        if !engine.has_work() && !pending.is_empty() {
-            eprintln!("worker: {} request(s) vanished without output", pending.len());
-            for _ in pending.drain() {
-                inflight.fetch_sub(1, Ordering::Relaxed);
+        // lost (engine invariant violated). Answer the stragglers with
+        // WorkerError terminals so the callers error out instead of hanging,
+        // and avoid a busy spin here.
+        if !engine.has_work() && !w.pending_is_empty() {
+            let lost = w.pending_drain();
+            eprintln!("worker: {} request(s) vanished without output", lost.len());
+            for p in lost {
+                let out = supervisor::worker_error_output(p.original_id);
+                super::lifecycle::emit_terminal(&p.events, &out);
+                let _ = p.reply.send(out);
+                w.inflight.fetch_sub(1, Ordering::Relaxed);
             }
         }
     }
 }
 
-fn ingest(
-    engine: &mut Engine,
-    job: Job,
-    pending: &mut HashMap<u64, Pending>,
-    ticket: &mut u64,
-    inflight: &Arc<AtomicUsize>,
-) {
-    let Job { mut request, reply } = job;
-    let original_id = request.id;
-    let id = *ticket;
-    *ticket += 1;
-    request.id = id;
-    match engine.submit(request) {
-        Ok(()) => {
-            pending.insert(id, Pending { reply, original_id });
+fn ingest(engine: &mut Engine, job: Job, w: &WorkerShared) {
+    match job {
+        Job::Poison => {
+            // Chaos hook (`Router::kill_worker`): die the way a real crash
+            // does — mid-critical-section. The metrics mutex stays poisoned
+            // until the supervisor respawns this worker, which is exactly
+            // the window `Router::snapshots` must survive.
+            let _guard = w.metrics.lock();
+            panic!("injected worker death (poison job)");
         }
-        Err(mut out) => {
-            // Queue backpressure: answer the rejection immediately.
-            out.id = original_id;
-            let _ = reply.send(out);
-            inflight.fetch_sub(1, Ordering::Relaxed);
+        Job::Run { mut request, reply } => {
+            let original_id = request.id;
+            // Keep a sink clone outside the engine: if the worker dies with
+            // this request in flight, the supervisor still has a path to the
+            // subscriber for the synthesized WorkerError terminal.
+            let events = request.events.clone();
+            let id = w.ticket.fetch_add(1, Ordering::Relaxed);
+            request.id = id;
+            match engine.submit(request) {
+                Ok(()) => {
+                    w.pending_insert(id, PendingJob { reply, original_id, events });
+                }
+                Err(mut out) => {
+                    // Queue backpressure: answer the rejection immediately
+                    // (the engine already emitted the Error terminal event).
+                    out.id = original_id;
+                    let _ = reply.send(out);
+                    w.inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
         }
     }
 }

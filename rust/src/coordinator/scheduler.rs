@@ -57,6 +57,15 @@
 //!   suspend can observe them. Acceptance statistics land in
 //!   `SchedulerMetrics::{spec_steps, spec_drafted, spec_accepted,
 //!   spec_rollback_tokens}`.
+//! * **Fault containment** (`Engine::contain_step_error`): a backend error
+//!   during the decode phase re-enters this state machine instead of
+//!   escaping it — every occupied slot is suspended (or requeued, along
+//!   the restart path above) while its per-request retry budget
+//!   (`ServeConfig::max_retries`) lasts, and retires with
+//!   `FinishReason::WorkerError` once it is spent. The queue and the
+//!   suspended set are untouched, so one faulted batch never poisons
+//!   waiting work; `SchedulerMetrics::{worker_errors, requests_retried,
+//!   faults_injected}` count the damage.
 //!
 //! The scheduler owns no model state; `Active` carries everything a running
 //! sequence needs (its per-sequence cache, budget plan, and RAII page

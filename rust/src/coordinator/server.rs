@@ -17,7 +17,15 @@
 //!
 //! Control lines:
 //!   -> {"metrics": true}
-//!   <- {"workers": [{scheduler, queue_latency_s, ttft_s, itl_s}, ...], ...}
+//!   <- {"workers": [{scheduler, queue_latency_s, ttft_s, itl_s,
+//!                    healthy, state, restarts}, ...], ...}
+//!
+//! Load shedding: when the router's admission control rejects a request
+//! (`RouteError::Overloaded`), the connection gets a structured in-order
+//! line — {"id": N, "error": "overloaded", "retry_after_ms": M} — instead
+//! of a generic error, so clients can back off and retry. A request that
+//! dies with its worker (retry budget spent) is answered with a normal
+//! summary line carrying "finish": "worker_error".
 //!
 //! Every parsed line is submitted to the router *immediately* (not after the
 //! previous response), so pipelined requests stream into a worker's
@@ -52,6 +60,7 @@ use crate::util::Json;
 use super::lifecycle::{RequestEvent, RequestHandle};
 use super::request::{FinishReason, Request, RequestOutput};
 use super::router::Router;
+use super::supervisor::RouteError;
 
 fn finish_str(f: FinishReason) -> &'static str {
     match f {
@@ -61,6 +70,7 @@ fn finish_str(f: FinishReason) -> &'static str {
         FinishReason::Rejected => "rejected",
         FinishReason::Failed => "failed",
         FinishReason::Cancelled => "cancelled",
+        FinishReason::WorkerError => "worker_error",
         FinishReason::DeadlineExceeded => "deadline",
     }
 }
@@ -123,6 +133,22 @@ pub fn encode_token_line(id: u64, token: i32, pos: usize) -> String {
     .to_string()
 }
 
+/// Encode a routing-layer rejection. Shedding gets a structured line with a
+/// Retry-After hint (`{"id", "error": "overloaded", "retry_after_ms": N}`)
+/// so well-behaved clients back off instead of hammering a saturated
+/// router; other routing errors carry their display string.
+pub fn encode_route_error(id: u64, e: RouteError) -> String {
+    let mut fields = vec![("id", Json::num(id as f64))];
+    match e {
+        RouteError::Overloaded { retry_after_ms } => {
+            fields.push(("error", Json::str("overloaded")));
+            fields.push(("retry_after_ms", Json::num(retry_after_ms as f64)));
+        }
+        other => fields.push(("error", Json::str(other.to_string()))),
+    }
+    Json::obj(fields).to_string()
+}
+
 /// Serve until the listener errors. Each connection may pipeline requests.
 pub fn serve(listener: TcpListener, router: Arc<Router>) -> Result<()> {
     loop {
@@ -164,10 +190,13 @@ fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
             continue;
         }
         let item = match parse_wire_request(&line) {
-            Ok(wire) => match router.submit_stream(wire.request) {
-                Ok(handle) => PendingLine::Request { handle, stream: wire.stream },
-                Err(e) => PendingLine::Error(e.to_string()),
-            },
+            Ok(wire) => {
+                let id = wire.request.id;
+                match router.submit_stream(wire.request) {
+                    Ok(handle) => PendingLine::Request { handle, stream: wire.stream },
+                    Err(e) => PendingLine::Control(encode_route_error(id, e)),
+                }
+            }
             Err(e) => PendingLine::Error(e.to_string()),
         };
         if tx.send(item).is_err() {
@@ -224,8 +253,20 @@ fn forward_request(writer: &mut TcpStream, handle: &RequestHandle, stream: bool)
                 }
             }
             Ok(ev) if ev.is_terminal() => {
-                let out = ev.into_output().expect("terminal event carries the output");
-                return writeln!(writer, "{}", encode_wire_response(&out)).is_ok();
+                return match ev.into_output() {
+                    Some(out) => writeln!(writer, "{}", encode_wire_response(&out)).is_ok(),
+                    // Defensive: a terminal event always carries its output
+                    // today. If that invariant ever breaks, answer the
+                    // connection with an error line instead of panicking the
+                    // writer thread (which would strand every request queued
+                    // behind this one on the connection).
+                    None => {
+                        let line =
+                            Json::obj(vec![("error", Json::str("terminal event without output"))])
+                                .to_string();
+                        writeln!(writer, "{line}").is_ok()
+                    }
+                };
             }
             Ok(_) => {} // Started / Suspended / Resumed / unstreamed Token
             Err(_) => {
@@ -313,6 +354,21 @@ mod tests {
     fn finish_strings_cover_lifecycle_reasons() {
         assert_eq!(finish_str(FinishReason::Cancelled), "cancelled");
         assert_eq!(finish_str(FinishReason::DeadlineExceeded), "deadline");
+        assert_eq!(finish_str(FinishReason::WorkerError), "worker_error");
+    }
+
+    #[test]
+    fn route_error_lines_encode_structured_overload() {
+        let line = encode_route_error(9, RouteError::Overloaded { retry_after_ms: 250 });
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(j.get("retry_after_ms").unwrap().as_usize(), Some(250));
+
+        let line = encode_route_error(3, RouteError::NoHealthyWorker);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("no healthy worker"));
+        assert!(j.get("retry_after_ms").is_none());
     }
 
     #[test]

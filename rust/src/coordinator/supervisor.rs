@@ -1,0 +1,636 @@
+//! Worker supervision: health tracking, liveness, bounded respawn, and the
+//! shared primitives the router and its worker threads communicate through.
+//!
+//! Failure domains, smallest to largest:
+//!
+//! ```text
+//!   backend step error      contained by the ENGINE (engine.rs): affected
+//!        |                  sequences re-queue (bounded per-request retry
+//!        v                  budget) or retire with FinishReason::WorkerError
+//!   worker THREAD death     contained by the SUPERVISOR (this module): the
+//!        |                  liveness guard marks the worker Dead; in-flight
+//!        v                  requests get synthesized WorkerError terminals,
+//!                           queued-but-unstarted jobs are re-routed, and the
+//!                           worker is respawned (bounded, with backoff)
+//!   router overload         contained at ADMISSION (router.rs): submits are
+//!                           shed with RouteError::Overloaded + a Retry-After
+//!                           hint before they consume worker resources
+//! ```
+//!
+//! The load-bearing design choice: a worker's job queue is NOT an
+//! `mpsc::channel` into the worker thread. A channel's receiver dies with
+//! the thread, losing every queued job. Instead each worker owns a
+//! [`WorkerQueue`] (mutex + condvar deque) that survives its consumer: when
+//! the thread dies, the supervisor drains the queue intact and re-routes the
+//! jobs — only requests *inside* the dead engine are lost, and those are
+//! answered with synthesized [`FinishReason::WorkerError`] terminals so no
+//! caller blocks forever (std threads cannot be killed or reaped mid-call;
+//! death is observed via the [`LivenessGuard`] drop during unwind).
+//!
+//! Supervision loop (one thread per router, ~10ms tick):
+//!
+//! ```text
+//!   Healthy --stale heartbeat--> Draining --fresh heartbeat--> Healthy
+//!      |                            |
+//!      +---- liveness guard drop ---+--> Dead --respawn ok--> Healthy
+//!                                         |  (restarts < max_worker_restarts,
+//!                                         |   backoff 10ms * 2^attempt)
+//!                                         +--budget spent--> stays Dead
+//!                                            (queue keeps being drained so
+//!                                             late-routed jobs still fail
+//!                                             fast instead of stranding)
+//! ```
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ServeConfig;
+use crate::squeeze::BudgetPlan;
+
+use super::engine::Engine;
+use super::lifecycle::{emit_terminal, CancelToken, EventSink};
+use super::request::{FinishReason, Request, RequestOutput, RequestTiming};
+use super::router::{worker_loop, WorkerSnapshot};
+
+/// Supervisor poll cadence.
+const TICK: Duration = Duration::from_millis(10);
+/// A worker that has not heartbeat for this long is considered wedged and
+/// demoted to `Draining` (de-prioritized for new work, still serving). The
+/// bound is deliberately generous: a legitimate decode step under an
+/// injected latency spike must not trip it.
+const STALE_MS: u64 = 1_000;
+
+/// Routing-layer errors surfaced to `Router::submit*` callers. Implements
+/// `std::error::Error`, so `?` into `anyhow::Result` works at every existing
+/// call site; the server matches on it directly to render wire responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// Admission shed the request before it reached a worker (queue depth or
+    /// projected queue latency over the configured bound). `retry_after_ms`
+    /// is the server's backoff hint, derived from the picked worker's
+    /// observed queue wait.
+    Overloaded { retry_after_ms: u64 },
+    /// Every worker is dead (restart budgets exhausted) — nothing can accept
+    /// work.
+    NoHealthyWorker,
+    /// The worker's queue closed under the submit (router shutdown), or the
+    /// reply channel died without an output.
+    WorkerClosed,
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded: retry after {retry_after_ms}ms")
+            }
+            RouteError::NoHealthyWorker => write!(f, "no healthy worker"),
+            RouteError::WorkerClosed => write!(f, "worker closed"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Worker health as seen by the router and supervisor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Heartbeating and accepting work.
+    Healthy,
+    /// Heartbeat is stale (possibly wedged in a long step): de-prioritized
+    /// by `pick()`, promoted back on the next fresh beat.
+    Draining,
+    /// The thread is gone (liveness guard dropped during unwind). The
+    /// supervisor owns recovery.
+    Dead,
+}
+
+impl Health {
+    fn from_u8(v: u8) -> Health {
+        match v {
+            0 => Health::Healthy,
+            1 => Health::Draining,
+            _ => Health::Dead,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            Health::Healthy => 0,
+            Health::Draining => 1,
+            Health::Dead => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Draining => "draining",
+            Health::Dead => "dead",
+        }
+    }
+}
+
+/// One unit of work delivered to a worker thread.
+pub(crate) enum Job {
+    /// A routed request plus the channel its output is answered on.
+    Run { request: Request, reply: mpsc::Sender<RequestOutput> },
+    /// Chaos hook (`Router::kill_worker`): the worker panics while holding
+    /// its metrics lock — the closest std-thread analog of a hard crash
+    /// (dead thread + poisoned mutex), exercising the full death protocol.
+    Poison,
+}
+
+/// In-flight bookkeeping for one job that entered a worker's engine: where
+/// to answer, the caller's original id (ids are rewritten to worker-local
+/// tickets in flight), and a clone of the lifecycle sink so the supervisor
+/// can synthesize the terminal event if the engine dies with the request
+/// inside it.
+pub(crate) struct PendingJob {
+    pub reply: mpsc::Sender<RequestOutput>,
+    pub original_id: u64,
+    pub events: Option<EventSink>,
+}
+
+/// Result of a queue pop.
+pub(crate) enum Pop {
+    Job(Job),
+    /// Nothing available within the wait budget.
+    Empty,
+    /// Queue closed and fully drained — the worker should exit.
+    Closed,
+}
+
+/// A worker's inbox: a mutex+condvar deque that outlives the worker thread
+/// (unlike an mpsc receiver), so queued-but-unstarted jobs survive a crash
+/// and can be re-routed by the supervisor.
+pub(crate) struct WorkerQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+impl WorkerQueue {
+    fn new() -> Self {
+        Self {
+            inner: Mutex::new(QueueInner { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner> {
+        // The queue lock is never held across a panic site, but recover
+        // defensively: a poisoned inbox must not take the router down.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Enqueue; `Err` returns the job when the queue is closed (shutdown).
+    pub fn push(&self, job: Job) -> std::result::Result<(), Job> {
+        let mut g = self.lock();
+        if g.closed {
+            return Err(job);
+        }
+        g.jobs.push_back(job);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block up to `wait` for a job. `Closed` only after the queue is both
+    /// closed and empty, so shutdown never drops accepted work.
+    pub fn pop_timeout(&self, wait: Duration) -> Pop {
+        let deadline = Instant::now() + wait;
+        let mut g = self.lock();
+        loop {
+            if let Some(job) = g.jobs.pop_front() {
+                return Pop::Job(job);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Empty;
+            }
+            g = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Pop {
+        let mut g = self.lock();
+        match g.jobs.pop_front() {
+            Some(job) => Pop::Job(job),
+            None if g.closed => Pop::Closed,
+            None => Pop::Empty,
+        }
+    }
+
+    /// Close the queue and wake every waiter (the worker exits once drained).
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Take every queued job (supervisor death protocol).
+    pub fn drain(&self) -> Vec<Job> {
+        self.lock().jobs.drain(..).collect()
+    }
+}
+
+/// State shared between the router, one worker thread, and the supervisor.
+/// Everything a worker owns that must survive its death lives here.
+pub(crate) struct WorkerShared {
+    pub queue: WorkerQueue,
+    /// Jobs inside the engine, keyed by worker-local ticket.
+    pending: Mutex<HashMap<u64, PendingJob>>,
+    pub inflight: AtomicUsize,
+    /// Snapshot of the worker's scheduler metrics + latency summaries,
+    /// refreshed after every step (engines live on their worker threads;
+    /// this is the only window into their counters). Deliberately poisoned
+    /// by `Job::Poison` — `Router::snapshots` must survive that.
+    pub metrics: Mutex<WorkerSnapshot>,
+    health: AtomicU8,
+    /// Milliseconds since router start at the worker's last loop iteration.
+    last_beat_ms: AtomicU64,
+    /// Respawn attempts consumed (successful or not); bounded by
+    /// `ServeConfig::max_worker_restarts`.
+    pub restarts: AtomicU64,
+    /// Worker-local ticket counter; atomic so it stays monotonic across
+    /// respawns (a stale in-flight ticket must never collide with a new one).
+    pub ticket: AtomicU64,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl WorkerShared {
+    pub fn new(start: Instant) -> Self {
+        let s = Self {
+            queue: WorkerQueue::new(),
+            pending: Mutex::new(HashMap::new()),
+            inflight: AtomicUsize::new(0),
+            metrics: Mutex::new(WorkerSnapshot::default()),
+            health: AtomicU8::new(Health::Healthy.as_u8()),
+            last_beat_ms: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            ticket: AtomicU64::new(0),
+            thread: Mutex::new(None),
+        };
+        s.beat(start);
+        s
+    }
+
+    pub fn health(&self) -> Health {
+        Health::from_u8(self.health.load(Ordering::Acquire))
+    }
+
+    pub fn set_health(&self, h: Health) {
+        self.health.store(h.as_u8(), Ordering::Release);
+    }
+
+    /// Record liveness (called once per worker loop iteration).
+    pub fn beat(&self, start: Instant) {
+        self.last_beat_ms.store(start.elapsed().as_millis() as u64, Ordering::Release);
+    }
+
+    fn ms_since_beat(&self, start: Instant) -> u64 {
+        let now = start.elapsed().as_millis() as u64;
+        now.saturating_sub(self.last_beat_ms.load(Ordering::Acquire))
+    }
+
+    fn pending_lock(&self) -> std::sync::MutexGuard<'_, HashMap<u64, PendingJob>> {
+        self.pending.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn pending_is_empty(&self) -> bool {
+        self.pending_lock().is_empty()
+    }
+
+    pub fn pending_insert(&self, ticket: u64, p: PendingJob) {
+        self.pending_lock().insert(ticket, p);
+    }
+
+    pub fn pending_remove(&self, ticket: u64) -> Option<PendingJob> {
+        self.pending_lock().remove(&ticket)
+    }
+
+    pub fn pending_drain(&self) -> Vec<PendingJob> {
+        self.pending_lock().drain().map(|(_, p)| p).collect()
+    }
+
+    pub fn thread_take(&self) -> Option<JoinHandle<()>> {
+        self.thread.lock().unwrap_or_else(|p| p.into_inner()).take()
+    }
+
+    fn thread_set(&self, h: JoinHandle<()>) {
+        *self.thread.lock().unwrap_or_else(|p| p.into_inner()) = Some(h);
+    }
+}
+
+/// Marks the worker `Dead` if its thread unwinds (panic) or returns without
+/// disarming — the supervisor's only death signal, since std threads cannot
+/// be reaped from outside.
+pub(crate) struct LivenessGuard {
+    shared: Arc<WorkerShared>,
+    armed: bool,
+}
+
+impl LivenessGuard {
+    pub fn new(shared: Arc<WorkerShared>) -> Self {
+        Self { shared, armed: true }
+    }
+
+    /// Normal exit (queue closed): no death protocol.
+    pub fn disarm(&mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for LivenessGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.shared.set_health(Health::Dead);
+        }
+    }
+}
+
+/// The caller's end of `Router::submit_async`: the reply receiver plus the
+/// request's cancel token. Dropping the handle cancels the request — an
+/// abandoned caller must not keep a worker decoding to `max_new_tokens`
+/// (after a received output the cancel is a no-op: the request already
+/// retired). This is how the worker "notices" a dropped receiver: std mpsc
+/// senders cannot probe for a live peer, so abandonment is signaled from the
+/// caller side through the lifecycle `CancelToken` the engine already honors
+/// at step boundaries.
+pub struct ReplyHandle {
+    rx: mpsc::Receiver<RequestOutput>,
+    cancel: Arc<CancelToken>,
+}
+
+impl ReplyHandle {
+    pub(crate) fn new(rx: mpsc::Receiver<RequestOutput>, cancel: Arc<CancelToken>) -> Self {
+        Self { rx, cancel }
+    }
+
+    /// Block for the output. `Err` means the stream died without an answer
+    /// (router shutdown mid-request).
+    pub fn recv(&self) -> std::result::Result<RequestOutput, mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<RequestOutput, mpsc::TryRecvError> {
+        self.rx.try_recv()
+    }
+
+    /// Cancel the request explicitly (also implied by drop).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+}
+
+impl Drop for ReplyHandle {
+    fn drop(&mut self) {
+        self.cancel.cancel();
+    }
+}
+
+/// Output synthesized for a request lost inside a dead worker: no engine
+/// state survives, so the generation is empty and timings zero.
+pub(crate) fn worker_error_output(id: u64) -> RequestOutput {
+    RequestOutput {
+        id,
+        generated: Vec::new(),
+        finish: FinishReason::WorkerError,
+        timing: RequestTiming::default(),
+        plan: BudgetPlan::uniform(1, 0),
+        peak_kv_bytes: 0,
+        final_kv_tokens: 0,
+    }
+}
+
+/// Answer a job that can no longer run: reply + synthesized terminal event.
+fn fail_job(request: &Request, reply: &mpsc::Sender<RequestOutput>) {
+    let out = worker_error_output(request.id);
+    emit_terminal(&request.events, &out);
+    let _ = reply.send(out);
+}
+
+/// Spawn (or respawn) worker `idx`'s thread. The engine is constructed
+/// inside the thread (the PJRT client holds `Rc` internals and is not
+/// `Send`); construction errors are reported back over a readiness channel
+/// before this returns. On success the worker is marked `Healthy` with a
+/// fresh heartbeat and any mutex poison from a previous incarnation is
+/// cleared.
+pub(crate) fn spawn_worker(
+    idx: usize,
+    shared: Arc<WorkerShared>,
+    cfg: ServeConfig,
+    start: Instant,
+) -> Result<()> {
+    if cfg.faults.spawn_fail_worker == Some(idx) {
+        return Err(anyhow!("worker {idx} failed to start: injected spawn failure"));
+    }
+    shared.metrics.clear_poison();
+    shared.pending.clear_poison();
+    let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
+    let shared2 = shared.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("sa-worker-{idx}"))
+        .spawn(move || match Engine::new(cfg) {
+            Ok(engine) => {
+                let _ = ready_tx.send(Ok(()));
+                let mut guard = LivenessGuard::new(shared2.clone());
+                worker_loop(engine, shared2, start);
+                guard.disarm();
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("{e:#}")));
+            }
+        })
+        .map_err(|e| anyhow!("worker {idx} thread spawn failed: {e}"))?;
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("worker {idx} died during startup"))?
+        .map_err(|e| anyhow!("worker {idx} failed to start: {e}"))?;
+    shared.beat(start);
+    shared.set_health(Health::Healthy);
+    shared.thread_set(handle);
+    Ok(())
+}
+
+/// Everything the supervisor thread needs.
+pub(crate) struct SupervisorCtx {
+    pub workers: Vec<Arc<WorkerShared>>,
+    pub cfg: ServeConfig,
+    pub start: Instant,
+    pub shutdown: Arc<AtomicBool>,
+}
+
+/// Supervisor loop: poll worker health every tick until router shutdown.
+pub(crate) fn supervise(ctx: SupervisorCtx) {
+    while !ctx.shutdown.load(Ordering::Acquire) {
+        std::thread::sleep(TICK);
+        for (i, w) in ctx.workers.iter().enumerate() {
+            match w.health() {
+                Health::Dead => handle_death(i, w, &ctx),
+                Health::Healthy if w.ms_since_beat(ctx.start) > STALE_MS => {
+                    w.set_health(Health::Draining);
+                }
+                Health::Draining if w.ms_since_beat(ctx.start) <= STALE_MS => {
+                    w.set_health(Health::Healthy);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// The death protocol. Idempotent: a worker whose restart budget is spent
+/// stays `Dead` and re-enters here every tick, which keeps draining any job
+/// a racing submit managed to enqueue — late work fails fast with a
+/// `WorkerError` terminal instead of stranding in a queue nobody reads.
+fn handle_death(idx: usize, w: &Arc<WorkerShared>, ctx: &SupervisorCtx) {
+    // Reap the dead thread so the slot can be respawned.
+    if let Some(h) = w.thread_take() {
+        let _ = h.join(); // Err carries the panic payload; already reported
+    }
+
+    // 1. Fail in-flight: requests inside the engine died with it. Each gets
+    //    a synthesized WorkerError terminal (event + reply), so stream
+    //    subscribers and blocked submit() callers both resolve.
+    let lost = w.pending_drain();
+    if !lost.is_empty() {
+        eprintln!("worker {idx}: died with {} request(s) in flight", lost.len());
+    }
+    for p in lost {
+        let out = worker_error_output(p.original_id);
+        emit_terminal(&p.events, &out);
+        let _ = p.reply.send(out);
+        w.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    // 2. Queued-but-unstarted jobs survive in the WorkerQueue; pull them out
+    //    for re-routing after the respawn decision.
+    let stranded = w.queue.drain();
+    for job in &stranded {
+        if matches!(job, Job::Run { .. }) {
+            w.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    // 3. Bounded respawn with exponential backoff.
+    let attempt = w.restarts.load(Ordering::Relaxed);
+    let mut respawned = false;
+    if attempt < ctx.cfg.max_worker_restarts && !ctx.shutdown.load(Ordering::Acquire) {
+        w.restarts.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis((10u64 << attempt.min(6)).min(500)));
+        match spawn_worker(idx, w.clone(), ctx.cfg.clone(), ctx.start) {
+            Ok(()) => respawned = true,
+            Err(e) => eprintln!("worker {idx}: respawn failed: {e:#}"),
+        }
+    }
+
+    // 4. Re-route the stranded jobs: prefer the respawned worker (keeps
+    //    least-loaded accounting honest), else any healthy peer, else fail
+    //    them so no caller hangs.
+    for job in stranded {
+        let Job::Run { request, reply } = job else { continue };
+        let target = if respawned {
+            Some(w)
+        } else {
+            ctx.workers.iter().find(|p| p.health() == Health::Healthy)
+        };
+        match target {
+            Some(t) => {
+                t.inflight.fetch_add(1, Ordering::Relaxed);
+                if let Err(Job::Run { request, reply }) =
+                    t.queue.push(Job::Run { request, reply })
+                {
+                    t.inflight.fetch_sub(1, Ordering::Relaxed);
+                    fail_job(&request, &reply);
+                }
+            }
+            None => fail_job(&request, &reply),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_survives_close_with_backlog() {
+        let q = WorkerQueue::new();
+        let (tx, _rx) = mpsc::channel();
+        q.push(Job::Run { request: Request::new(1, vec![1], 4), reply: tx.clone() }).unwrap();
+        q.close();
+        // Closed queue rejects new work but still yields the backlog.
+        assert!(q.push(Job::Poison).is_err());
+        assert!(matches!(q.try_pop(), Pop::Job(_)));
+        assert!(matches!(q.try_pop(), Pop::Closed));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
+    }
+
+    #[test]
+    fn pop_timeout_returns_empty_without_work() {
+        let q = WorkerQueue::new();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Empty));
+        assert!(matches!(q.try_pop(), Pop::Empty));
+    }
+
+    #[test]
+    fn liveness_guard_marks_dead_only_when_armed() {
+        let start = Instant::now();
+        let w = Arc::new(WorkerShared::new(start));
+        {
+            let mut g = LivenessGuard::new(w.clone());
+            g.disarm();
+        }
+        assert_eq!(w.health(), Health::Healthy);
+        {
+            let _g = LivenessGuard::new(w.clone());
+        }
+        assert_eq!(w.health(), Health::Dead);
+    }
+
+    #[test]
+    fn route_error_displays_and_errors() {
+        let e = RouteError::Overloaded { retry_after_ms: 120 };
+        assert!(e.to_string().contains("120"));
+        let boxed: Box<dyn std::error::Error> = Box::new(e);
+        assert!(boxed.to_string().contains("overloaded"));
+        assert_eq!(RouteError::NoHealthyWorker.to_string(), "no healthy worker");
+    }
+
+    #[test]
+    fn reply_handle_drop_fires_cancel() {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(CancelToken::new());
+        let h = ReplyHandle::new(rx, cancel.clone());
+        assert!(!cancel.is_cancelled());
+        drop(h);
+        assert!(cancel.is_cancelled());
+        drop(tx);
+    }
+
+    #[test]
+    fn worker_error_output_preserves_id() {
+        let out = worker_error_output(42);
+        assert_eq!(out.id, 42);
+        assert_eq!(out.finish, FinishReason::WorkerError);
+        assert!(out.generated.is_empty());
+    }
+}

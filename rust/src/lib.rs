@@ -132,6 +132,52 @@
 //! are exported through `Router::metrics_json` (served over the wire via a
 //! `{"metrics": true}` control line).
 //!
+//! ## Fault tolerance (supervision, bounded retry, load shedding)
+//!
+//! Serving survives its own failures; each fault is contained at the
+//! smallest layer that can handle it, and the contract is uniform: *every
+//! request gets exactly one terminal event, and pool bytes return to
+//! baseline after drain*.
+//!
+//! ```text
+//!    TCP client ──► server ──► router admission ──► worker ──► engine
+//!                                   │                 │           │
+//!        {"error":"overloaded",     │ queue depth /   │ thread    │ backend
+//!         "retry_after_ms": N} ◄────┘ latency bound   │ death     │ step error
+//!                                                     │           │
+//!                            supervisor: synthesize   │           │ retry (≤
+//!                            WorkerError terminals ◄──┘           │ max_retries)
+//!                            for in-flight, re-route              │ or retire
+//!                            queued jobs, bounded                 ▼ with
+//!                            respawn w/ backoff            WorkerError
+//! ```
+//!
+//! * **Engine level** ([`coordinator::engine`]): a backend error during a
+//!   decode step never poisons the engine. Affected sequences are suspended
+//!   (or requeued) and retried up to `ServeConfig::max_retries` times; a
+//!   request whose budget is spent retires with
+//!   `FinishReason::WorkerError`. RAII page-table ownership guarantees the
+//!   failed step's reservations are released.
+//! * **Worker level** ([`coordinator::supervisor`]): worker threads
+//!   heartbeat; a panic trips a liveness guard and the supervisor thread
+//!   fails the dead worker's in-flight requests with synthesized
+//!   `WorkerError` terminals (no subscriber hangs), re-routes its
+//!   queued-but-unstarted jobs, and respawns the engine with exponential
+//!   backoff, bounded by `ServeConfig::max_worker_restarts`.
+//! * **Router level** ([`coordinator::router`]): admission control sheds
+//!   load with `RouteError::Overloaded` (+ a `retry_after_ms` hint derived
+//!   from observed queue wait) when `shed_queue_depth` or
+//!   `shed_queue_latency_ms` bounds are exceeded — rejected before any
+//!   worker resource is consumed.
+//!
+//! Deterministic fault *injection* drives the chaos suite: `sim://` specs
+//! accept a seeded [`config::FaultConfig`] (`--fault-step-error-rate`,
+//! `--fault-latency-spike`, `--fault-oom-at`) whose decisions are a pure
+//! function of (seed, call index), so every chaos run replays exactly.
+//! `worker_restarts`, `worker_errors`, `requests_retried`, `requests_shed`,
+//! and `faults_injected` export through [`metrics::SchedulerMetrics`] and
+//! `Router::metrics_json`.
+//!
 //! Quickstart (runs on the simulated backend — no artifacts needed):
 //! ```
 //! use squeezeattention::config::ServeConfig;

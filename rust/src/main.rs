@@ -65,6 +65,31 @@ ENGINE FLAGS (serve/generate)
                        (a request's own deadline_ms overrides;
                        0 = no deadline)                        [0]
 
+FAULT TOLERANCE (serve/generate; injection is sim:// only)
+  --fault-step-error-rate F
+                       inject backend step errors at rate F,
+                       deterministically from the fault seed    [0]
+  --fault-latency-spike MS
+                       injected latency spike duration; fires
+                       at --fault-latency-spike-rate            [0]
+  --fault-latency-spike-rate F
+                       latency spike rate                       [0]
+  --fault-oom-at N     inject a device-OOM error on exactly the
+                       N-th decode call (0 = off)               [0]
+  --fault-seed N       seed for the fault hash                  [24301]
+  --max-retries N      per-request retry budget for worker
+                       faults; spent budget retires the request
+                       with \"worker_error\"                    [2]
+  --max-worker-restarts N
+                       respawn attempts per worker slot before
+                       the supervisor gives up                  [3]
+  --shed-queue-depth N shed (\"overloaded\" + retry_after_ms)
+                       when a worker's outstanding work reaches
+                       N requests (0 = off)                     [0]
+  --shed-queue-latency-ms N
+                       shed when a worker's observed p95 queue
+                       wait reaches N ms (0 = off)              [0]
+
 WIRE PROTOCOL (serve)
   one JSON object per line; responses in request order per connection.
   -> {\"id\": 1, \"prompt\": [256, 5, 257], \"max_new_tokens\": 32}
@@ -105,6 +130,16 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
     cfg.kv_page_bytes = args.usize("kv-page-bytes", cfg.kv_page_bytes)?;
     cfg.batch_wait_ms = args.u64("batch-wait-ms", cfg.batch_wait_ms)?;
     cfg.request_deadline_ms = args.u64("request-deadline-ms", cfg.request_deadline_ms)?;
+    cfg.faults.step_error_rate = args.f64("fault-step-error-rate", cfg.faults.step_error_rate)?;
+    cfg.faults.latency_spike_ms = args.u64("fault-latency-spike", cfg.faults.latency_spike_ms)?;
+    cfg.faults.latency_spike_rate =
+        args.f64("fault-latency-spike-rate", cfg.faults.latency_spike_rate)?;
+    cfg.faults.oom_at = args.u64("fault-oom-at", cfg.faults.oom_at)?;
+    cfg.faults.seed = args.u64("fault-seed", cfg.faults.seed)?;
+    cfg.max_retries = args.u64("max-retries", cfg.max_retries as u64)? as u32;
+    cfg.max_worker_restarts = args.u64("max-worker-restarts", cfg.max_worker_restarts)?;
+    cfg.shed_queue_depth = args.usize("shed-queue-depth", cfg.shed_queue_depth)?;
+    cfg.shed_queue_latency_ms = args.u64("shed-queue-latency-ms", cfg.shed_queue_latency_ms)?;
     if let Some(k) = args.opt_str("spec-k") {
         let k: usize = k.parse().map_err(|_| anyhow!("--spec-k expects an integer, got {k}"))?;
         cfg = cfg.with_spec_k(k);

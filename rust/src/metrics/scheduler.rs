@@ -122,6 +122,22 @@ pub struct SchedulerMetrics {
     pub scratch_retained_bytes: usize,
     /// Scratch tiers reclaimed by the idle sweep.
     pub scratch_tiers_evicted: u64,
+    /// Backend step errors the engine contained (each affects a whole
+    /// decode batch; the per-sequence consequences show up in
+    /// `requests_retried` / the `WorkerError` retirements).
+    pub worker_errors: u64,
+    /// Sequences re-queued (suspend or restart) after a contained worker
+    /// fault, bounded by the per-request retry budget.
+    pub requests_retried: u64,
+    /// Requests the router rejected with `Overloaded` before they reached
+    /// this engine (stamped by the router into its per-worker snapshot).
+    pub requests_shed: u64,
+    /// Faults the runtime's armed `FaultPlan` actually injected (errors +
+    /// latency spikes); mirrors `Runtime::faults_injected`.
+    pub faults_injected: u64,
+    /// Times the supervisor respawned this worker's engine after a death
+    /// (router-level; an engine never observes its own restart).
+    pub worker_restarts: u64,
 }
 
 impl SchedulerMetrics {
@@ -216,6 +232,11 @@ impl SchedulerMetrics {
             ("gather_incremental_appends", Json::num(self.gather_incremental_appends as f64)),
             ("scratch_retained_bytes", Json::num(self.scratch_retained_bytes as f64)),
             ("scratch_tiers_evicted", Json::num(self.scratch_tiers_evicted as f64)),
+            ("worker_errors", Json::num(self.worker_errors as f64)),
+            ("requests_retried", Json::num(self.requests_retried as f64)),
+            ("requests_shed", Json::num(self.requests_shed as f64)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("worker_restarts", Json::num(self.worker_restarts as f64)),
         ])
     }
 }
@@ -291,6 +312,24 @@ mod tests {
         assert_eq!(j.get("gather_incremental_appends").unwrap().as_usize(), Some(90));
         assert_eq!(j.get("scratch_retained_bytes").unwrap().as_usize(), Some(8192));
         assert_eq!(j.get("scratch_tiers_evicted").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn json_snapshot_exports_fault_counters() {
+        let m = SchedulerMetrics {
+            worker_errors: 2,
+            requests_retried: 3,
+            requests_shed: 4,
+            faults_injected: 5,
+            worker_restarts: 1,
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("worker_errors").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("requests_retried").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("requests_shed").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("faults_injected").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("worker_restarts").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -23,7 +23,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Manifest;
 
-pub use sim::SimModel;
+pub use sim::{FaultDecision, FaultPlan, SimModel};
 pub use tensor::{Tensor, TensorI32};
 
 /// Outputs of one prefill call.
@@ -70,11 +70,21 @@ enum Backend {
     Pjrt(client::PjrtRuntime),
 }
 
+/// Armed fault-injection state: the plan plus the decode-call counter it is
+/// evaluated against and how many faults actually fired.
+#[derive(Debug, Default)]
+struct FaultState {
+    plan: Option<FaultPlan>,
+    calls: u64,
+    injected: u64,
+}
+
 pub struct Runtime {
     pub manifest: Manifest,
     kernel: String,
     backend: Backend,
     stats: Mutex<RuntimeStats>,
+    faults: Mutex<FaultState>,
 }
 
 impl Runtime {
@@ -91,6 +101,7 @@ impl Runtime {
                 kernel: kernel.to_string(),
                 backend: Backend::Sim(model),
                 stats: Mutex::new(RuntimeStats::default()),
+                faults: Mutex::new(FaultState::default()),
             });
         }
         Self::load_disk(artifact_dir, kernel)
@@ -106,6 +117,7 @@ impl Runtime {
             kernel: kernel.to_string(),
             backend: Backend::Pjrt(inner),
             stats: Mutex::new(RuntimeStats::default()),
+            faults: Mutex::new(FaultState::default()),
         })
     }
 
@@ -121,6 +133,50 @@ impl Runtime {
 
     pub fn kernel(&self) -> &str {
         &self.kernel
+    }
+
+    /// Arm (or with `None` disarm) deterministic fault injection on the
+    /// decode path. Resets the decode-call counter, so re-arming the same
+    /// plan replays the identical fault sequence. Injection is evaluated
+    /// for the sim backend only — the PJRT backend produces its own,
+    /// non-simulated faults.
+    pub fn set_fault_plan(&self, plan: Option<FaultPlan>) {
+        let mut st = self.faults.lock().unwrap();
+        *st = FaultState { plan, calls: 0, injected: 0 };
+    }
+
+    /// Faults actually injected (errors + latency spikes) since the plan
+    /// was last armed.
+    pub fn faults_injected(&self) -> u64 {
+        self.faults.lock().unwrap().injected
+    }
+
+    /// Evaluate the armed fault plan for the next decode call. Returns the
+    /// error to inject, after serving any latency spike inline.
+    fn check_fault(&self) -> Result<()> {
+        let decision = {
+            let mut st = self.faults.lock().unwrap();
+            let Some(plan) = st.plan.as_ref() else { return Ok(()) };
+            st.calls += 1;
+            let d = plan.decide(st.calls);
+            if d.is_some() {
+                st.injected += 1;
+            }
+            d
+        };
+        match decision {
+            None => Ok(()),
+            Some(FaultDecision::LatencySpikeMs(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+            Some(FaultDecision::StepError) => {
+                Err(anyhow!("injected fault: backend step error"))
+            }
+            Some(FaultDecision::Oom) => {
+                Err(anyhow!("injected fault: simulated device allocator OOM"))
+            }
+        }
     }
 
     pub fn stats(&self) -> RuntimeStats {
@@ -210,6 +266,7 @@ impl Runtime {
     ) -> Result<DecodeOut> {
         match &self.backend {
             Backend::Sim(m) => {
+                self.check_fault()?;
                 let t0 = Instant::now();
                 let out = m.decode(tier, tokens, positions, k_cache, v_cache, cache_lens)?;
                 let mut s = self.stats.lock().unwrap();
@@ -265,5 +322,38 @@ mod tests {
     #[test]
     fn unknown_sim_model_errors() {
         assert!(Runtime::load("sim://nope", "pallas").is_err());
+    }
+
+    #[test]
+    fn fault_plan_injects_on_exact_call_and_rearms() {
+        let rt = Runtime::load("sim://tiny", "pallas").unwrap();
+        let plan = FaultPlan {
+            seed: 1,
+            step_error_rate: 0.0,
+            latency_spike_ms: 0,
+            latency_spike_rate: 0.0,
+            oom_at: 2,
+        };
+        rt.set_fault_plan(Some(plan.clone()));
+        let tokens = TensorI32::from_vec(&[1], vec![7]).unwrap();
+        let positions = TensorI32::from_vec(&[1], vec![4]).unwrap();
+        let k = Tensor::zeros(&[8, 1, 64, 4, 32]);
+        let v = Tensor::zeros(&[8, 1, 64, 4, 32]);
+        let lens = TensorI32::from_vec(&[8, 1], vec![0; 8]).unwrap();
+        let mut call = || rt.decode((1, 64), &tokens, &positions, &k, &v, &lens);
+        assert!(call().is_ok());
+        let err = call().unwrap_err().to_string();
+        assert!(err.contains("injected fault"), "{err}");
+        assert!(call().is_ok());
+        assert_eq!(rt.faults_injected(), 1);
+        // Re-arming replays the same sequence from call 1.
+        rt.set_fault_plan(Some(plan));
+        assert_eq!(rt.faults_injected(), 0);
+        assert!(call().is_ok());
+        assert!(call().is_err());
+        // Disarm: no more faults, counter reset.
+        rt.set_fault_plan(None);
+        assert!(call().is_ok());
+        assert_eq!(rt.faults_injected(), 0);
     }
 }

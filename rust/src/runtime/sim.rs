@@ -65,6 +65,74 @@ fn feat(a: u64, b: u64, salt: u64) -> f32 {
     unit(mix(a ^ b.rotate_left(17) ^ salt))
 }
 
+const SALT_F_ERR: u64 = 0xA1B2_C3D4_E5F6_000A;
+const SALT_F_LAT: u64 = 0xA1B2_C3D4_E5F6_000B;
+
+/// Map a mixed hash to [0, 1).
+fn frac(h: u64) -> f64 {
+    (h >> 11) as f64 / 9_007_199_254_740_992.0
+}
+
+/// Deterministic fault-injection plan for the sim backend (chaos testing).
+///
+/// Whether decode call number `n` faults is a pure function of `(seed, n)`
+/// via the same SplitMix64 mixing the model weights use, so a fixed config
+/// reproduces the identical fault sequence on every run — the chaos suite's
+/// token-identity assertions depend on this. The plan is engine-state-blind
+/// by design: injection depends only on the call index, never on batch
+/// contents, so retried work sees fresh coin flips instead of hitting the
+/// same fault forever.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub step_error_rate: f64,
+    pub latency_spike_ms: u64,
+    pub latency_spike_rate: f64,
+    pub oom_at: u64,
+}
+
+/// What [`FaultPlan::decide`] injects into one decode call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDecision {
+    /// Simulated allocator OOM (the `oom_at` exact-call trigger).
+    Oom,
+    /// Generic backend step error.
+    StepError,
+    /// Sleep this many milliseconds, then succeed normally.
+    LatencySpikeMs(u64),
+}
+
+impl FaultPlan {
+    pub fn from_config(f: &crate::config::FaultConfig) -> Self {
+        Self {
+            seed: f.seed,
+            step_error_rate: f.step_error_rate,
+            latency_spike_ms: f.latency_spike_ms,
+            latency_spike_rate: f.latency_spike_rate,
+            oom_at: f.oom_at,
+        }
+    }
+
+    /// The fault (if any) for 1-based decode call number `call`.
+    pub fn decide(&self, call: u64) -> Option<FaultDecision> {
+        if self.oom_at != 0 && call == self.oom_at {
+            return Some(FaultDecision::Oom);
+        }
+        if self.step_error_rate > 0.0
+            && frac(mix(self.seed ^ call.rotate_left(23) ^ SALT_F_ERR)) < self.step_error_rate
+        {
+            return Some(FaultDecision::StepError);
+        }
+        if self.latency_spike_ms > 0
+            && self.latency_spike_rate > 0.0
+            && frac(mix(self.seed ^ call.rotate_left(23) ^ SALT_F_LAT)) < self.latency_spike_rate
+        {
+            return Some(FaultDecision::LatencySpikeMs(self.latency_spike_ms));
+        }
+        None
+    }
+}
+
 pub struct SimModel {
     manifest: Manifest,
     n_layer: usize,
@@ -388,6 +456,38 @@ mod tests {
 
     fn model() -> SimModel {
         SimModel::new("tiny").unwrap()
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_rate_shaped() {
+        let plan = FaultPlan {
+            seed: 7,
+            step_error_rate: 0.05,
+            latency_spike_ms: 2,
+            latency_spike_rate: 0.1,
+            oom_at: 13,
+        };
+        assert_eq!(plan.decide(13), Some(FaultDecision::Oom));
+        // Same (seed, call) → same decision; different seed → independent.
+        let mut errors = 0usize;
+        for call in 1..=10_000u64 {
+            let d = plan.decide(call);
+            assert_eq!(d, plan.decide(call));
+            if d == Some(FaultDecision::StepError) {
+                errors += 1;
+            }
+        }
+        // 5% rate over 10k calls: generous 3–7% band.
+        assert!((300..=700).contains(&errors), "errors {errors}");
+        // Disarmed plan never fires.
+        let off = FaultPlan {
+            seed: 7,
+            step_error_rate: 0.0,
+            latency_spike_ms: 0,
+            latency_spike_rate: 0.0,
+            oom_at: 0,
+        };
+        assert!((1..=1000u64).all(|c| off.decide(c).is_none()));
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Chaos suite: fault injection, containment, supervision, and load
+//! shedding (on `sim://tiny`, so it always runs). The contract under test
+//! is uniform across every fault class:
+//!
+//! * every request gets exactly one terminal event — no caller or
+//!   subscriber ever hangs, no double completion;
+//! * pool bytes (both tiers) return to baseline once the engine drains;
+//! * a faulted-then-retried request that never exhausts its retry budget
+//!   completes token-identically to a fault-free run (greedy decode is a
+//!   pure function of cache + token + position, so both the suspend-resume
+//!   and the restart-from-scratch retry paths preserve the output);
+//! * a request whose retry budget is spent retires with `WorkerError`,
+//!   keeping its partial generation;
+//! * a killed worker's in-flight callers unblock with synthesized
+//!   `WorkerError` terminals, the worker respawns (bounded by
+//!   `max_worker_restarts`), and subsequent submits succeed;
+//! * with the restart budget exhausted the worker stays dead: its snapshot
+//!   exports `"healthy": false` and routing fails fast with
+//!   `NoHealthyWorker` instead of stranding work;
+//! * admission control sheds with `Overloaded` + a sane Retry-After hint
+//!   while admitted requests still complete;
+//! * dropping a `ReplyHandle` cancels the abandoned request server-side.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{
+    Engine, FinishReason, Request, RequestHandle, RequestOutput, RouteError, RoutePolicy, Router,
+};
+use squeezeattention::kvcache::Tier;
+use squeezeattention::workload::{Task, TaskGen};
+
+const ARTIFACTS: &str = "sim://tiny";
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig::new(ARTIFACTS).with_budget(48).with_squeeze(false)
+}
+
+fn drain(eng: &mut Engine) -> Vec<RequestOutput> {
+    let mut outs = Vec::new();
+    let mut steps = 0;
+    while eng.has_work() {
+        outs.extend(eng.step().unwrap());
+        steps += 1;
+        assert!(steps < 100_000, "engine did not drain under fault injection");
+    }
+    outs
+}
+
+fn is_success(f: FinishReason) -> bool {
+    matches!(f, FinishReason::Eos | FinishReason::Length)
+}
+
+/// One arm of the fault-rate sweep: 8 requests with event handles, 2
+/// cancelled mid-flight, suspend-capable retries, full drain. Returns the
+/// outputs by id plus the number of faults actually injected.
+fn run_fault_arm(rate: f64) -> (HashMap<u64, RequestOutput>, u64) {
+    // Host spill on, so the retry path suspends (keeps progress) rather
+    // than restarting — any step-error rate then converges.
+    let mut cfg = base_cfg().with_host_spill(8 * 1024 * 1024);
+    cfg.max_retries = 1_000; // nobody may hit the retry bound in this arm
+    cfg.faults.step_error_rate = rate;
+    if rate > 0.0 {
+        cfg.faults.latency_spike_ms = 1;
+        cfg.faults.latency_spike_rate = rate;
+    }
+    let mut eng = Engine::new(cfg).unwrap();
+    let baseline = eng.pool().in_use();
+    let mut gen = TaskGen::new(21);
+    let mut handles = Vec::new();
+    for i in 0..8u64 {
+        let mut req = Request::new(i, gen.sample(Task::Copy, 40).prompt, 24);
+        handles.push(RequestHandle::attach(&mut req));
+        eng.submit(req).unwrap();
+    }
+    let mut outs = Vec::new();
+    for _ in 0..3 {
+        outs.extend(eng.step().unwrap());
+    }
+    // Cancel churn: two requests abandoned mid-decode, same ids every arm.
+    handles[6].cancel();
+    handles[7].cancel();
+    outs.extend(drain(&mut eng));
+
+    assert_eq!(outs.len(), 8, "terminal outputs lost or duplicated at rate {rate}");
+    assert_eq!(eng.pool().in_use(), baseline, "device bytes leaked at rate {rate}");
+    assert_eq!(eng.pool().in_use_of(Tier::Host), 0, "host bytes leaked at rate {rate}");
+    for (i, h) in handles.iter().enumerate() {
+        let terminals = h.events().try_iter().filter(|e| e.is_terminal()).count();
+        assert_eq!(terminals, 1, "request {i} saw {terminals} terminal events at rate {rate}");
+    }
+    let injected = eng.sched_metrics().faults_injected;
+    (outs.into_iter().map(|o| (o.id, o)).collect(), injected)
+}
+
+#[test]
+fn fault_sweep_is_token_identical_to_fault_free_run() {
+    let (reference, injected) = run_fault_arm(0.0);
+    assert_eq!(injected, 0, "fault-free arm must not inject");
+    assert!(is_success(reference[&0].finish));
+    assert_eq!(reference[&6].finish, FinishReason::Cancelled);
+    assert_eq!(reference[&7].finish, FinishReason::Cancelled);
+
+    let mut total_injected = 0;
+    for rate in [0.05, 0.25] {
+        let (outs, injected) = run_fault_arm(rate);
+        total_injected += injected;
+        // The never-cancelled requests had 1000 retries — far more than any
+        // arm consumes — so all must succeed, token-identically.
+        for id in 0..6u64 {
+            let (r, o) = (&reference[&id], &outs[&id]);
+            assert!(is_success(o.finish), "request {id} failed at rate {rate}: {:?}", o.finish);
+            assert_eq!(o.finish, r.finish, "finish diverged for {id} at rate {rate}");
+            assert_eq!(
+                o.generated, r.generated,
+                "tokens diverged under injected faults for request {id} at rate {rate}"
+            );
+        }
+        assert_eq!(outs[&6].finish, FinishReason::Cancelled);
+        assert_eq!(outs[&7].finish, FinishReason::Cancelled);
+    }
+    // Deterministic given the seed; at these rates the sweep decides
+    // hundreds of coin flips, so zero injections means the plan is dead.
+    assert!(total_injected > 0, "faulted arms never injected anything");
+}
+
+#[test]
+fn injected_oom_is_contained_and_restart_is_token_identical() {
+    let mut gen = TaskGen::new(23);
+    let prompts: Vec<Vec<i32>> = (0..4).map(|_| gen.sample(Task::Copy, 40).prompt).collect();
+
+    // Fault-free reference for the restart-identity check.
+    let mut clean = Engine::new(base_cfg()).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        clean.submit(Request::new(i as u64, p.clone(), 16)).unwrap();
+    }
+    let mut want: Vec<RequestOutput> = drain(&mut clean);
+    want.sort_by_key(|o| o.id);
+
+    // No host tier: the contained error exercises restart-from-scratch.
+    let mut cfg = base_cfg();
+    cfg.max_retries = 2;
+    cfg.faults.oom_at = 3; // decode call 3 fails, once
+    let mut eng = Engine::new(cfg).unwrap();
+    let baseline = eng.pool().in_use();
+    for (i, p) in prompts.iter().enumerate() {
+        eng.submit(Request::new(i as u64, p.clone(), 16)).unwrap();
+    }
+    let mut outs = drain(&mut eng);
+    outs.sort_by_key(|o| o.id);
+
+    assert_eq!(outs.len(), 4);
+    for (o, w) in outs.iter().zip(&want) {
+        assert!(is_success(o.finish), "retry did not recover: {:?}", o.finish);
+        assert_eq!(o.generated, w.generated, "restarted request {} diverged", o.id);
+    }
+    let m = eng.sched_metrics();
+    assert_eq!(m.faults_injected, 1);
+    assert_eq!(m.worker_errors, 1, "one contained step error expected");
+    assert!(m.requests_retried >= 1, "the failed batch must have been retried");
+    assert_eq!(eng.pool().in_use(), baseline, "failed step leaked device bytes");
+}
+
+#[test]
+fn exhausted_retry_budget_retires_with_worker_error() {
+    let mut cfg = base_cfg();
+    cfg.max_retries = 0;
+    cfg.faults.oom_at = 2; // one clean step first, so partial output exists
+    let mut eng = Engine::new(cfg).unwrap();
+    let baseline = eng.pool().in_use();
+    let mut gen = TaskGen::new(29);
+    for i in 0..3u64 {
+        eng.submit(Request::new(i, gen.sample(Task::Copy, 40).prompt, 16)).unwrap();
+    }
+    let outs = drain(&mut eng);
+
+    assert_eq!(outs.len(), 3);
+    let failed: Vec<&RequestOutput> =
+        outs.iter().filter(|o| o.finish == FinishReason::WorkerError).collect();
+    assert!(!failed.is_empty(), "no request retired with WorkerError");
+    for o in &failed {
+        assert!(!o.generated.is_empty(), "WorkerError dropped the partial generation");
+    }
+    assert!(outs.iter().all(|o| is_success(o.finish) || o.finish == FinishReason::WorkerError));
+    let m = eng.sched_metrics();
+    assert_eq!(m.worker_errors, 1);
+    assert_eq!(m.requests_retried, 0, "retries must be off at max_retries = 0");
+    assert_eq!(eng.pool().in_use(), baseline, "WorkerError retirement leaked device bytes");
+}
+
+#[test]
+fn killed_worker_respawns_and_in_flight_callers_unblock() {
+    let mut cfg = base_cfg();
+    cfg.max_worker_restarts = 3;
+    // Slow every decode call down so the victim is reliably mid-decode.
+    cfg.faults.latency_spike_ms = 2;
+    cfg.faults.latency_spike_rate = 1.0;
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap();
+    let mut gen = TaskGen::new(33);
+    let prompt = gen.sample(Task::Copy, 40).prompt;
+
+    let handle = router.submit_async(Request::new(7, prompt.clone(), 400)).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(router.kill_worker(0), "worker queue refused the poison job");
+
+    // The in-flight caller must unblock with a synthesized terminal.
+    let out = handle.recv().expect("caller hung on a dead worker");
+    assert_eq!(out.id, 7);
+    assert_eq!(out.finish, FinishReason::WorkerError);
+
+    // The supervisor respawns the worker; routing then works again.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.worker_restarts() != 1 || router.worker_state(0) != Some("healthy") {
+        assert!(
+            Instant::now() < deadline,
+            "worker never respawned: restarts={} state={:?}",
+            router.worker_restarts(),
+            router.worker_state(0)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let out = router.submit(Request::new(8, prompt, 8)).unwrap();
+    assert!(is_success(out.finish), "post-respawn submit failed: {:?}", out.finish);
+    let j = router.metrics_json();
+    assert_eq!(j.get("worker_restarts").unwrap().as_usize(), Some(1));
+}
+
+#[test]
+fn dead_worker_without_restart_budget_is_unroutable_and_snapshot_says_so() {
+    let mut cfg = base_cfg();
+    cfg.max_worker_restarts = 0;
+    let router = Router::spawn(cfg, 1, RoutePolicy::LeastLoaded).unwrap();
+    assert_eq!(router.worker_state(0), Some("healthy"));
+    assert!(router.kill_worker(0));
+
+    // The snapshot must degrade to unhealthy/dead (the worker died holding
+    // its metrics mutex — the poisoned-lock path) instead of panicking.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let snap = router.snapshots().remove(0);
+        if !snap.healthy && snap.state == "dead" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "snapshot never marked the worker dead");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut gen = TaskGen::new(41);
+    let err = router.submit(Request::new(1, gen.sample(Task::Copy, 40).prompt, 8)).unwrap_err();
+    assert_eq!(err, RouteError::NoHealthyWorker, "routing to a dead fleet must fail fast");
+}
+
+#[test]
+fn load_shedding_rejects_with_retry_hint_and_admitted_requests_complete() {
+    let mut cfg = base_cfg();
+    cfg.shed_queue_depth = 2;
+    // Slow decode keeps the two admitted requests in flight for the burst.
+    cfg.faults.latency_spike_ms = 1;
+    cfg.faults.latency_spike_rate = 1.0;
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap();
+    let mut gen = TaskGen::new(37);
+    let prompt = gen.sample(Task::Copy, 40).prompt;
+
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..10u64 {
+        match router.submit_async(Request::new(i, prompt.clone(), 48)) {
+            Ok(h) => admitted.push(h),
+            Err(RouteError::Overloaded { retry_after_ms }) => {
+                assert!(
+                    (50..=5000).contains(&retry_after_ms),
+                    "retry hint out of range: {retry_after_ms}"
+                );
+                shed += 1;
+            }
+            Err(other) => panic!("unexpected route error: {other}"),
+        }
+    }
+    assert!(admitted.len() >= 2, "queue-depth bound shed the whole burst");
+    assert!(shed >= 1, "burst over the bound never shed");
+    for h in &admitted {
+        let out = h.recv().expect("admitted request never completed");
+        assert!(is_success(out.finish), "admitted request failed: {:?}", out.finish);
+    }
+    assert_eq!(router.requests_shed() as usize, shed);
+    let j = router.metrics_json();
+    assert_eq!(j.get("requests_shed").unwrap().as_usize(), Some(shed));
+}
+
+#[test]
+fn spawn_partial_failure_reports_failed_worker() {
+    let mut cfg = base_cfg();
+    cfg.faults.spawn_fail_worker = Some(1);
+    let err = match Router::spawn(cfg, 3, RoutePolicy::RoundRobin) {
+        Ok(_) => panic!("spawn must fail when a worker cannot start"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 1"), "error does not name the failed worker: {msg}");
+}
+
+#[test]
+fn dropped_reply_handle_cancels_abandoned_request() {
+    let mut cfg = base_cfg();
+    // Every decode call sleeps, so the 4000-token request is still decoding
+    // when the handle is dropped, whatever the host speed.
+    cfg.faults.latency_spike_ms = 1;
+    cfg.faults.latency_spike_rate = 1.0;
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap();
+    let mut gen = TaskGen::new(43);
+    let handle =
+        router.submit_async(Request::new(5, gen.sample(Task::Copy, 40).prompt, 4000)).unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    drop(handle); // abandon the caller — must cancel server-side
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let cancelled = router.sched_metrics().first().map_or(0, |m| m.cancelled);
+        if cancelled >= 1 && router.inflight() == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "abandoned request was never cancelled");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
