@@ -1,0 +1,135 @@
+//! Telemetry overhead bench (emits `reports/BENCH_trace.json`).
+//!
+//! The observability contract is that `--trace-level off` costs nothing
+//! measurable and even `full` (spans + per-phase timers + layer table)
+//! stays under 5% of decode throughput. This bench drains the same closed
+//! workload at each trace level, alternating arms A/B/A/B across repeats
+//! so drift on a shared CI runner hits both arms equally, scores each arm
+//! by its best repeat, and *asserts* `full >= 0.95 × off`.
+//!
+//! Runs entirely on the simulated backend (`sim://tiny`), deterministic
+//! workload. `SA_QUICK=1` shrinks it.
+
+use std::time::Instant;
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{Engine, FinishReason, Request};
+use squeezeattention::metrics::TraceLevel;
+use squeezeattention::util::bench::Table;
+use squeezeattention::util::Json;
+use squeezeattention::workload::TraceSpec;
+
+const PROMPT_LEN: usize = 16;
+const MAX_NEW: usize = 32;
+/// `full` must keep at least this fraction of `off`'s best throughput.
+const MAX_OVERHEAD: f64 = 0.05;
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig::new("sim://tiny").with_budget(48).with_squeeze(false)
+}
+
+/// Drain one closed workload at the given trace level; returns
+/// (tokens/s, spans recorded).
+fn run_arm(level: TraceLevel, n_requests: usize) -> anyhow::Result<(f64, u64)> {
+    let mut cfg = base_cfg();
+    cfg.trace_level = level;
+    let items = TraceSpec::closed(n_requests, PROMPT_LEN, MAX_NEW, 83).generate();
+    let mut eng = Engine::new(cfg)?;
+    let t0 = Instant::now();
+    for (i, it) in items.iter().enumerate() {
+        let req = Request::new(i as u64, it.sample.prompt.clone(), MAX_NEW);
+        if let Err(rejected) = eng.submit(req) {
+            anyhow::bail!("request {} rejected at submit: {:?}", i, rejected.finish);
+        }
+    }
+    let mut outs = Vec::new();
+    while eng.has_work() {
+        outs.extend(eng.step()?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    for o in &outs {
+        if !matches!(o.finish, FinishReason::Eos | FinishReason::Length) {
+            anyhow::bail!("request {} failed at level {}: {:?}", o.id, level.name(), o.finish);
+        }
+    }
+    let tokens: u64 = outs.iter().map(|o| o.generated.len() as u64).sum();
+    Ok((tokens as f64 / wall_s.max(1e-9), eng.recorder().total()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("SA_QUICK").is_ok();
+    let n_requests = if quick { 8 } else { 32 };
+    let repeats = if quick { 3 } else { 5 };
+    let levels = [TraceLevel::Off, TraceLevel::Spans, TraceLevel::Full];
+
+    // Warmup (allocator, page pool, branch predictors) — discarded.
+    run_arm(TraceLevel::Full, n_requests)?;
+
+    // Alternate arms within each repeat so runner drift is shared.
+    let mut runs: Vec<Vec<f64>> = vec![Vec::new(); levels.len()];
+    let mut spans: Vec<u64> = vec![0; levels.len()];
+    for _ in 0..repeats {
+        for (i, level) in levels.iter().enumerate() {
+            let (tok_s, n_spans) = run_arm(*level, n_requests)?;
+            runs[i].push(tok_s);
+            spans[i] = n_spans;
+        }
+    }
+    let best: Vec<f64> = runs.iter().map(|r| r.iter().cloned().fold(0.0, f64::max)).collect();
+    let mean: Vec<f64> = runs.iter().map(|r| r.iter().sum::<f64>() / r.len() as f64).collect();
+
+    let mut table = Table::new(&["level", "best tok/s", "mean tok/s", "spans", "vs off"]);
+    for (i, level) in levels.iter().enumerate() {
+        table.row(vec![
+            level.name().to_string(),
+            format!("{:.1}", best[i]),
+            format!("{:.1}", mean[i]),
+            spans[i].to_string(),
+            format!("{:.1}%", 100.0 * (1.0 - best[i] / best[0].max(1e-9))),
+        ]);
+    }
+    println!("trace-level overhead ({n_requests} requests, best of {repeats}):");
+    table.print();
+
+    // Sanity: `off` records nothing; `full` records spans for every request.
+    assert_eq!(spans[0], 0, "trace-level off still recorded spans");
+    assert!(spans[2] > 0, "trace-level full recorded no spans");
+
+    let overhead = 1.0 - best[2] / best[0].max(1e-9);
+    assert!(
+        best[2] >= best[0] * (1.0 - MAX_OVERHEAD),
+        "full tracing overhead {:.1}% exceeds the {:.0}% budget \
+         (off {:.1} tok/s, full {:.1} tok/s)",
+        100.0 * overhead,
+        100.0 * MAX_OVERHEAD,
+        best[0],
+        best[2]
+    );
+    println!("full-tracing overhead {:.1}% (budget {:.0}%)", 100.0 * overhead.max(0.0), 5.0);
+
+    let arms: Vec<Json> = levels
+        .iter()
+        .enumerate()
+        .map(|(i, level)| {
+            Json::obj(vec![
+                ("level", Json::str(level.name())),
+                ("best_tokens_per_s", Json::num(best[i])),
+                ("mean_tokens_per_s", Json::num(mean[i])),
+                ("spans_recorded", Json::num(spans[i] as f64)),
+                ("runs", Json::Arr(runs[i].iter().map(|&t| Json::num(t)).collect())),
+            ])
+        })
+        .collect();
+    let report = Json::obj(vec![
+        ("bench", Json::str("trace")),
+        ("n_requests", Json::num(n_requests as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("max_overhead_frac", Json::num(MAX_OVERHEAD)),
+        ("full_overhead_frac", Json::num(overhead)),
+        ("arms", Json::Arr(arms)),
+    ]);
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/BENCH_trace.json", report.to_string())?;
+    println!("wrote reports/BENCH_trace.json");
+    Ok(())
+}

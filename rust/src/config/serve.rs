@@ -4,6 +4,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::metrics::TraceLevel;
 use crate::util::Json;
 
 /// Sequence-wise KV eviction policy (the paper's baselines).
@@ -210,6 +211,11 @@ pub struct ServeConfig {
     /// Load shedding: reject with `Overloaded` when the picked worker's
     /// observed queue-latency p95 exceeds this many milliseconds. 0 = off.
     pub shed_queue_latency_ms: u64,
+    /// Telemetry depth (`--trace-level {off,spans,full}`): `off` records
+    /// nothing on the hot path, `spans` records lifecycle trace spans into
+    /// the per-worker flight recorder, `full` additionally times the
+    /// decode-step phases. Default `spans`.
+    pub trace_level: TraceLevel,
 }
 
 impl ServeConfig {
@@ -239,6 +245,7 @@ impl ServeConfig {
             max_worker_restarts: 3,
             shed_queue_depth: 0,
             shed_queue_latency_ms: 0,
+            trace_level: TraceLevel::default(),
         }
     }
 
@@ -353,6 +360,10 @@ impl ServeConfig {
         if let Some(l) = j.get("shed_queue_latency_ms").and_then(|v| v.as_usize()) {
             cfg.shed_queue_latency_ms = l as u64;
         }
+        if let Some(t) = j.get("trace_level").and_then(|v| v.as_str()) {
+            cfg.trace_level =
+                TraceLevel::parse(t).ok_or_else(|| anyhow!("unknown trace_level {t}"))?;
+        }
         Ok(cfg)
     }
 
@@ -409,6 +420,7 @@ impl ServeConfig {
             ("max_worker_restarts", Json::num(self.max_worker_restarts as f64)),
             ("shed_queue_depth", Json::num(self.shed_queue_depth as f64)),
             ("shed_queue_latency_ms", Json::num(self.shed_queue_latency_ms as f64)),
+            ("trace_level", Json::str(self.trace_level.name())),
         ])
     }
 
@@ -504,6 +516,11 @@ impl ServeConfig {
 
     pub fn with_shed_queue_latency_ms(mut self, ms: u64) -> Self {
         self.shed_queue_latency_ms = ms;
+        self
+    }
+
+    pub fn with_trace_level(mut self, level: TraceLevel) -> Self {
+        self.trace_level = level;
         self
     }
 }
@@ -677,6 +694,22 @@ mod tests {
         assert_eq!(d.max_retries, 2);
         // spawn_fail_worker is a test hook, never serialized
         assert!(set.to_json().get("faults").unwrap().get("spawn_fail_worker").is_none());
+    }
+
+    #[test]
+    fn trace_level_roundtrip_and_default() {
+        // Default: lifecycle spans on, phase timers off.
+        let cfg = ServeConfig::new("a");
+        assert_eq!(cfg.trace_level, TraceLevel::Spans);
+        let back =
+            ServeConfig::from_json(&cfg.with_trace_level(TraceLevel::Full).to_json()).unwrap();
+        assert_eq!(back.trace_level, TraceLevel::Full);
+        // absent key keeps the default
+        let j = Json::parse(r#"{"artifacts": "a"}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().trace_level, TraceLevel::Spans);
+        // bad value is a hard error, not a silent default
+        let j = Json::parse(r#"{"artifacts": "a", "trace_level": "loud"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -76,6 +76,7 @@
 //! The engine is synchronous; the async server (`server.rs`) drives it from
 //! a dedicated thread.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -84,12 +85,15 @@ use crate::config::{PolicyKind, ServeConfig};
 use crate::kvcache::{
     make_policy, EvictionPolicy, KvPool, PageTable, PagedKvPool, SequenceCache, Tier,
 };
-use crate::metrics::{Histogram, SchedulerMetrics, ThroughputMeter};
+use crate::metrics::{
+    FlightRecorder, Histogram, LayerTable, PhaseAcc, PhaseTimers, SchedulerMetrics, SpanKind,
+    StepPhase, ThroughputMeter,
+};
 use crate::model::tokenizer::{self, check_token_map};
 use crate::model::{argmax, sample};
 use crate::runtime::{DecodeOut, FaultPlan, Runtime, TensorI32};
 use crate::squeeze::{allocate, BudgetPlan, CosineStats};
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 use super::lifecycle::{self, RequestEvent};
 use super::request::{BudgetSpec, FinishReason, Request, RequestOutput, RequestTiming};
@@ -167,6 +171,21 @@ pub struct Engine {
     /// Inter-token latency: gap between consecutive sampled tokens of a
     /// sequence, including any suspended time in between.
     itl_hist: Histogram,
+    /// Shared span ring: every lifecycle transition is recorded here. The
+    /// engine creates its own from `cfg.trace_level`; the supervisor swaps
+    /// in a worker-shared one (`set_recorder`) so the spans survive the
+    /// engine when a worker thread dies.
+    recorder: Arc<FlightRecorder>,
+    /// Per-phase step timing (`--trace-level full` only): where a decode
+    /// millisecond goes — admission / gather / model / verify / evict /
+    /// commit.
+    phase_timers: PhaseTimers,
+    /// Current step's phase durations; flushed into `phase_timers` once per
+    /// step so a phase touched per-slot still costs one histogram record.
+    phase_acc: PhaseAcc,
+    /// Cumulative per-layer evicted rows/bytes (always on: two counter adds
+    /// on an eviction event that already rewrites the cache).
+    layer_table: LayerTable,
     run: EngineRunStats,
     pub last_run: EngineRunStats,
 }
@@ -264,6 +283,10 @@ impl Engine {
             queue_hist: Histogram::new(),
             ttft_hist: Histogram::new(),
             itl_hist: Histogram::new(),
+            recorder: Arc::new(FlightRecorder::with_level(cfg.trace_level)),
+            phase_timers: PhaseTimers::new(),
+            phase_acc: PhaseAcc::default(),
+            layer_table: LayerTable::new(n_layer),
             run: Default::default(),
             last_run: Default::default(),
             cfg,
@@ -307,6 +330,10 @@ impl Engine {
         self.queue_hist = Histogram::new();
         self.ttft_hist = Histogram::new();
         self.itl_hist = Histogram::new();
+        self.recorder = Arc::new(FlightRecorder::with_level(cfg.trace_level));
+        self.phase_timers = PhaseTimers::new();
+        self.phase_acc = PhaseAcc::default();
+        self.layer_table = LayerTable::new(self.n_layer);
         self.cfg = cfg;
         Ok(())
     }
@@ -381,6 +408,67 @@ impl Engine {
         &self.run
     }
 
+    /// The span ring lifecycle transitions are recorded into (query with
+    /// `spans_for`/`trace_json`, dump on faults).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
+    }
+
+    /// Share a caller-owned recorder (the supervisor installs one per
+    /// worker so its spans outlive a dead engine thread). The recorder's
+    /// own level wins over `cfg.trace_level` from here on.
+    pub fn set_recorder(&mut self, recorder: Arc<FlightRecorder>) {
+        self.recorder = recorder;
+    }
+
+    /// Per-phase step-timing summaries (populated at `--trace-level full`;
+    /// empty histograms otherwise).
+    pub fn phase_json(&mut self) -> Json {
+        self.phase_timers.to_json()
+    }
+
+    /// Requests the engine currently owns: queued + running + suspended.
+    /// With the `SchedulerMetrics` counters this closes the conservation
+    /// identity `submitted == completed + cancelled + deadline_exceeded +
+    /// oom_failures + requests_failed + rejected + in_flight`.
+    pub fn in_flight(&self) -> usize {
+        self.sched.queue_len() + self.sched.running() + self.sched.suspended_len()
+    }
+
+    /// Lifetime + windowed throughput (tokens/s, requests/s) as JSON.
+    pub fn throughput_json(&mut self) -> Json {
+        self.meter.to_json()
+    }
+
+    /// The live squeeze table: cumulative per-layer eviction counters plus
+    /// each active (running or suspended) sequence's resolved budget plan —
+    /// the paper's Figure-1 layer view reconstructed from a serving engine.
+    pub fn squeeze_table_json(&self) -> Json {
+        fn nums(v: &[usize]) -> Json {
+            Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect())
+        }
+        fn floats(v: &[f64]) -> Json {
+            Json::Arr(v.iter().copied().map(Json::num).collect())
+        }
+        fn plan_json(id: u64, plan: &BudgetPlan) -> Json {
+            Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("total_budget", Json::num(plan.total() as f64)),
+                ("budgets", nums(&plan.budgets)),
+                ("groups", nums(&plan.groups)),
+                ("layer_means", floats(&plan.layer_means)),
+            ])
+        }
+        let mut seqs: Vec<Json> = Vec::new();
+        for a in self.sched.slots.iter().flatten() {
+            seqs.push(plan_json(a.req.id, &a.plan));
+        }
+        for s in &self.sched.suspended {
+            seqs.push(plan_json(s.req.id, &s.snapshot.plan));
+        }
+        Json::obj(vec![("layers", self.layer_table.to_json()), ("sequences", Json::Arr(seqs))])
+    }
+
     /// True while any request is queued, running, or suspended.
     pub fn has_work(&self) -> bool {
         !self.sched.is_idle()
@@ -416,10 +504,15 @@ impl Engine {
     /// batch at the next `step`. `Err` is the immediate backpressure
     /// rejection produced when the queue is at `cfg.queue_depth`.
     pub fn submit(&mut self, req: Request) -> std::result::Result<(), RequestOutput> {
+        let id = req.id;
+        self.recorder.record(id, SpanKind::Submit, 0);
         let q = Queued { req, t_submit: Instant::now(), restarted: false };
         match self.sched.enqueue(q, true) {
             Ok(()) => Ok(()),
-            Err(q) => Err(Self::immediate_output(&q, FinishReason::Rejected, self.n_layer)),
+            Err(q) => {
+                self.recorder.record(id, SpanKind::Retire, 0);
+                Err(Self::immediate_output(&q, FinishReason::Rejected, self.n_layer))
+            }
         }
     }
 
@@ -431,6 +524,9 @@ impl Engine {
         let mut sched = std::mem::take(&mut self.sched);
         let res = self.step_inner(&mut sched);
         self.sched = sched;
+        // One histogram record per touched phase per step, even for phases
+        // accumulated across many slots or micro-steps.
+        self.phase_acc.flush_into(&mut self.phase_timers);
         res
     }
 
@@ -477,6 +573,8 @@ impl Engine {
         self.queue_hist = Histogram::new();
         self.ttft_hist = Histogram::new();
         self.itl_hist = Histogram::new();
+        self.phase_timers = PhaseTimers::new();
+        self.phase_acc = PhaseAcc::default();
         for req in requests {
             let _ = self.sched.enqueue(Queued { req, t_submit: t0, restarted: false }, false);
         }
@@ -491,6 +589,7 @@ impl Engine {
 
     fn step_inner(&mut self, sched: &mut Scheduler) -> Result<Vec<RequestOutput>> {
         let mut outputs = Vec::new();
+        let t_admission = self.recorder.level().full().then(Instant::now);
         // Terminal lifecycle transitions first: cancelled or expired
         // requests must not occupy a slot this step (nor block admission).
         self.lifecycle_phase(sched, &mut outputs);
@@ -499,6 +598,9 @@ impl Engine {
         // logits sampled EOS, or max_new_tokens == 1 — before spending a
         // decode step on them (and before they could over-generate).
         self.retire_phase(sched, &mut outputs);
+        if let Some(t) = t_admission {
+            self.phase_acc.add(StepPhase::Admission, t.elapsed().as_secs_f64());
+        }
         let occupancy = sched.running();
         if occupancy == 0 {
             self.stamp_kv_gauges(sched);
@@ -529,35 +631,26 @@ impl Engine {
         Ok(outputs)
     }
 
-    /// Upper bound on retained queue-latency samples: the exact histogram
-    /// stores every sample, so a long-running step-driven engine (router
-    /// worker) must stop recording eventually rather than grow forever.
-    /// Far above anything the closed-batch and bench paths produce.
-    const QUEUE_HIST_MAX_SAMPLES: usize = 1 << 20;
-
-    /// Record per-request queue latency (queue wait + suspended time) for
-    /// every output leaving the engine this step.
+    /// Record per-request queue latency (queue wait + suspended time) and
+    /// the terminal `Retire` span for every output leaving the engine this
+    /// step. The histogram is reservoir-bounded, so a long-running
+    /// step-driven engine (router worker) records every sample without
+    /// growing without bound.
     fn note_outputs(&mut self, outputs: &[RequestOutput]) {
         for out in outputs {
-            if self.queue_hist.len() >= Self::QUEUE_HIST_MAX_SAMPLES {
-                break;
-            }
             self.queue_hist.record(out.timing.queue_s + out.timing.suspended_s);
+            self.recorder.record(out.id, SpanKind::Retire, out.peak_kv_bytes as u64);
         }
     }
 
-    /// Record one time-to-first-token sample (bounded like the queue hist).
+    /// Record one time-to-first-token sample.
     fn note_ttft(&mut self, v: f64) {
-        if self.ttft_hist.len() < Self::QUEUE_HIST_MAX_SAMPLES {
-            self.ttft_hist.record(v);
-        }
+        self.ttft_hist.record(v);
     }
 
-    /// Record one inter-token-latency sample (bounded like the queue hist).
+    /// Record one inter-token-latency sample.
     fn note_itl(&mut self, v: f64) {
-        if self.itl_hist.len() < Self::QUEUE_HIST_MAX_SAMPLES {
-            self.itl_hist.record(v);
-        }
+        self.itl_hist.record(v);
     }
 
     /// The deadline a request is serving under: its own, else the config
@@ -697,12 +790,15 @@ impl Engine {
                     sched.place(active);
                 }
                 Err(AdmitError::Terminal(out)) => {
-                    if out.finish == FinishReason::Oom {
-                        sched.metrics.oom_failures += 1;
+                    match out.finish {
+                        FinishReason::Oom => sched.metrics.oom_failures += 1,
+                        FinishReason::Rejected => sched.metrics.rejected += 1,
+                        _ => {}
                     }
                     outputs.push(out);
                 }
                 Err(AdmitError::Retry(q)) => {
+                    self.recorder.record(q.req.id, SpanKind::Retry, 0);
                     sched.metrics.deferred_admissions += 1;
                     sched.requeue_front(q);
                     break;
@@ -776,6 +872,7 @@ impl Engine {
         }
         let a = s.into_active();
         lifecycle::emit(&a.req.events, RequestEvent::Resumed { id: a.req.id });
+        self.recorder.record(a.req.id, SpanKind::Resume, a.table.bytes() as u64);
         sched.place(a);
         true
     }
@@ -890,6 +987,7 @@ impl Engine {
             ..Default::default()
         };
         let prompt_len = req.prompt.len();
+        self.recorder.record(req.id, SpanKind::Admit, 0);
 
         fn reject(
             req: &Request,
@@ -943,6 +1041,7 @@ impl Engine {
             }
         };
         timing.prefill_s = tp.elapsed().as_secs_f64();
+        self.recorder.record(req.id, SpanKind::Prefill, 0);
 
         // --- SqueezeAttention: importance -> groups -> budgets -------------
         let ts = Instant::now();
@@ -955,6 +1054,7 @@ impl Engine {
             BudgetPlan::uniform(self.n_layer, b_init)
         };
         timing.squeeze_s = ts.elapsed().as_secs_f64();
+        self.recorder.record(req.id, SpanKind::Squeeze, 0);
         if let Some(collect) = &mut self.collect_cosine {
             collect.observe(&pre.cos_sims, prompt_len);
         }
@@ -968,11 +1068,15 @@ impl Engine {
         };
 
         // --- compress the prompt cache per layer with its own budget -------
+        let token_bytes = SequenceCache::token_bytes(self.row_elems) as u64;
         for layer in 0..self.n_layer {
             let budget = plan.budgets[layer];
-            if cache.layer_len(layer) > budget {
+            let before = cache.layer_len(layer);
+            if before > budget {
                 let keep = self.policy.keep(&cache.layers[layer].meta, budget);
                 cache.retain(layer, &keep).expect("policy produced valid keep-set");
+                let evicted = (before - cache.layer_len(layer)) as u64;
+                self.layer_table.note_eviction(layer, evicted, evicted * token_bytes);
             }
         }
 
@@ -1002,6 +1106,8 @@ impl Engine {
                         let effective_max_new =
                             self.effective_new_tokens(prompt_len, req.max_new_tokens);
                         let peak = host.bytes();
+                        self.recorder.record(req.id, SpanKind::FirstToken, peak as u64);
+                        self.recorder.record(req.id, SpanKind::Suspend, peak as u64);
                         return Err(AdmitError::Suspend(Box::new(Suspended::from_active(
                             Active {
                                 generated: vec![first],
@@ -1036,6 +1142,7 @@ impl Engine {
 
         let effective_max_new = self.effective_new_tokens(prompt_len, req.max_new_tokens);
         let peak = table.bytes();
+        self.recorder.record(req.id, SpanKind::FirstToken, peak as u64);
         Ok(Active {
             generated: vec![first],
             next_pos: prompt_len,
@@ -1061,6 +1168,7 @@ impl Engine {
     /// releases its pages either way; on migrate only page-table entries
     /// move).
     fn suspend_or_requeue(&mut self, sched: &mut Scheduler, mut a: Active) {
+        self.recorder.record(a.req.id, SpanKind::Suspend, a.cache.bytes() as u64);
         if self.swap_enabled() {
             if let Ok(pages) = a.table.migrate(Tier::Host) {
                 sched.metrics.pages_swapped_out += pages as u64;
@@ -1147,6 +1255,8 @@ impl Engine {
         self.stage_positions.data.fill(0);
         self.stage_lens.data.fill(0);
         let allow_incremental = self.cfg.resident_scratch;
+        let timed = self.recorder.level().full();
+        let t_gather = timed.then(Instant::now);
         let mut fill = Ok(());
         for &(i, tok, pos) in inputs {
             let a = sched.slots[i].as_ref().expect("inputs list occupied slots");
@@ -1164,7 +1274,11 @@ impl Engine {
                 break;
             }
         }
+        if let Some(t) = t_gather {
+            self.phase_acc.add(StepPhase::Gather, t.elapsed().as_secs_f64());
+        }
 
+        let t_model = timed.then(Instant::now);
         let out = match fill {
             Ok(()) => {
                 let rt = if use_draft {
@@ -1183,6 +1297,9 @@ impl Engine {
             }
             Err(e) => Err(e),
         };
+        if let Some(t) = t_model {
+            self.phase_acc.add(StepPhase::Model, t.elapsed().as_secs_f64());
+        }
         self.scratch.insert(tier, st);
         let out = out?;
         self.run.decode_steps += 1;
@@ -1280,6 +1397,8 @@ impl Engine {
         let b = self.batch;
         let vocab = self.runtime.manifest.model.vocab;
         let needs_scores = self.policy.needs_scores();
+        let timed = self.recorder.level().full();
+        let t_commit = timed.then(Instant::now);
         let a = sched.slots[idx].as_mut().expect("checked occupied");
 
         // Append the new KV row to every layer and fold H2O scores (the
@@ -1311,13 +1430,18 @@ impl Engine {
 
         // Per-layer re-compression with each layer's own budget
         // (Algorithm 1, lines 15–19).
+        let t_evict = timed.then(Instant::now);
+        let token_bytes = SequenceCache::token_bytes(self.row_elems) as u64;
         let grown = a.cache.bytes();
         for layer in 0..self.n_layer {
             let budget = a.plan.budgets[layer];
-            if a.cache.layer_len(layer) > budget {
+            let before = a.cache.layer_len(layer);
+            if before > budget {
                 let keep = self.policy.keep(&a.cache.layers[layer].meta, budget);
                 a.cache.retain(layer, &keep)?;
                 self.run.evictions += 1;
+                let evicted = (before - a.cache.layer_len(layer)) as u64;
+                self.layer_table.note_eviction(layer, evicted, evicted * token_bytes);
             }
         }
         let shrunk = a.cache.bytes();
@@ -1329,6 +1453,14 @@ impl Engine {
             // Engine tables are never shared, so shrink cannot COW
             // (and therefore cannot fail).
             let _ = a.table.shrink(&lens);
+        }
+        if let Some(te) = t_evict {
+            let evict_s = te.elapsed().as_secs_f64();
+            self.phase_acc.add(StepPhase::Evict, evict_s);
+            if let Some(tc) = t_commit {
+                let commit_s = (tc.elapsed().as_secs_f64() - evict_s).max(0.0);
+                self.phase_acc.add(StepPhase::Commit, commit_s);
+            }
         }
         Ok(tok)
     }
@@ -1496,6 +1628,7 @@ impl Engine {
         // the bonus token the target always commits, so a burst commits
         // between 1 and k+1 tokens. Every commit is `commit_token` — the
         // non-speculative path — run from the rolled-back cache state.
+        let t_verify = self.recorder.level().full().then(Instant::now);
         for v in 0..=draft_k {
             // Honor mid-burst cancellation between micro-steps: the
             // sequence keeps its committed prefix, its unverified drafts
@@ -1578,6 +1711,12 @@ impl Engine {
                     bu.verifying = false;
                 }
             }
+        }
+
+        if let Some(t) = t_verify {
+            // Wall time of the verify loop: its inner gathers/decodes also
+            // accumulate into Gather/Model, which the phase doc calls out.
+            self.phase_acc.add(StepPhase::Verify, t.elapsed().as_secs_f64());
         }
 
         // --- burst end: per-token ITL + spec metrics ----------------------
@@ -1673,16 +1812,25 @@ impl Engine {
     ) {
         eprintln!("decode step failed (contained): {e:#}");
         sched.metrics.worker_errors += 1;
+        let mut exhausted = false;
         for idx in 0..sched.slots.len() {
             let Some(mut a) = sched.slots[idx].take() else { continue };
             let retries = *a.req.retries_left.get_or_insert(self.cfg.max_retries);
             if retries > 0 {
                 a.req.retries_left = Some(retries - 1);
                 sched.metrics.requests_retried += 1;
+                self.recorder.record(a.req.id, SpanKind::Retry, a.cache.bytes() as u64);
                 self.suspend_or_requeue(sched, a);
             } else {
+                exhausted = true;
+                sched.metrics.requests_failed += 1;
                 outputs.push(Self::finish(a, FinishReason::WorkerError));
             }
+        }
+        // Crash-context dump: the retained span history at the moment of the
+        // fault, under the most severe reason this containment pass hit.
+        if self.recorder.level().spans() {
+            let _ = self.recorder.dump(if exhausted { "retry_exhausted" } else { "worker_error" });
         }
         sched.refresh_gauges();
     }
@@ -1692,13 +1840,16 @@ impl Engine {
     fn fail_in_place(sched: &mut Scheduler, n_layer: usize, outputs: &mut Vec<RequestOutput>) {
         for slot in sched.slots.iter_mut() {
             if let Some(a) = slot.take() {
+                sched.metrics.requests_failed += 1;
                 outputs.push(Self::finish(a, FinishReason::Failed));
             }
         }
         while let Some(s) = sched.pop_suspended() {
+            sched.metrics.requests_failed += 1;
             outputs.push(Self::finish_suspended(s, FinishReason::Failed));
         }
         while let Some(q) = sched.pop_queue() {
+            sched.metrics.requests_failed += 1;
             outputs.push(Self::immediate_output(&q, FinishReason::Failed, n_layer));
         }
         sched.refresh_gauges();
@@ -1710,6 +1861,9 @@ impl Engine {
         let mut sched = std::mem::take(&mut self.sched);
         Self::fail_in_place(&mut sched, self.n_layer, &mut outputs);
         self.sched = sched;
+        for out in &outputs {
+            self.recorder.record(out.id, SpanKind::Retire, out.peak_kv_bytes as u64);
+        }
         outputs
     }
 

@@ -134,6 +134,28 @@
 //! `gather_full_refills`, and `gather_incremental_appends` export through
 //! `SchedulerMetrics`. `--no-resident-scratch` forces the always-refill
 //! baseline (the parity and bench reference).
+//!
+//! ## Observability
+//!
+//! Telemetry rides the same shared-state paths the fault machinery built,
+//! gated by `ServeConfig::trace_level`:
+//!
+//! * Each worker slot owns an `Arc<metrics::FlightRecorder>` — a bounded
+//!   span ring the engine records request lifecycle transitions into
+//!   (`Engine::set_recorder`). It lives on `WorkerShared`, not the engine,
+//!   so it survives the worker thread: `handle_death` dumps the dead
+//!   worker's span history as structured JSON, and the engine dumps on a
+//!   contained `WorkerError` / spent retry budget (`contain_step_error`).
+//! * The worker loop stamps phase-timing summaries (`Engine::phase_json`),
+//!   the per-layer squeeze table (`Engine::squeeze_table_json`), and
+//!   throughput windows (`Engine::throughput_json`) into its
+//!   `WorkerSnapshot` after every step; the router aggregates them into
+//!   `metrics_json` / `metrics_prom` and answers per-request span queries
+//!   (`trace_json`) through each worker's ticket alias table.
+//! * The server exposes it all as wire control lines: `{"metrics": true}`,
+//!   `{"metrics_prom": true}` (Prometheus text 0.0.4), `{"trace": <id>}`,
+//!   and `{"flight_dump": <worker>}` — see `server`'s module doc for the
+//!   exact shapes.
 
 pub mod engine;
 pub mod lifecycle;

@@ -46,7 +46,10 @@
 //! whose drop cancels the request, so abandoned callers release their KV
 //! reservations instead of decoding to `max_new_tokens`. `metrics_json`
 //! exports per-worker scheduler counters, health, and queue/TTFT/ITL latency
-//! summaries plus router-level shed/restart totals.
+//! summaries plus router-level shed/restart totals; `metrics_prom` renders
+//! the same data as Prometheus text exposition, `trace_json` answers
+//! per-request span queries against each worker's flight recorder, and
+//! `last_flight_dump` surfaces the crash report a dead worker left behind.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -56,7 +59,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::config::ServeConfig;
-use crate::metrics::{HistogramSummary, SchedulerMetrics};
+use crate::metrics::{HistogramSummary, PromWriter, SchedulerMetrics};
 use crate::util::Json;
 
 use super::engine::Engine;
@@ -72,15 +75,27 @@ const HEARTBEAT: Duration = Duration::from_millis(50);
 
 /// Per-worker observability snapshot: the scheduler counters plus the
 /// engine's latency histograms (queue wait, time-to-first-token, inter-token
-/// latency) summarized for export, refreshed after every decode step, and
-/// the supervisor's view (health state, restart count) stamped by
-/// `Router::snapshots`.
-#[derive(Debug, Clone, Default)]
+/// latency) summarized for export, the telemetry payloads (step-phase
+/// timing, per-layer squeeze table, throughput window — `Json::Null` when
+/// tracing is off), refreshed after every decode step, and the supervisor's
+/// view (health state, restart count) stamped by `Router::snapshots`.
+#[derive(Debug, Clone)]
 pub struct WorkerSnapshot {
     pub sched: SchedulerMetrics,
     pub queue_latency: HistogramSummary,
     pub ttft: HistogramSummary,
     pub itl: HistogramSummary,
+    /// Step-phase timing summaries (`Engine::phase_json`): seconds per step
+    /// spent in admission/gather/model/verify/evict/commit. Populated at
+    /// `--trace-level full`, `Json::Null` otherwise.
+    pub phases: Json,
+    /// Per-layer squeeze table (`Engine::squeeze_table_json`): cumulative
+    /// evicted rows/bytes per layer plus each active sequence's resolved
+    /// `BudgetPlan` (budgets, groups, cosine layer means).
+    pub squeeze: Json,
+    /// Throughput counters + current-window rates
+    /// (`Engine::throughput_json`).
+    pub throughput: Json,
     /// False when the worker is draining/dead or its metrics mutex is
     /// poisoned (it died mid-publish).
     pub healthy: bool,
@@ -90,6 +105,23 @@ pub struct WorkerSnapshot {
     pub restarts: u64,
 }
 
+impl Default for WorkerSnapshot {
+    fn default() -> Self {
+        Self {
+            sched: SchedulerMetrics::default(),
+            queue_latency: HistogramSummary::default(),
+            ttft: HistogramSummary::default(),
+            itl: HistogramSummary::default(),
+            phases: Json::Null,
+            squeeze: Json::Null,
+            throughput: Json::Null,
+            healthy: false,
+            state: String::new(),
+            restarts: 0,
+        }
+    }
+}
+
 impl WorkerSnapshot {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -97,6 +129,9 @@ impl WorkerSnapshot {
             ("queue_latency_s", self.queue_latency.to_json()),
             ("ttft_s", self.ttft.to_json()),
             ("itl_s", self.itl.to_json()),
+            ("phases", self.phases.clone()),
+            ("squeeze", self.squeeze.clone()),
+            ("throughput", self.throughput.clone()),
             ("healthy", Json::Bool(self.healthy)),
             ("state", Json::str(self.state.clone())),
             ("restarts", Json::num(self.restarts as f64)),
@@ -135,7 +170,7 @@ impl Router {
         let start = Instant::now();
         let mut workers: Vec<Arc<WorkerShared>> = Vec::new();
         for idx in 0..n_workers.max(1) {
-            let shared = Arc::new(WorkerShared::new(start));
+            let shared = Arc::new(WorkerShared::new(start, cfg.trace_level));
             if let Err(e) = supervisor::spawn_worker(idx, shared.clone(), cfg.clone(), start) {
                 for prev in &workers {
                     prev.queue.close();
@@ -361,8 +396,9 @@ impl Router {
 
     /// JSON metrics export: one object per worker (scheduler counters,
     /// queue-latency / time-to-first-token / inter-token-latency summaries,
-    /// health state, restarts) plus router-level gauges and fault totals.
-    /// Served over the wire protocol via a `{"metrics": true}` control line.
+    /// phase timing, squeeze table, throughput, health state, restarts) plus
+    /// router-level gauges and fault totals. Served over the wire protocol
+    /// via a `{"metrics": true}` control line.
     pub fn metrics_json(&self) -> Json {
         Json::obj(vec![
             ("workers", Json::arr(self.snapshots().iter().map(|s| s.to_json()))),
@@ -371,6 +407,103 @@ impl Router {
             ("requests_shed", Json::num(self.requests_shed() as f64)),
             ("worker_restarts", Json::num(self.worker_restarts() as f64)),
         ])
+    }
+
+    /// Span history for one request id, served via `{"trace": <id>}`. Every
+    /// worker's recorder is scanned — the id the caller submitted with
+    /// resolves through the per-worker alias table (ids are rewritten to
+    /// worker-local tickets in flight), so both public ids and raw tickets
+    /// answer. Returns `{"id", "found": false, "spans": []}` when no worker
+    /// retains spans for the id (never recorded, or rotated out of the ring).
+    pub fn trace_json(&self, id: u64) -> Json {
+        for w in &self.workers {
+            let j = w.trace.trace_json(id);
+            if j.get("found").and_then(|v| v.as_bool()) == Some(true) {
+                return j;
+            }
+        }
+        Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("found", Json::Bool(false)),
+            ("spans", Json::Arr(Vec::new())),
+        ])
+    }
+
+    /// The most recent crash flight-recorder dump from worker `i`, if that
+    /// slot ever died (or its engine contained a step fault). `None` for an
+    /// out-of-range index or a worker with no recorded fault.
+    pub fn last_flight_dump(&self, i: usize) -> Option<Json> {
+        self.workers.get(i).and_then(|w| w.trace.last_dump())
+    }
+
+    /// Prometheus text-format exposition (version 0.0.4): every scheduler
+    /// counter per worker, the latency and step-phase histogram summaries,
+    /// per-layer eviction/budget series, throughput rates, and router-level
+    /// totals. Served via a `{"metrics_prom": true}` control line.
+    pub fn metrics_prom(&self) -> String {
+        let mut pw = PromWriter::new();
+        for (i, s) in self.snapshots().iter().enumerate() {
+            let wid = i.to_string();
+            let labels: &[(&str, &str)] = &[("worker", &wid)];
+            pw.json_fields("sa_sched", "gauge", labels, &s.sched.to_json());
+            pw.write("sa_worker_up", "gauge", labels, if s.healthy { 1.0 } else { 0.0 });
+            pw.write("sa_worker_restarted", "counter", labels, s.restarts as f64);
+            pw.summary("sa_queue_latency_s", labels, &s.queue_latency);
+            pw.summary("sa_ttft_s", labels, &s.ttft);
+            pw.summary("sa_itl_s", labels, &s.itl);
+            // Step-phase timing: one series per phase, phase as a label.
+            if let Json::Obj(phases) = &s.phases {
+                for (name, summary) in phases {
+                    let labels: &[(&str, &str)] = &[("worker", &wid), ("phase", name)];
+                    pw.json_fields("sa_step_phase_s", "gauge", labels, summary);
+                }
+            }
+            // Per-layer squeeze series: cumulative eviction work, plus the
+            // live budget heatmap row (budgets summed over active
+            // sequences) — the serving-side view of the paper's Figure 1.
+            if let Some(layers) = s.squeeze.get("layers").and_then(|v| v.as_arr()) {
+                for row in layers {
+                    let Some(layer) = row.get("layer").and_then(|v| v.as_usize()) else {
+                        continue;
+                    };
+                    let lid = layer.to_string();
+                    let labels: &[(&str, &str)] = &[("worker", &wid), ("layer", &lid)];
+                    let rows = row.get("evicted_rows").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    let bytes = row.get("evicted_bytes").and_then(|v| v.as_f64());
+                    pw.write("sa_layer_evicted_rows", "counter", labels, rows);
+                    pw.write("sa_layer_evicted_bytes", "counter", labels, bytes.unwrap_or(0.0));
+                }
+            }
+            if let Some(seqs) = s.squeeze.get("sequences").and_then(|v| v.as_arr()) {
+                pw.write("sa_active_sequences", "gauge", labels, seqs.len() as f64);
+                let mut budgets: Vec<f64> = Vec::new();
+                for sq in seqs {
+                    let Some(bs) = sq.get("budgets").and_then(|v| v.as_arr()) else { continue };
+                    if budgets.len() < bs.len() {
+                        budgets.resize(bs.len(), 0.0);
+                    }
+                    for (l, b) in bs.iter().enumerate() {
+                        if let Some(x) = b.as_f64() {
+                            budgets[l] += x;
+                        }
+                    }
+                }
+                for (l, b) in budgets.iter().enumerate() {
+                    let lid = l.to_string();
+                    let labels: &[(&str, &str)] = &[("worker", &wid), ("layer", &lid)];
+                    pw.write("sa_layer_budget_rows", "gauge", labels, *b);
+                }
+            }
+            pw.json_fields("sa_throughput", "gauge", labels, &s.throughput);
+            if let Some(wd) = s.throughput.get("window") {
+                pw.json_fields("sa_throughput_window", "gauge", labels, wd);
+            }
+        }
+        pw.write("sa_inflight", "gauge", &[], self.inflight() as f64);
+        pw.write("sa_workers", "gauge", &[], self.n_workers() as f64);
+        pw.write("sa_requests_shed", "counter", &[], self.requests_shed() as f64);
+        pw.write("sa_worker_restarts", "counter", &[], self.worker_restarts() as f64);
+        pw.finish()
     }
 }
 
@@ -462,8 +595,25 @@ pub(crate) fn worker_loop(mut engine: Engine, w: Arc<WorkerShared>, start: Insta
             let queue_latency = engine.queue_latency().summary();
             let ttft = engine.ttft_latency().summary();
             let itl = engine.itl_latency().summary();
+            // Telemetry payloads ride along unless tracing is off, keeping
+            // `--trace-level off` snapshots as lean as they were before
+            // telemetry existed (phase summaries are empty below `full`).
+            let (phases, squeeze, throughput) = if engine.recorder().level().spans() {
+                (engine.phase_json(), engine.squeeze_table_json(), engine.throughput_json())
+            } else {
+                (Json::Null, Json::Null, Json::Null)
+            };
             if let Ok(mut m) = w.metrics.lock() {
-                *m = WorkerSnapshot { sched, queue_latency, ttft, itl, ..Default::default() };
+                *m = WorkerSnapshot {
+                    sched,
+                    queue_latency,
+                    ttft,
+                    itl,
+                    phases,
+                    squeeze,
+                    throughput,
+                    ..Default::default()
+                };
             }
         }
         for mut out in outputs {
@@ -509,6 +659,9 @@ fn ingest(engine: &mut Engine, job: Job, w: &WorkerShared) {
             let events = request.events.clone();
             let id = w.ticket.fetch_add(1, Ordering::Relaxed);
             request.id = id;
+            // `{"trace": <caller id>}` must resolve even though the engine
+            // records spans under the worker-local ticket.
+            w.trace.note_alias(id, original_id);
             match engine.submit(request) {
                 Ok(()) => {
                     w.pending_insert(id, PendingJob { reply, original_id, events });

@@ -297,7 +297,12 @@ impl Scheduler {
 
     /// Enqueue at the back; `Err` returns the item when backpressure applies
     /// (cap enforced only for `enforce_cap`, i.e. open-loop submission).
+    /// Every call counts as one submission (`metrics.submitted`), accepted
+    /// or rejected — `requeue_front` re-queues are deliberately not counted,
+    /// which is what keeps the conservation identity on `SchedulerMetrics`
+    /// exact across preemptions and retries.
     pub(crate) fn enqueue(&mut self, q: Queued, enforce_cap: bool) -> Result<(), Queued> {
+        self.metrics.submitted += 1;
         if enforce_cap && self.max_queue > 0 && self.queue.len() >= self.max_queue {
             self.metrics.rejected += 1;
             return Err(q);

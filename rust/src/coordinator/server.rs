@@ -17,8 +17,23 @@
 //!
 //! Control lines:
 //!   -> {"metrics": true}
-//!   <- {"workers": [{scheduler, queue_latency_s, ttft_s, itl_s,
-//!                    healthy, state, restarts}, ...], ...}
+//!   <- {"workers": [{scheduler, queue_latency_s, ttft_s, itl_s, phases,
+//!                    squeeze, throughput, healthy, state, restarts}, ...],
+//!       ...}
+//!   -> {"metrics_prom": true}
+//!   <- {"content_type": "text/plain; version=0.0.4", "body": "..."}
+//!      Prometheus text exposition wrapped in one JSON line — the newlines
+//!      ride escaped inside the "body" string, so the payload stays one
+//!      line on the socket and `body` unescapes to scrapeable text.
+//!   -> {"trace": <request id>}
+//!   <- {"id": N, "found": bool, "spans": [{"id", "kind", "t_ms",
+//!       "kv_bytes"}, ...]} — the request's lifecycle span history (submit
+//!      → admit → prefill → squeeze → first_token → ... → retire) from the
+//!      worker flight recorders, resolved through the id alias table.
+//!   -> {"flight_dump": <worker index>}
+//!   <- the worker's most recent crash report ({"flight_recorder": true,
+//!      "reason", "spans", ...}), or {"flight_dump": N, "found": false}
+//!      when that worker never faulted.
 //!
 //! Load shedding: when the router's admission control rejects a request
 //! (`RouteError::Overloaded`), the connection gets a structured in-order
@@ -183,8 +198,8 @@ fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        if is_metrics_line(&line) {
-            if tx.send(PendingLine::Control(router.metrics_json().to_string())).is_err() {
+        if let Some(c) = parse_control_line(&line) {
+            if tx.send(PendingLine::Control(control_response(c, &router))).is_err() {
                 break;
             }
             continue;
@@ -208,11 +223,64 @@ fn handle(stream: TcpStream, router: Arc<Router>) -> Result<()> {
     Ok(())
 }
 
-fn is_metrics_line(line: &str) -> bool {
-    Json::parse(line)
-        .ok()
-        .and_then(|j| j.get("metrics").and_then(|v| v.as_bool()))
-        == Some(true)
+/// A recognized observability control line (see the module doc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ControlLine {
+    /// `{"metrics": true}` — JSON metrics snapshot.
+    Metrics,
+    /// `{"metrics_prom": true}` — Prometheus text exposition.
+    MetricsProm,
+    /// `{"trace": <id>}` — span history for one request id.
+    Trace(u64),
+    /// `{"flight_dump": <worker>}` — that worker's last crash report.
+    FlightDump(usize),
+}
+
+/// Recognize a control line. `None` means the line is a normal request (or
+/// malformed — the request parser reports that in order).
+fn parse_control_line(line: &str) -> Option<ControlLine> {
+    let j = Json::parse(line).ok()?;
+    if j.get("metrics").and_then(|v| v.as_bool()) == Some(true) {
+        return Some(ControlLine::Metrics);
+    }
+    if j.get("metrics_prom").and_then(|v| v.as_bool()) == Some(true) {
+        return Some(ControlLine::MetricsProm);
+    }
+    if let Some(id) = j.get("trace").and_then(|v| v.as_usize()) {
+        return Some(ControlLine::Trace(id as u64));
+    }
+    if let Some(i) = j.get("flight_dump").and_then(|v| v.as_usize()) {
+        return Some(ControlLine::FlightDump(i));
+    }
+    None
+}
+
+/// Render the in-order response line for a control query.
+fn control_response(c: ControlLine, router: &Router) -> String {
+    match c {
+        ControlLine::Metrics => router.metrics_json().to_string(),
+        ControlLine::MetricsProm => prom_wire_line(&router.metrics_prom()),
+        ControlLine::Trace(id) => router.trace_json(id).to_string(),
+        ControlLine::FlightDump(i) => router
+            .last_flight_dump(i)
+            .unwrap_or_else(|| {
+                Json::obj(vec![
+                    ("flight_dump", Json::num(i as f64)),
+                    ("found", Json::Bool(false)),
+                ])
+            })
+            .to_string(),
+    }
+}
+
+/// Wrap the (multi-line) Prometheus exposition as one JSON wire line: the
+/// JSON string escapes the newlines, keeping the JSON-lines protocol intact.
+pub fn prom_wire_line(body: &str) -> String {
+    Json::obj(vec![
+        ("content_type", Json::str("text/plain; version=0.0.4")),
+        ("body", Json::str(body)),
+    ])
+    .to_string()
 }
 
 /// Writer thread: answer pending lines in order. Once a write fails the
@@ -372,10 +440,26 @@ mod tests {
     }
 
     #[test]
-    fn metrics_line_detection() {
-        assert!(is_metrics_line(r#"{"metrics": true}"#));
-        assert!(!is_metrics_line(r#"{"metrics": false}"#));
-        assert!(!is_metrics_line(r#"{"id": 1, "prompt": []}"#));
-        assert!(!is_metrics_line("{garbage"));
+    fn control_line_detection() {
+        assert_eq!(parse_control_line(r#"{"metrics": true}"#), Some(ControlLine::Metrics));
+        assert_eq!(parse_control_line(r#"{"metrics": false}"#), None);
+        assert_eq!(
+            parse_control_line(r#"{"metrics_prom": true}"#),
+            Some(ControlLine::MetricsProm)
+        );
+        assert_eq!(parse_control_line(r#"{"trace": 7}"#), Some(ControlLine::Trace(7)));
+        assert_eq!(parse_control_line(r#"{"flight_dump": 0}"#), Some(ControlLine::FlightDump(0)));
+        assert_eq!(parse_control_line(r#"{"id": 1, "prompt": []}"#), None);
+        assert_eq!(parse_control_line("{garbage"), None);
+    }
+
+    #[test]
+    fn prom_wire_line_stays_single_line() {
+        let body = "# TYPE sa_up gauge\nsa_up 1\n";
+        let line = prom_wire_line(body);
+        assert!(!line.contains('\n'));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("body").unwrap().as_str(), Some(body));
+        assert!(j.get("content_type").unwrap().as_str().unwrap().contains("0.0.4"));
     }
 }

@@ -50,6 +50,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::ServeConfig;
+use crate::metrics::{FlightRecorder, TraceLevel};
 use crate::squeeze::BudgetPlan;
 
 use super::engine::Engine;
@@ -272,11 +273,18 @@ pub(crate) struct WorkerShared {
     /// Worker-local ticket counter; atomic so it stays monotonic across
     /// respawns (a stale in-flight ticket must never collide with a new one).
     pub ticket: AtomicU64,
+    /// Span ring shared with this slot's engine (`Engine::set_recorder`).
+    /// Living here rather than inside the engine, it survives the worker
+    /// thread's death — the supervisor dumps the dead worker's last spans
+    /// from it, and `{"trace": <id>}` queries keep answering across a
+    /// respawn. Ticket→public-id aliases recorded at ingest let callers
+    /// query by the id they submitted with.
+    pub trace: Arc<FlightRecorder>,
     thread: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl WorkerShared {
-    pub fn new(start: Instant) -> Self {
+    pub fn new(start: Instant, trace_level: TraceLevel) -> Self {
         let s = Self {
             queue: WorkerQueue::new(),
             pending: Mutex::new(HashMap::new()),
@@ -286,6 +294,7 @@ impl WorkerShared {
             last_beat_ms: AtomicU64::new(0),
             restarts: AtomicU64::new(0),
             ticket: AtomicU64::new(0),
+            trace: Arc::new(FlightRecorder::with_level(trace_level)),
             thread: Mutex::new(None),
         };
         s.beat(start);
@@ -449,7 +458,10 @@ pub(crate) fn spawn_worker(
     let handle = std::thread::Builder::new()
         .name(format!("sa-worker-{idx}"))
         .spawn(move || match Engine::new(cfg) {
-            Ok(engine) => {
+            Ok(mut engine) => {
+                // The engine records spans into the slot's shared ring so
+                // they outlive this thread (crash flight recorder).
+                engine.set_recorder(shared2.trace.clone());
                 let _ = ready_tx.send(Ok(()));
                 let mut guard = LivenessGuard::new(shared2.clone());
                 worker_loop(engine, shared2, start);
@@ -503,8 +515,21 @@ pub(crate) fn supervise(ctx: SupervisorCtx) {
 /// `WorkerError` terminal instead of stranding in a queue nobody reads.
 fn handle_death(idx: usize, w: &Arc<WorkerShared>, ctx: &SupervisorCtx) {
     // Reap the dead thread so the slot can be respawned.
-    if let Some(h) = w.thread_take() {
+    let reaped = if let Some(h) = w.thread_take() {
         let _ = h.join(); // Err carries the panic payload; already reported
+        true
+    } else {
+        false
+    };
+
+    // Crash flight recorder: on the first pass over a fresh corpse (this
+    // function re-enters every tick while the slot stays Dead), dump the
+    // worker's last spans as structured JSON. The dump is also retained on
+    // the recorder (`last_flight_dump` wire query) for post-mortems that
+    // outlive stderr.
+    if reaped && w.trace.level().spans() {
+        let dump = w.trace.dump("worker_death");
+        eprintln!("worker {idx}: flight recorder: {dump}");
     }
 
     // 1. Fail in-flight: requests inside the engine died with it. Each gets
@@ -594,7 +619,7 @@ mod tests {
     #[test]
     fn liveness_guard_marks_dead_only_when_armed() {
         let start = Instant::now();
-        let w = Arc::new(WorkerShared::new(start));
+        let w = Arc::new(WorkerShared::new(start, TraceLevel::Spans));
         {
             let mut g = LivenessGuard::new(w.clone());
             g.disarm();

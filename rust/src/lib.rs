@@ -178,6 +178,39 @@
 //! and `faults_injected` export through [`metrics::SchedulerMetrics`] and
 //! `Router::metrics_json`.
 //!
+//! ## Observability (trace spans, phase timing, squeeze introspection)
+//!
+//! Telemetry is layered on the same serving stack, gated by
+//! `ServeConfig::trace_level` (`--trace-level {off,spans,full}`; `off`
+//! costs one enum compare per would-be event):
+//!
+//! * **Trace spans** ([`metrics::FlightRecorder`]) — every request
+//!   lifecycle transition (submit → admit → prefill → squeeze →
+//!   first_token → suspend/resume/retry → retire) records a
+//!   [`metrics::SpanEvent`] with a monotonic timestamp and the request's
+//!   KV bytes at that moment into a bounded per-worker ring. Queryable live via the
+//!   `{"trace": <id>}` wire control line (caller ids resolve through the
+//!   router's ticket alias table).
+//! * **Crash flight recorder** — the ring lives on the worker's shared
+//!   state, not the engine, so it survives the engine thread. On a worker
+//!   death, a contained `WorkerError`, or retry-budget exhaustion the ring
+//!   is dumped as structured JSON (reason + full span history), printed to
+//!   stderr and retained for the `{"flight_dump": <worker>}` control line.
+//! * **Step-phase timing** (`--trace-level full`) — `Engine::step` is split
+//!   into admission / gather / model / verify / evict / commit phases
+//!   ([`metrics::StepPhase`]), each accumulated per step into reservoir
+//!   histograms ([`metrics::PhaseTimers`]) answering "where does a decode
+//!   millisecond go".
+//! * **Per-layer squeeze introspection** ([`metrics::LayerTable`]) — each
+//!   admitted sequence's resolved `BudgetPlan` (per-layer budgets, group
+//!   assignment, cosine layer means) plus cumulative per-layer evicted
+//!   rows/KV-bytes form a layer-indexed table: the live-server
+//!   reconstruction of the paper's Figure-1 budget heatmap.
+//! * **Prometheus exposition** ([`metrics::PromWriter`]) — the
+//!   `{"metrics_prom": true}` control line renders every scheduler counter,
+//!   latency/phase summary, per-layer series, and throughput window as
+//!   text-format 0.0.4, wrapped in one JSON wire line.
+//!
 //! Quickstart (runs on the simulated backend — no artifacts needed):
 //! ```
 //! use squeezeattention::config::ServeConfig;

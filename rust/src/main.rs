@@ -64,6 +64,11 @@ ENGINE FLAGS (serve/generate)
                        \"deadline\" keeping its partial output
                        (a request's own deadline_ms overrides;
                        0 = no deadline)                        [0]
+  --trace-level L      off|spans|full — telemetry recorded on
+                       the hot path: \"spans\" keeps lifecycle
+                       trace spans + the crash flight recorder,
+                       \"full\" adds per-phase step timing,
+                       \"off\" records nothing               [spans]
 
 FAULT TOLERANCE (serve/generate; injection is sim:// only)
   --fault-step-error-rate F
@@ -96,6 +101,11 @@ WIRE PROTOCOL (serve)
   optional: \"stream\": true   one {\"id\",\"token\",\"pos\"} line per token
             \"deadline_ms\": N per-request deadline
   -> {\"metrics\": true}       per-worker scheduler + latency snapshot
+  -> {\"metrics_prom\": true}  Prometheus text exposition, wrapped as
+                             {\"content_type\", \"body\"} on one line
+  -> {\"trace\": ID}           span history for request ID (lifecycle
+                             transitions with timestamps + KV bytes)
+  -> {\"flight_dump\": W}      worker W's last crash flight-recorder dump
   client disconnect cancels that connection's in-flight requests.
 ";
 
@@ -143,6 +153,10 @@ fn engine_config(args: &Args) -> Result<ServeConfig> {
     if let Some(k) = args.opt_str("spec-k") {
         let k: usize = k.parse().map_err(|_| anyhow!("--spec-k expects an integer, got {k}"))?;
         cfg = cfg.with_spec_k(k);
+    }
+    if let Some(t) = args.opt_str("trace-level") {
+        cfg.trace_level = squeezeattention::metrics::TraceLevel::parse(&t)
+            .ok_or_else(|| anyhow!("--trace-level expects off|spans|full, got {t}"))?;
     }
     Ok(cfg)
 }

@@ -1,0 +1,247 @@
+//! Prometheus text-format exposition (version 0.0.4) for the serving
+//! metrics: every `SchedulerMetrics` counter, the latency/phase histogram
+//! summaries, throughput windows, and the per-layer squeeze series.
+//!
+//! [`PromWriter`] buffers samples per metric name and emits them grouped
+//! under a single `# TYPE` header in `finish()` — the format requires all
+//! samples of one metric to be contiguous, which a naive per-worker loop
+//! would violate. Callers feed it JSON snapshots the metrics types already
+//! produce (`json_fields` exports every numeric field of an object), so a
+//! counter added to `SchedulerMetrics::to_json` shows up in the exposition
+//! without touching this file.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::Json;
+
+use super::histogram::HistogramSummary;
+
+/// Sample-buffering Prometheus text writer.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    // metric name -> (type, sample lines in insertion order)
+    metrics: BTreeMap<String, (&'static str, Vec<String>)>,
+}
+
+/// Restrict a metric name to the Prometheus charset `[a-zA-Z0-9_:]`.
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' }).collect()
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render an f64 the way our JSON does: integral values without the
+/// fraction, everything else via the shortest float form.
+fn format_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer one sample. Non-finite values are skipped (empty histograms
+    /// summarize to NaN; absent beats NaN for every scraper).
+    pub fn write(&mut self, name: &str, kind: &'static str, labels: &[(&str, &str)], v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let name = sanitize(name);
+        let mut line = name.clone();
+        if !labels.is_empty() {
+            line.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    line.push(',');
+                }
+                let _ = write!(line, "{}=\"{}\"", sanitize(k), escape_label(val));
+            }
+            line.push('}');
+        }
+        let _ = write!(line, " {}", format_value(v));
+        self.metrics.entry(name).or_insert_with(|| (kind, Vec::new())).1.push(line);
+    }
+
+    /// Export every numeric field of a JSON object as `{prefix}_{key}`.
+    /// Non-numeric fields are ignored.
+    pub fn json_fields(
+        &mut self,
+        prefix: &str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        obj: &Json,
+    ) {
+        if let Json::Obj(m) = obj {
+            for (k, v) in m {
+                if let Some(n) = v.as_f64() {
+                    self.write(&format!("{prefix}_{k}"), kind, labels, n);
+                }
+            }
+        }
+    }
+
+    /// Export a histogram summary as `{name}_{count,mean,p50,p95,p99,max}`.
+    pub fn summary(&mut self, name: &str, labels: &[(&str, &str)], s: &HistogramSummary) {
+        self.write(&format!("{name}_count"), "gauge", labels, s.count as f64);
+        self.write(&format!("{name}_mean"), "gauge", labels, s.mean);
+        self.write(&format!("{name}_p50"), "gauge", labels, s.p50);
+        self.write(&format!("{name}_p95"), "gauge", labels, s.p95);
+        self.write(&format!("{name}_p99"), "gauge", labels, s.p99);
+        self.write(&format!("{name}_max"), "gauge", labels, s.max);
+    }
+
+    /// Render the exposition: per metric, one `# TYPE` header then all its
+    /// samples, metrics in name order.
+    pub fn finish(self) -> String {
+        let mut out = String::new();
+        for (name, (kind, lines)) in self.metrics {
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            for l in lines {
+                out.push_str(&l);
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Structural check that `text` is well-formed exposition output: every
+/// non-comment line is `name[{labels}] value` with a parseable value, and
+/// samples stay grouped under their `# TYPE` header. Used by the wire tests
+/// to assert the `{"metrics_prom": true}` payload is scrapeable.
+pub fn is_well_formed_prometheus(text: &str) -> bool {
+    let mut seen_types: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (Some(name), Some(_kind), None) = (it.next(), it.next(), it.next()) else {
+                return false;
+            };
+            if seen_types.iter().any(|n| n == name) {
+                return false; // duplicate TYPE header — samples not grouped
+            }
+            seen_types.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // other comments are legal
+        }
+        // name[{labels}] value
+        let (head, value) = match line.rsplit_once(' ') {
+            Some(x) => x,
+            None => return false,
+        };
+        if value.parse::<f64>().is_err() {
+            return false;
+        }
+        let name = head.split('{').next().unwrap_or("");
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return false;
+        }
+        if head.contains('{') && !head.ends_with('}') {
+            return false;
+        }
+        // samples must appear under the most recent TYPE for their name
+        match seen_types.last() {
+            Some(current) if name.starts_with(current.as_str()) || current == name => {}
+            _ => return false,
+        }
+    }
+    !seen_types.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SchedulerMetrics;
+    use super::*;
+
+    #[test]
+    fn groups_samples_under_one_type_header() {
+        let mut w = PromWriter::new();
+        w.write("sa_up", "gauge", &[("worker", "0")], 1.0);
+        w.write("sa_up", "gauge", &[("worker", "1")], 1.0);
+        w.write("sa_steps", "counter", &[("worker", "0")], 42.0);
+        let text = w.finish();
+        assert_eq!(text.matches("# TYPE sa_up gauge").count(), 1);
+        assert!(text.contains("sa_up{worker=\"0\"} 1"));
+        assert!(text.contains("sa_up{worker=\"1\"} 1"));
+        assert!(text.contains("sa_steps{worker=\"0\"} 42"));
+        assert!(is_well_formed_prometheus(&text));
+    }
+
+    #[test]
+    fn every_scheduler_counter_exported() {
+        let m = SchedulerMetrics { steps: 7, completed: 3, ..Default::default() };
+        let j = m.to_json();
+        let n_fields = match &j {
+            Json::Obj(m) => m.len(),
+            _ => 0,
+        };
+        let mut w = PromWriter::new();
+        w.json_fields("sa_sched", "gauge", &[("worker", "0")], &j);
+        let text = w.finish();
+        let samples = text.lines().filter(|l| !l.starts_with('#')).count();
+        assert_eq!(samples, n_fields);
+        assert!(text.contains("sa_sched_steps{worker=\"0\"} 7"));
+        assert!(text.contains("sa_sched_completed{worker=\"0\"} 3"));
+        assert!(is_well_formed_prometheus(&text));
+    }
+
+    #[test]
+    fn skips_non_finite_and_escapes_labels() {
+        let mut w = PromWriter::new();
+        w.write("sa_nan", "gauge", &[], f64::NAN);
+        w.write("sa ok", "gauge", &[("state", "he\"llo\n")], 2.5);
+        let text = w.finish();
+        assert!(!text.contains("sa_nan"));
+        assert!(text.contains("sa_ok{state=\"he\\\"llo\\n\"} 2.5"));
+        assert!(is_well_formed_prometheus(&text));
+    }
+
+    #[test]
+    fn summary_export() {
+        let s = HistogramSummary { count: 3, mean: 0.5, p50: 0.4, p95: 0.9, p99: 0.9, max: 1.0 };
+        let mut w = PromWriter::new();
+        w.summary("sa_ttft_s", &[("worker", "0")], &s);
+        let text = w.finish();
+        assert!(text.contains("sa_ttft_s_count{worker=\"0\"} 3"));
+        assert!(text.contains("sa_ttft_s_p95{worker=\"0\"} 0.9"));
+        // empty summaries (NaN quantiles) drop the sample, keep the count
+        let mut w = PromWriter::new();
+        w.summary("sa_itl_s", &[], &HistogramSummary::default());
+        let text = w.finish();
+        assert!(text.contains("sa_itl_s_count 0"));
+        assert!(!text.contains("sa_itl_s_p95"));
+    }
+
+    #[test]
+    fn validator_rejects_garbage() {
+        assert!(!is_well_formed_prometheus(""));
+        assert!(!is_well_formed_prometheus("no type header 1"));
+        assert!(!is_well_formed_prometheus("# TYPE a gauge\na notanumber"));
+        assert!(!is_well_formed_prometheus("# TYPE a gauge\na 1\n# TYPE a gauge\na 2"));
+    }
+}

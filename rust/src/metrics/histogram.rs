@@ -1,18 +1,47 @@
-//! Simple exact-quantile latency histogram (stores samples; serving runs in
-//! this repo are small enough that exactness beats sketching).
+//! Bounded latency histogram: exact quantiles below a sample cap, uniform
+//! reservoir sampling (Vitter's Algorithm R, deterministic RNG) above it.
 //!
 //! The engine keeps one of these for per-request queue latency — the time a
 //! request spent waiting for a decode slot, *including* time suspended in
 //! the host tier after a preemption (accounted from the preserved
 //! `t_submit`). `HistogramSummary` is the exportable view (bench reports,
 //! experiment logs).
+//!
+//! Memory is bounded at `cap` samples regardless of uptime; `count`, `mean`
+//! and `max` stay exact over all recorded samples (running accumulators),
+//! only the quantiles turn into reservoir estimates past the cap.
+//! Non-finite samples are rejected at `record()` and counted in `dropped`
+//! instead of poisoning the sort (quantile sorting uses `f64::total_cmp`,
+//! which is total even if a NaN ever slipped in).
 
 use crate::util::Json;
+use crate::util::Rng;
 
-#[derive(Debug, Clone, Default)]
+/// Default reservoir capacity: plenty for exact quantiles on bench-sized
+/// runs while bounding a long-lived server's per-histogram memory to ~64 KiB.
+pub const DEFAULT_SAMPLE_CAP: usize = 8192;
+
+#[derive(Debug, Clone)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
+    cap: usize,
+    /// Total finite samples ever recorded (may exceed `samples.len()`).
+    count: u64,
+    /// Running sum over all finite samples — exact mean past the cap.
+    sum: f64,
+    /// Running max over all finite samples — exact even if the reservoir
+    /// evicts the extreme.
+    running_max: f64,
+    /// Non-finite samples rejected at `record()`.
+    dropped: u64,
+    rng: Rng,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Point-in-time quantile summary of a histogram (for reports and JSON
@@ -43,37 +72,79 @@ impl HistogramSummary {
 
 impl Histogram {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_cap(DEFAULT_SAMPLE_CAP)
+    }
+
+    /// A histogram holding at most `cap` samples; quantiles are exact until
+    /// `cap` samples have been recorded, reservoir estimates after.
+    pub fn with_cap(cap: usize) -> Self {
+        Self {
+            samples: Vec::new(),
+            sorted: false,
+            cap: cap.max(1),
+            count: 0,
+            sum: 0.0,
+            running_max: f64::NEG_INFINITY,
+            dropped: 0,
+            rng: Rng::seed_from_u64(0x4849_5354),
+        }
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
-        self.sorted = false;
+        if !v.is_finite() {
+            self.dropped += 1;
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        if v > self.running_max {
+            self.running_max = v;
+        }
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+            self.sorted = false;
+        } else {
+            // Algorithm R: item `count` replaces a reservoir slot with
+            // probability cap/count, keeping the reservoir uniform.
+            let j = (self.rng.next_u64() % self.count) as usize;
+            if j < self.cap {
+                self.samples[j] = v;
+                self.sorted = false;
+            }
+        }
     }
 
+    /// Total finite samples recorded (not the reservoir size).
     pub fn len(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.count == 0
     }
 
+    /// Non-finite samples rejected at `record()`.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Exact mean over all recorded samples (running sum, not the reservoir).
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return f64::NAN;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.count as f64
     }
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.samples.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
 
-    /// Quantile in [0,1] via nearest-rank.
+    /// Quantile in [0,1] via nearest-rank over the retained samples (exact
+    /// below the cap, reservoir estimate above it).
     pub fn quantile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -96,8 +167,12 @@ impl Histogram {
         self.quantile(0.99)
     }
 
+    /// Exact max over all recorded samples.
     pub fn max(&mut self) -> f64 {
-        self.quantile(1.0)
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.running_max
     }
 
     pub fn summary(&mut self) -> HistogramSummary {
@@ -159,5 +234,68 @@ mod tests {
         // empty histogram: NaNs serialize as null, not invalid JSON
         let j = Histogram::new().summary().to_json();
         assert!(matches!(j.get("mean"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn non_finite_rejected_not_panicking() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        h.record(1.0);
+        assert_eq!(h.dropped(), 3);
+        assert_eq!(h.len(), 1);
+        // quantile path must not panic even with rejects interleaved
+        assert_eq!(h.p50(), 1.0);
+        assert!((h.mean() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_bounded_above_cap() {
+        let mut h = Histogram::with_cap(64);
+        for i in 0..10_000 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.samples.len(), 64);
+        assert_eq!(h.len(), 10_000);
+        // mean and max stay exact past the cap
+        assert!((h.mean() - 4999.5).abs() < 1e-9);
+        assert_eq!(h.max(), 9999.0);
+    }
+
+    #[test]
+    fn reservoir_quantiles_approximate_uniform() {
+        let mut h = Histogram::with_cap(512);
+        for i in 0..100_000 {
+            h.record(i as f64);
+        }
+        // Uniform 0..100k: p50 ≈ 50k. A 512-slot reservoir's nearest-rank
+        // p50 has stderr ≈ n / (2*sqrt(cap)) ≈ 2.2k; allow 5 sigma.
+        assert!((h.p50() - 50_000.0).abs() < 12_000.0, "p50 {}", h.p50());
+        assert!(h.p95() > 85_000.0);
+    }
+
+    #[test]
+    fn deterministic_reservoir() {
+        let mk = || {
+            let mut h = Histogram::with_cap(32);
+            for i in 0..5_000 {
+                h.record((i * 7 % 997) as f64);
+            }
+            h.summary()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.p50, b.p50);
+        assert_eq!(a.p99, b.p99);
+    }
+
+    #[test]
+    fn exact_below_cap() {
+        let mut h = Histogram::with_cap(128);
+        for i in 1..=128 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.p50(), 64.0);
+        assert_eq!(h.max(), 128.0);
     }
 }

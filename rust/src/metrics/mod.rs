@@ -1,11 +1,19 @@
 //! Serving metrics: latency histograms, throughput counters, memory peaks,
-//! and the continuous-batching scheduler's queue/occupancy/preemption
-//! counters.
+//! the continuous-batching scheduler's queue/occupancy/preemption counters,
+//! request trace spans + the crash flight recorder, and the Prometheus
+//! text exposition.
 
+mod export;
 mod histogram;
 mod scheduler;
 mod throughput;
+mod trace;
 
+pub use export::{is_well_formed_prometheus, PromWriter};
 pub use histogram::{Histogram, HistogramSummary};
 pub use scheduler::SchedulerMetrics;
-pub use throughput::ThroughputMeter;
+pub use throughput::{RateWindow, ThroughputMeter};
+pub use trace::{
+    FlightRecorder, LayerTable, PhaseAcc, PhaseTimers, SpanEvent, SpanKind, StepPhase, TraceLevel,
+    DEFAULT_RING_CAP, STEP_PHASES,
+};

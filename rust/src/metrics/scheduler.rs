@@ -25,6 +25,12 @@ pub struct SchedulerMetrics {
     /// Sum over steps of the number of sequences in that step's batch
     /// (mean occupancy = occupancy_sum / steps).
     pub occupancy_sum: u64,
+    /// Requests handed to this engine (accepted into the queue *or*
+    /// rejected at submission). The conservation identity
+    /// `submitted == completed + cancelled + deadline_exceeded +
+    /// oom_failures + requests_failed + rejected + in-flight` holds at
+    /// every step boundary — `tests/metrics_conservation.rs` pins it.
+    pub submitted: u64,
     /// Requests admitted into a decode slot (includes re-admissions).
     pub admitted: u64,
     /// Admission attempts skipped because the KV pool lacked headroom.
@@ -129,6 +135,12 @@ pub struct SchedulerMetrics {
     /// Sequences re-queued (suspend or restart) after a contained worker
     /// fault, bounded by the per-request retry budget.
     pub requests_retried: u64,
+    /// Requests retired abnormally by an engine fault: `WorkerError`
+    /// (retry budget exhausted) or `Failed` (uncontained step error).
+    /// Distinct from `worker_errors`, which counts faulted *batches* —
+    /// a contained fault whose retries succeed bumps `worker_errors`
+    /// without ever bumping this.
+    pub requests_failed: u64,
     /// Requests the router rejected with `Overloaded` before they reached
     /// this engine (stamped by the router into its per-worker snapshot).
     pub requests_shed: u64,
@@ -198,6 +210,7 @@ impl SchedulerMetrics {
             ("peak_occupancy", Json::num(self.peak_occupancy as f64)),
             ("steps", Json::num(self.steps as f64)),
             ("mean_occupancy", Json::num(self.mean_occupancy())),
+            ("submitted", Json::num(self.submitted as f64)),
             ("admitted", Json::num(self.admitted as f64)),
             ("deferred_admissions", Json::num(self.deferred_admissions as f64)),
             ("preemptions", Json::num(self.preemptions as f64)),
@@ -234,6 +247,7 @@ impl SchedulerMetrics {
             ("scratch_tiers_evicted", Json::num(self.scratch_tiers_evicted as f64)),
             ("worker_errors", Json::num(self.worker_errors as f64)),
             ("requests_retried", Json::num(self.requests_retried as f64)),
+            ("requests_failed", Json::num(self.requests_failed as f64)),
             ("requests_shed", Json::num(self.requests_shed as f64)),
             ("faults_injected", Json::num(self.faults_injected as f64)),
             ("worker_restarts", Json::num(self.worker_restarts as f64)),

@@ -1,6 +1,13 @@
 //! Token/request throughput accounting over a wall-clock window.
+//!
+//! Lifetime rates (`tokens_per_s`) are computed since construction, which
+//! flattens to a meaningless long-run average over server uptimes; the
+//! windowed view (`since_last_snapshot`) reports rates over the interval
+//! since the previous snapshot so a live exporter sees current load.
 
 use std::time::Instant;
+
+use crate::util::Json;
 
 #[derive(Debug, Clone)]
 pub struct ThroughputMeter {
@@ -8,6 +15,43 @@ pub struct ThroughputMeter {
     tokens: u64,
     requests: u64,
     decode_steps: u64,
+    // Anchor of the current rate window (see `since_last_snapshot`).
+    snap_at: Instant,
+    snap_tokens: u64,
+    snap_requests: u64,
+    snap_decode_steps: u64,
+}
+
+/// Counter deltas and rates over one snapshot interval.
+#[derive(Debug, Clone, Copy)]
+pub struct RateWindow {
+    /// Interval length in seconds (since the previous snapshot, or since
+    /// construction for the first one).
+    pub window_s: f64,
+    pub tokens: u64,
+    pub requests: u64,
+    pub decode_steps: u64,
+}
+
+impl RateWindow {
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.window_s.max(1e-9)
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.requests as f64 / self.window_s.max(1e-9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("window_s", Json::num(self.window_s)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("tokens_per_s", Json::num(self.tokens_per_s())),
+            ("requests_per_s", Json::num(self.requests_per_s())),
+        ])
+    }
 }
 
 impl Default for ThroughputMeter {
@@ -18,7 +62,17 @@ impl Default for ThroughputMeter {
 
 impl ThroughputMeter {
     pub fn new() -> Self {
-        Self { start: Instant::now(), tokens: 0, requests: 0, decode_steps: 0 }
+        let now = Instant::now();
+        Self {
+            start: now,
+            tokens: 0,
+            requests: 0,
+            decode_steps: 0,
+            snap_at: now,
+            snap_tokens: 0,
+            snap_requests: 0,
+            snap_decode_steps: 0,
+        }
     }
 
     pub fn add_tokens(&mut self, n: u64) {
@@ -49,13 +103,45 @@ impl ThroughputMeter {
         self.start.elapsed().as_secs_f64()
     }
 
-    /// Generated tokens per second since construction.
+    /// Generated tokens per second since construction (lifetime average).
     pub fn tokens_per_s(&self) -> f64 {
         self.tokens as f64 / self.elapsed_s().max(1e-9)
     }
 
     pub fn requests_per_s(&self) -> f64 {
         self.requests as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    /// Counter deltas since the previous call (or construction), then
+    /// re-anchors the window. Call at the exporter's cadence to get current
+    /// rates instead of the lifetime average.
+    pub fn since_last_snapshot(&mut self) -> RateWindow {
+        let now = Instant::now();
+        let w = RateWindow {
+            window_s: now.duration_since(self.snap_at).as_secs_f64(),
+            tokens: self.tokens - self.snap_tokens,
+            requests: self.requests - self.snap_requests,
+            decode_steps: self.decode_steps - self.snap_decode_steps,
+        };
+        self.snap_at = now;
+        self.snap_tokens = self.tokens;
+        self.snap_requests = self.requests;
+        self.snap_decode_steps = self.decode_steps;
+        w
+    }
+
+    /// Lifetime + current-window rates as one JSON object.
+    pub fn to_json(&mut self) -> Json {
+        let window = self.since_last_snapshot();
+        Json::obj(vec![
+            ("tokens", Json::num(self.tokens as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s())),
+            ("tokens_per_s", Json::num(self.tokens_per_s())),
+            ("requests_per_s", Json::num(self.requests_per_s())),
+            ("window", window.to_json()),
+        ])
     }
 }
 
@@ -74,5 +160,36 @@ mod tests {
         assert_eq!(m.requests(), 1);
         assert_eq!(m.decode_steps(), 1);
         assert!(m.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn window_resets_but_lifetime_accumulates() {
+        let mut m = ThroughputMeter::new();
+        m.add_tokens(10);
+        m.add_request();
+        let w1 = m.since_last_snapshot();
+        assert_eq!(w1.tokens, 10);
+        assert_eq!(w1.requests, 1);
+        m.add_tokens(7);
+        let w2 = m.since_last_snapshot();
+        assert_eq!(w2.tokens, 7);
+        assert_eq!(w2.requests, 0);
+        // lifetime counters unaffected by snapshots
+        assert_eq!(m.tokens(), 17);
+        assert_eq!(m.requests(), 1);
+        // an idle window reports zero
+        let w3 = m.since_last_snapshot();
+        assert_eq!(w3.tokens, 0);
+    }
+
+    #[test]
+    fn window_json_shape() {
+        let mut m = ThroughputMeter::new();
+        m.add_tokens(4);
+        let j = m.to_json();
+        assert_eq!(j.get("tokens").unwrap().as_usize(), Some(4));
+        let w = j.get("window").unwrap();
+        assert_eq!(w.get("tokens").unwrap().as_usize(), Some(4));
+        assert!(w.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -1,0 +1,587 @@
+//! Request trace spans, step-phase timers, per-layer squeeze introspection,
+//! and the crash flight recorder.
+//!
+//! Three cooperating pieces, all bounded and allocation-light on the hot
+//! path:
+//!
+//! - [`FlightRecorder`] — a preallocated ring buffer of [`SpanEvent`]s, one
+//!   per request lifecycle transition (submit → admit → prefill → squeeze →
+//!   first token → suspend/resume/retry → retire), each stamped with a
+//!   monotonic timestamp and the request's KV bytes at that moment. It is
+//!   shared (`Arc`) between the engine thread that records and the
+//!   router/supervisor threads that query (`{"trace": <id>}`) or dump it
+//!   when a worker dies. Recording at [`TraceLevel::Off`] is a single enum
+//!   compare — no lock, no clock read.
+//! - [`PhaseTimers`] — per-phase histograms ([`StepPhase`]: admission /
+//!   gather / model / verify / evict / commit) answering "where does a
+//!   decode millisecond go". Engine-owned, recorded only at
+//!   [`TraceLevel::Full`] (two `Instant::now()` reads per phase per step).
+//! - [`LayerTable`] — cumulative per-layer evicted rows / KV bytes, the
+//!   live-server reconstruction of the paper's Figure-1 heatmap when joined
+//!   with each active sequence's `BudgetPlan` (budgets, groups, cosine layer
+//!   means). Always on: it costs two array adds on an eviction event that
+//!   already rewrites the cache.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::Json;
+
+use super::histogram::{Histogram, HistogramSummary};
+
+/// How much telemetry the hot path records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum TraceLevel {
+    /// No spans, no phase timers. Costs one enum compare per would-be event.
+    Off,
+    /// Lifecycle spans + flight recorder (per-transition, not per-token).
+    #[default]
+    Spans,
+    /// Spans plus per-phase step timing (clock reads inside `Engine::step`).
+    Full,
+}
+
+impl TraceLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Spans => "spans",
+            TraceLevel::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "off" => Some(TraceLevel::Off),
+            "spans" => Some(TraceLevel::Spans),
+            "full" => Some(TraceLevel::Full),
+            _ => None,
+        }
+    }
+
+    /// Lifecycle spans recorded?
+    pub fn spans(&self) -> bool {
+        *self >= TraceLevel::Spans
+    }
+
+    /// Step-phase timers recorded?
+    pub fn full(&self) -> bool {
+        *self >= TraceLevel::Full
+    }
+}
+
+/// A request lifecycle transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request entered the engine queue.
+    Submit,
+    /// Request left the queue for a decode slot.
+    Admit,
+    /// Prompt prefill finished.
+    Prefill,
+    /// Layer budgets resolved (SqueezeAttention allocation or uniform).
+    Squeeze,
+    /// First generated token committed.
+    FirstToken,
+    /// Sequence swapped out to the host tier (or restart-requeued).
+    Suspend,
+    /// Suspended sequence swapped back in, decode continuing.
+    Resume,
+    /// Sequence re-queued after a contained worker fault.
+    Retry,
+    /// Request retired (any terminal `FinishReason`).
+    Retire,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Submit => "submit",
+            SpanKind::Admit => "admit",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Squeeze => "squeeze",
+            SpanKind::FirstToken => "first_token",
+            SpanKind::Suspend => "suspend",
+            SpanKind::Resume => "resume",
+            SpanKind::Retry => "retry",
+            SpanKind::Retire => "retire",
+        }
+    }
+}
+
+/// One recorded lifecycle transition.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    /// Request id as the recording engine sees it (the worker-local ticket
+    /// behind a router; the caller's id in direct-engine use — see the
+    /// recorder's alias table).
+    pub id: u64,
+    pub kind: SpanKind,
+    /// Monotonic milliseconds since the recorder's epoch.
+    pub t_ms: f64,
+    /// KV bytes attributed to the request at this transition (0 where no
+    /// cache exists yet, e.g. submit).
+    pub kv_bytes: u64,
+}
+
+impl SpanEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("t_ms", Json::num(self.t_ms)),
+            ("kv_bytes", Json::num(self.kv_bytes as f64)),
+        ])
+    }
+}
+
+/// Default flight-recorder depth (events, not requests).
+pub const DEFAULT_RING_CAP: usize = 1024;
+/// Bounded local-ticket → public-id alias history.
+const ALIAS_CAP: usize = 1024;
+
+struct RecorderInner {
+    /// Preallocated ring; `head` is the next write slot, `ring.len() <= cap`.
+    ring: Vec<SpanEvent>,
+    cap: usize,
+    head: usize,
+    /// Events ever recorded (ring overwrites don't forget the count).
+    total: u64,
+    /// (engine-local id, public id) pairs, newest last, bounded.
+    aliases: Vec<(u64, u64)>,
+    /// Most recent crash dump, kept for post-mortem queries.
+    last_dump: Option<Json>,
+}
+
+/// Shared span ring: engine threads record, router/supervisor threads query
+/// and dump. All methods are `&self`; a poisoned lock (worker panic) is
+/// recovered, never propagated — the recorder must stay readable exactly
+/// when things crash.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    level: TraceLevel,
+    epoch: Instant,
+    inner: Mutex<RecorderInner>,
+}
+
+impl std::fmt::Debug for RecorderInner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RecorderInner")
+            .field("len", &self.ring.len())
+            .field("total", &self.total)
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(level: TraceLevel, cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            level,
+            epoch: Instant::now(),
+            inner: Mutex::new(RecorderInner {
+                ring: Vec::with_capacity(cap),
+                cap,
+                head: 0,
+                total: 0,
+                aliases: Vec::with_capacity(ALIAS_CAP.min(cap)),
+                last_dump: None,
+            }),
+        }
+    }
+
+    pub fn with_level(level: TraceLevel) -> Self {
+        Self::new(level, DEFAULT_RING_CAP)
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RecorderInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Milliseconds since the recorder's epoch (monotonic).
+    pub fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Record one lifecycle transition. No-op (one enum compare) at
+    /// [`TraceLevel::Off`].
+    pub fn record(&self, id: u64, kind: SpanKind, kv_bytes: u64) {
+        if !self.level.spans() {
+            return;
+        }
+        let ev = SpanEvent { id, kind, t_ms: self.now_ms(), kv_bytes };
+        let mut g = self.lock();
+        if g.ring.len() < g.cap {
+            g.ring.push(ev);
+        } else {
+            let head = g.head;
+            g.ring[head] = ev;
+        }
+        g.head = (g.head + 1) % g.cap;
+        g.total += 1;
+    }
+
+    /// Remember that engine-local `local` serves public request id `public`
+    /// (the router rewrites ids to worker-local tickets in flight).
+    pub fn note_alias(&self, local: u64, public: u64) {
+        if !self.level.spans() {
+            return;
+        }
+        let mut g = self.lock();
+        if g.aliases.len() >= ALIAS_CAP {
+            g.aliases.remove(0);
+        }
+        g.aliases.push((local, public));
+    }
+
+    fn chronological(g: &RecorderInner) -> impl Iterator<Item = &SpanEvent> {
+        // Oldest → newest: ring[head..] then ring[..head] once wrapped.
+        let start = if g.ring.len() == g.cap { g.head } else { 0 };
+        g.ring[start..].iter().chain(g.ring[..start].iter())
+    }
+
+    /// All retained spans for a request id, oldest first. The id is tried
+    /// directly first, then through the alias table (public → local), so
+    /// both wire-level and engine-local ids resolve.
+    pub fn spans_for(&self, id: u64) -> Vec<SpanEvent> {
+        let g = self.lock();
+        let direct: Vec<SpanEvent> =
+            Self::chronological(&g).filter(|e| e.id == id).copied().collect();
+        if !direct.is_empty() {
+            return direct;
+        }
+        // Newest alias wins (tickets recycle public ids across retries).
+        let Some(&(local, _)) = g.aliases.iter().rev().find(|(_, p)| *p == id) else {
+            return Vec::new();
+        };
+        Self::chronological(&g).filter(|e| e.id == local).copied().collect()
+    }
+
+    /// The most recent `n` spans, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<SpanEvent> {
+        let g = self.lock();
+        let all: Vec<SpanEvent> = Self::chronological(&g).copied().collect();
+        let skip = all.len().saturating_sub(n);
+        all[skip..].to_vec()
+    }
+
+    /// Answer a `{"trace": <id>}` query.
+    pub fn trace_json(&self, id: u64) -> Json {
+        let spans = self.spans_for(id);
+        Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("found", Json::Bool(!spans.is_empty())),
+            ("spans", Json::Arr(spans.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    /// Build a structured crash report from the ring (entire retained
+    /// history, oldest first), remember it as `last_dump`, and return it.
+    /// Called on worker death, `WorkerError`, and retry-budget exhaustion.
+    pub fn dump(&self, reason: &str) -> Json {
+        let report = {
+            let g = self.lock();
+            let spans: Vec<Json> = Self::chronological(&g).map(|s| s.to_json()).collect();
+            let aliases: Vec<Json> = g
+                .aliases
+                .iter()
+                .map(|(l, p)| {
+                    Json::obj(vec![
+                        ("local", Json::num(*l as f64)),
+                        ("public", Json::num(*p as f64)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("flight_recorder", Json::Bool(true)),
+                ("reason", Json::str(reason)),
+                ("t_ms", Json::num(self.epoch.elapsed().as_secs_f64() * 1e3)),
+                ("events_total", Json::num(g.total as f64)),
+                ("spans", Json::Arr(spans)),
+                ("aliases", Json::Arr(aliases)),
+            ])
+        };
+        self.lock().last_dump = Some(report.clone());
+        report
+    }
+
+    /// The most recent crash dump, if any worker fault fired one.
+    pub fn last_dump(&self) -> Option<Json> {
+        self.lock().last_dump.clone()
+    }
+
+    /// Events ever recorded (not bounded by the ring).
+    pub fn total(&self) -> u64 {
+        self.lock().total
+    }
+}
+
+/// A timed section of `Engine::step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepPhase {
+    /// Lifecycle sweep + queue/suspended admission (prefill included).
+    Admission = 0,
+    /// KV gather into the decode scratch (resident appends or full refills).
+    Gather = 1,
+    /// The batched backend decode call itself.
+    Model = 2,
+    /// Speculative verification micro-steps (zero outside spec mode; its
+    /// inner gathers/decodes also accumulate into `Gather` / `Model`).
+    Verify = 3,
+    /// Per-layer cache re-compression after token appends (the 2D
+    /// eviction work).
+    Evict = 4,
+    /// Token append + sampling + event emission, minus the evict section.
+    Commit = 5,
+}
+
+pub const STEP_PHASES: [StepPhase; 6] = [
+    StepPhase::Admission,
+    StepPhase::Gather,
+    StepPhase::Model,
+    StepPhase::Verify,
+    StepPhase::Evict,
+    StepPhase::Commit,
+];
+
+impl StepPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepPhase::Admission => "admission",
+            StepPhase::Gather => "gather",
+            StepPhase::Model => "model",
+            StepPhase::Verify => "verify",
+            StepPhase::Evict => "evict",
+            StepPhase::Commit => "commit",
+        }
+    }
+}
+
+/// Per-phase seconds-per-step histograms (engine-owned, recorded at
+/// `TraceLevel::Full`).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimers {
+    hists: [Histogram; 6],
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record seconds spent in `phase` during one step.
+    pub fn record(&mut self, phase: StepPhase, secs: f64) {
+        self.hists[phase as usize].record(secs);
+    }
+
+    pub fn summaries(&mut self) -> Vec<(&'static str, HistogramSummary)> {
+        STEP_PHASES
+            .iter()
+            .map(|p| (p.name(), self.hists[*p as usize].summary()))
+            .collect()
+    }
+
+    pub fn to_json(&mut self) -> Json {
+        Json::Obj(
+            self.summaries().into_iter().map(|(n, s)| (n.to_string(), s.to_json())).collect(),
+        )
+    }
+}
+
+/// One step's phase durations, accumulated with plain adds and flushed into
+/// [`PhaseTimers`] once per step (so a phase touched many times per step —
+/// e.g. commit, once per slot — still costs one histogram record).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseAcc {
+    secs: [f64; 6],
+}
+
+impl PhaseAcc {
+    pub fn add(&mut self, phase: StepPhase, secs: f64) {
+        self.secs[phase as usize] += secs;
+    }
+
+    /// Flush nonzero phase totals into the histograms and reset.
+    pub fn flush_into(&mut self, timers: &mut PhaseTimers) {
+        for p in STEP_PHASES {
+            let s = self.secs[p as usize];
+            if s > 0.0 {
+                timers.record(p, s);
+            }
+        }
+        self.secs = [0.0; 6];
+    }
+}
+
+/// Cumulative per-layer eviction activity — with each active sequence's
+/// `BudgetPlan` this is the layer-indexed squeeze table the
+/// `{"metrics_prom": true}` exposition and `Engine::squeeze_table_json`
+/// export.
+#[derive(Debug, Clone, Default)]
+pub struct LayerTable {
+    evicted_rows: Vec<u64>,
+    evicted_bytes: Vec<u64>,
+}
+
+impl LayerTable {
+    pub fn new(n_layer: usize) -> Self {
+        Self { evicted_rows: vec![0; n_layer], evicted_bytes: vec![0; n_layer] }
+    }
+
+    pub fn n_layer(&self) -> usize {
+        self.evicted_rows.len()
+    }
+
+    /// Account `rows` KV rows (`bytes` bytes) evicted from `layer`.
+    pub fn note_eviction(&mut self, layer: usize, rows: u64, bytes: u64) {
+        if layer < self.evicted_rows.len() {
+            self.evicted_rows[layer] += rows;
+            self.evicted_bytes[layer] += bytes;
+        }
+    }
+
+    pub fn evicted_rows(&self) -> &[u64] {
+        &self.evicted_rows
+    }
+
+    pub fn evicted_bytes(&self) -> &[u64] {
+        &self.evicted_bytes
+    }
+
+    /// Layer-indexed array of `{layer, evicted_rows, evicted_bytes}`.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            (0..self.evicted_rows.len())
+                .map(|l| {
+                    Json::obj(vec![
+                        ("layer", Json::num(l as f64)),
+                        ("evicted_rows", Json::num(self.evicted_rows[l] as f64)),
+                        ("evicted_bytes", Json::num(self.evicted_bytes[l] as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_roundtrip() {
+        for l in [TraceLevel::Off, TraceLevel::Spans, TraceLevel::Full] {
+            assert_eq!(TraceLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(TraceLevel::parse("bogus"), None);
+        assert!(!TraceLevel::Off.spans());
+        assert!(TraceLevel::Spans.spans());
+        assert!(!TraceLevel::Spans.full());
+        assert!(TraceLevel::Full.full());
+    }
+
+    #[test]
+    fn off_records_nothing() {
+        let r = FlightRecorder::with_level(TraceLevel::Off);
+        r.record(1, SpanKind::Submit, 0);
+        r.note_alias(1, 99);
+        assert_eq!(r.total(), 0);
+        assert!(r.spans_for(1).is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let r = FlightRecorder::new(TraceLevel::Spans, 4);
+        for i in 0..10u64 {
+            r.record(i, SpanKind::Submit, i);
+        }
+        assert_eq!(r.total(), 10);
+        let recent = r.recent(100);
+        assert_eq!(recent.len(), 4);
+        let ids: Vec<u64> = recent.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        // timestamps monotone non-decreasing in chronological order
+        for w in recent.windows(2) {
+            assert!(w[0].t_ms <= w[1].t_ms);
+        }
+    }
+
+    #[test]
+    fn spans_for_filters_and_orders() {
+        let r = FlightRecorder::new(TraceLevel::Spans, 64);
+        r.record(7, SpanKind::Submit, 0);
+        r.record(8, SpanKind::Submit, 0);
+        r.record(7, SpanKind::Admit, 100);
+        r.record(7, SpanKind::Retire, 100);
+        let spans = r.spans_for(7);
+        let kinds: Vec<&str> = spans.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(kinds, vec!["submit", "admit", "retire"]);
+        assert_eq!(spans[1].kv_bytes, 100);
+    }
+
+    #[test]
+    fn alias_resolves_public_ids() {
+        let r = FlightRecorder::new(TraceLevel::Spans, 64);
+        // engine records under local ticket 3; the wire knows id 42
+        r.note_alias(3, 42);
+        r.record(3, SpanKind::Submit, 0);
+        r.record(3, SpanKind::Retire, 0);
+        assert_eq!(r.spans_for(42).len(), 2);
+        let j = r.trace_json(42);
+        assert_eq!(j.get("found").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("spans").unwrap().as_arr().unwrap().len(), 2);
+        let miss = r.trace_json(41);
+        assert_eq!(miss.get("found").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn dump_is_structured_and_remembered() {
+        let r = FlightRecorder::new(TraceLevel::Spans, 8);
+        r.record(1, SpanKind::Submit, 0);
+        r.record(1, SpanKind::Retire, 64);
+        assert!(r.last_dump().is_none());
+        let d = r.dump("worker_death");
+        assert_eq!(d.get("reason").unwrap().as_str(), Some("worker_death"));
+        assert_eq!(d.get("spans").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(r.last_dump().unwrap(), d);
+        // the dump is line-serializable JSON
+        assert!(Json::parse(&d.to_string()).is_ok());
+    }
+
+    #[test]
+    fn phase_timers_accumulate_per_step() {
+        let mut acc = PhaseAcc::default();
+        let mut timers = PhaseTimers::new();
+        acc.add(StepPhase::Gather, 0.25);
+        acc.add(StepPhase::Commit, 0.5);
+        acc.add(StepPhase::Commit, 0.5);
+        acc.flush_into(&mut timers);
+        let sums = timers.summaries();
+        let get = |name: &str| sums.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert_eq!(get("gather").count, 1);
+        assert!((get("commit").mean - 1.0).abs() < 1e-12);
+        assert_eq!(get("model").count, 0);
+        // flushed: a second flush records nothing
+        acc.flush_into(&mut timers);
+        assert_eq!(timers.summaries().iter().find(|(n, _)| *n == "gather").unwrap().1.count, 1);
+    }
+
+    #[test]
+    fn layer_table_accumulates() {
+        let mut t = LayerTable::new(3);
+        t.note_eviction(0, 4, 1024);
+        t.note_eviction(0, 1, 256);
+        t.note_eviction(2, 2, 512);
+        t.note_eviction(9, 1, 1); // out of range: ignored, not a panic
+        assert_eq!(t.evicted_rows(), &[5, 0, 2]);
+        let j = t.to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].get("evicted_bytes").unwrap().as_usize(), Some(1280));
+        assert_eq!(rows[2].get("layer").unwrap().as_usize(), Some(2));
+    }
+}

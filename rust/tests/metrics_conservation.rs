@@ -1,0 +1,236 @@
+//! Metrics conservation + schema stability.
+//!
+//! The conservation identity under test: every submission is accounted for
+//! exactly once at all times —
+//!
+//! ```text
+//! submitted == completed + cancelled + deadline_exceeded + oom_failures
+//!            + requests_failed + rejected + in_flight
+//! ```
+//!
+//! where `in_flight = queued + running + suspended`. The identity must hold
+//! *mid-drain* (not just at rest) across arbitrary interleavings of
+//! submission bursts, queue-cap rejections, cancels, zero deadlines,
+//! injected step faults (retry and retry-exhaustion paths), and
+//! suspend/resume churn.
+//!
+//! The schema test pins `SchedulerMetrics::to_json`'s key set: renaming or
+//! dropping a counter silently breaks the Prometheus exposition (scrapers
+//! alert on series that stop existing), so it must fail a test instead.
+
+use std::time::{Duration, Instant};
+
+use squeezeattention::config::ServeConfig;
+use squeezeattention::coordinator::{
+    Engine, FinishReason, Request, RequestHandle, RequestOutput, RoutePolicy, Router,
+};
+use squeezeattention::metrics::SchedulerMetrics;
+use squeezeattention::util::Json;
+use squeezeattention::workload::{Task, TaskGen};
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig::new("sim://tiny").with_budget(48).with_squeeze(false)
+}
+
+/// Assert the conservation identity right now (mid-drain or at rest).
+fn assert_conserved(eng: &Engine, ctx: &str) {
+    let m = eng.sched_metrics();
+    let retired = m.completed
+        + m.cancelled
+        + m.deadline_exceeded
+        + m.oom_failures
+        + m.requests_failed
+        + m.rejected;
+    assert_eq!(
+        m.submitted,
+        retired + eng.in_flight() as u64,
+        "conservation identity broken {ctx}: submitted={} retired={} in_flight={}",
+        m.submitted,
+        retired,
+        eng.in_flight()
+    );
+}
+
+#[test]
+fn submitted_requests_are_conserved_across_chaos_interleavings() {
+    for (seed, rate) in [(3u64, 0.0), (11, 0.15), (17, 0.35)] {
+        let mut cfg = base_cfg().with_host_spill(4 * 1024 * 1024);
+        cfg.queue_depth = 4; // small cap: the burst below must shed
+        cfg.max_batch = 2; // small batch: admission stays contended
+        cfg.max_retries = 1; // rate 0.35 should exhaust some budgets
+        cfg.faults.step_error_rate = rate;
+        cfg.faults.seed = seed;
+        let mut eng = Engine::new(cfg).unwrap();
+        let mut gen = TaskGen::new(seed);
+        let mut handles: Vec<Option<RequestHandle>> = Vec::new();
+        let mut outs: Vec<RequestOutput> = Vec::new();
+        let mut rejected_at_submit = 0u64;
+
+        for i in 0..16u64 {
+            let mut req = Request::new(i, gen.sample(Task::Copy, 24).prompt, 12);
+            if i % 5 == 3 {
+                // Expires at the next lifecycle sweep (if not shed first).
+                req.deadline = Some(Duration::from_millis(0));
+            }
+            let h = RequestHandle::attach(&mut req);
+            match eng.submit(req) {
+                Ok(()) => handles.push(Some(h)),
+                Err(out) => {
+                    assert_eq!(out.finish, FinishReason::Rejected, "queue-cap reject expected");
+                    rejected_at_submit += 1;
+                    outs.push(out);
+                    handles.push(None);
+                }
+            }
+            assert_conserved(&eng, &format!("after submit {i} (rate {rate})"));
+            // No steps during the first 8 submissions: with queue_depth=4
+            // the burst deterministically overflows the queue.
+            if i >= 8 && i % 2 == 0 {
+                outs.extend(eng.step().unwrap());
+                assert_conserved(&eng, &format!("mid-drain after submit {i} (rate {rate})"));
+            }
+            if i == 10 {
+                // Cancel churn mid-flight (some victims may already have
+                // retired or been rejected — both must stay conserved).
+                for j in [1usize, 6] {
+                    if let Some(h) = &handles[j] {
+                        h.cancel();
+                    }
+                }
+            }
+        }
+        assert!(rejected_at_submit >= 1, "burst over queue_depth=4 never shed (rate {rate})");
+
+        let mut steps = 0;
+        while eng.has_work() {
+            outs.extend(eng.step().unwrap());
+            assert_conserved(&eng, &format!("mid-drain step {steps} (rate {rate})"));
+            steps += 1;
+            assert!(steps < 100_000, "engine did not drain at rate {rate}");
+        }
+
+        let m = eng.sched_metrics();
+        assert_eq!(m.submitted, 16, "every submit() call counts once (rate {rate})");
+        assert_eq!(outs.len(), 16, "terminal outputs lost or duplicated (rate {rate})");
+        assert_eq!(eng.in_flight(), 0);
+        assert_eq!(m.rejected, rejected_at_submit, "rejected counter diverged (rate {rate})");
+        assert_conserved(&eng, &format!("at rest (rate {rate})"));
+        if rate >= 0.35 {
+            assert!(m.faults_injected > 0, "rate {rate} never injected a fault");
+        }
+    }
+}
+
+#[test]
+fn scheduler_metrics_json_schema_is_stable() {
+    let j = SchedulerMetrics::default().to_json();
+    let Json::Obj(map) = &j else { panic!("SchedulerMetrics::to_json must be an object") };
+    let keys: Vec<&str> = map.keys().map(|s| s.as_str()).collect();
+    let mut expected = vec![
+        "slots",
+        "queue_depth",
+        "queue_peak",
+        "running",
+        "peak_occupancy",
+        "steps",
+        "mean_occupancy",
+        "submitted",
+        "admitted",
+        "deferred_admissions",
+        "preemptions",
+        "suspended",
+        "swap_outs",
+        "swap_ins",
+        "restarts_avoided",
+        "host_bytes_peak",
+        "pages_swapped_out",
+        "pages_swapped_in",
+        "kv_alloc_bytes",
+        "kv_used_bytes",
+        "host_alloc_bytes",
+        "host_used_bytes",
+        "shared_pages",
+        "cow_copies",
+        "accounting_errors",
+        "completed",
+        "rejected",
+        "oom_failures",
+        "cancelled",
+        "deadline_exceeded",
+        "spec_steps",
+        "spec_drafted",
+        "spec_accepted",
+        "spec_rollback_tokens",
+        "spec_acceptance_rate",
+        "spec_accepted_per_step",
+        "spec_rollback_depth",
+        "kv_bytes_copied",
+        "gather_full_refills",
+        "gather_incremental_appends",
+        "scratch_retained_bytes",
+        "scratch_tiers_evicted",
+        "worker_errors",
+        "requests_retried",
+        "requests_failed",
+        "requests_shed",
+        "faults_injected",
+        "worker_restarts",
+    ];
+    // Json objects are BTreeMaps, so compare as sorted sets: a rename shows
+    // up as one key vanishing and another appearing.
+    expected.sort_unstable();
+    assert_eq!(
+        keys, expected,
+        "SchedulerMetrics::to_json key set changed — renames/drops break \
+         Prometheus scrapers; update this snapshot only for deliberate \
+         schema changes"
+    );
+}
+
+#[test]
+fn killed_worker_leaves_flight_dump_with_victim_spans() {
+    let mut cfg = base_cfg();
+    cfg.max_worker_restarts = 1;
+    // Slow every decode call so the victim is reliably mid-decode.
+    cfg.faults.latency_spike_ms = 2;
+    cfg.faults.latency_spike_rate = 1.0;
+    let router = Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap();
+    let mut gen = TaskGen::new(51);
+    let handle =
+        router.submit_async(Request::new(77, gen.sample(Task::Copy, 40).prompt, 400)).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(router.kill_worker(0), "worker queue refused the poison job");
+    let out = handle.recv().expect("caller hung on a dead worker");
+    assert_eq!(out.finish, FinishReason::WorkerError);
+
+    // The death protocol must leave a structured crash dump behind.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let dump = loop {
+        if let Some(d) = router.last_flight_dump(0) {
+            break d;
+        }
+        assert!(Instant::now() < deadline, "no flight dump after worker death");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(dump.get("flight_recorder").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(dump.get("reason").and_then(|v| v.as_str()), Some("worker_death"));
+    let spans = dump.get("spans").unwrap().as_arr().unwrap();
+    assert!(!spans.is_empty(), "crash dump carries no spans");
+
+    // The victim's spans are in the dump, recorded under its worker-local
+    // ticket; the alias table maps the public id (77) to that ticket.
+    let aliases = dump.get("aliases").unwrap().as_arr().unwrap();
+    let local = aliases
+        .iter()
+        .find(|a| a.get("public").and_then(|v| v.as_usize()) == Some(77))
+        .and_then(|a| a.get("local").and_then(|v| v.as_f64()))
+        .expect("victim id missing from the dump's alias table");
+    assert!(
+        spans.iter().any(|s| s.get("id").and_then(|v| v.as_f64()) == Some(local)),
+        "victim's spans missing from the crash dump"
+    );
+    // The live trace query resolves the public id through the same table.
+    let t = router.trace_json(77);
+    assert_eq!(t.get("found").and_then(|v| v.as_bool()), Some(true));
+    assert!(!t.get("spans").unwrap().as_arr().unwrap().is_empty());
+}

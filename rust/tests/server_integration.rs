@@ -57,6 +57,91 @@ fn tcp_roundtrip() {
 }
 
 #[test]
+fn metrics_prom_and_trace_answer_over_live_socket() {
+    let mut cfg = ServeConfig::new(ARTIFACTS).with_budget(48);
+    // Slow every decode call so the request is observably in flight.
+    cfg.faults.latency_spike_ms = 2;
+    cfg.faults.latency_spike_rate = 1.0;
+    let router = std::sync::Arc::new(Router::spawn(cfg, 1, RoutePolicy::RoundRobin).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let _ = server::serve(listener, router);
+    });
+
+    let mut gen = TaskGen::new(9);
+    let prompt: Vec<String> =
+        gen.sample(Task::Copy, 40).prompt.iter().map(|t| t.to_string()).collect();
+
+    // Connection A: one long-running request.
+    let stream_a = TcpStream::connect(addr).unwrap();
+    let mut writer_a = stream_a.try_clone().unwrap();
+    let mut reader_a = BufReader::new(stream_a);
+    writeln!(writer_a, "{{\"id\": 1, \"prompt\": [{}], \"max_new_tokens\": 200}}", prompt.join(","))
+        .unwrap();
+
+    // Connection B: control lines, polled while A decodes.
+    let stream_b = TcpStream::connect(addr).unwrap();
+    let mut writer_b = stream_b.try_clone().unwrap();
+    let mut reader_b = BufReader::new(stream_b);
+    let mut query = |line: &str| -> Json {
+        writeln!(writer_b, "{line}").unwrap();
+        let mut buf = String::new();
+        reader_b.read_line(&mut buf).unwrap();
+        Json::parse(&buf).unwrap()
+    };
+
+    // Poll until the worker snapshot shows the active sequence's squeeze
+    // table (stamped after each engine step), then check the budget
+    // identity: per-sequence budgets sum to the sequence's plan total.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let seqs = loop {
+        let m = query("{\"metrics\": true}");
+        let w0 = &m.get("workers").unwrap().as_arr().unwrap()[0];
+        let seqs = w0.get("squeeze").and_then(|s| s.get("sequences")).and_then(|s| s.as_arr());
+        if let Some(seqs) = seqs {
+            if !seqs.is_empty() {
+                break seqs.to_vec();
+            }
+        }
+        assert!(std::time::Instant::now() < deadline, "squeeze table never showed a sequence");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    };
+    for sq in &seqs {
+        let total = sq.get("total_budget").unwrap().as_f64().unwrap();
+        let budgets = sq.get("budgets").unwrap().as_arr().unwrap();
+        let sum: f64 = budgets.iter().map(|b| b.as_f64().unwrap()).sum();
+        assert_eq!(sum, total, "per-layer budgets do not sum to the plan total");
+        assert!(!budgets.is_empty());
+    }
+
+    // Prometheus exposition: one wire line wrapping well-formed text 0.0.4.
+    let prom = query("{\"metrics_prom\": true}");
+    assert_eq!(prom.get("content_type").unwrap().as_str(), Some("text/plain; version=0.0.4"));
+    let body = prom.get("body").unwrap().as_str().unwrap().to_string();
+    assert!(
+        squeezeattention::metrics::is_well_formed_prometheus(&body),
+        "metrics_prom body is not valid Prometheus exposition:\n{body}"
+    );
+    for series in ["sa_sched_submitted", "sa_worker_up", "sa_layer_budget_rows", "sa_inflight"] {
+        assert!(body.contains(series), "exposition missing series {series}:\n{body}");
+    }
+
+    // Drain the request, then its trace must resolve by public id.
+    let mut line = String::new();
+    reader_a.read_line(&mut line).unwrap();
+    let out = Json::parse(&line).unwrap();
+    assert_eq!(out.get("id").unwrap().as_usize(), Some(1));
+    let t = query("{\"trace\": 1}");
+    assert_eq!(t.get("found").and_then(|v| v.as_bool()), Some(true), "trace 1 not found: {t}");
+    assert!(!t.get("spans").unwrap().as_arr().unwrap().is_empty());
+
+    // Unknown worker index: flight_dump answers found=false, not an error.
+    let fd = query("{\"flight_dump\": 0}");
+    assert!(fd.get("found").is_some() || fd.get("flight_recorder").is_some());
+}
+
+#[test]
 fn batch_wait_joins_delayed_arrival_into_same_step() {
     // With batch_wait_ms, a worker forming a batch from idle holds its
     // first decode step until more arrivals show up (or the deadline
